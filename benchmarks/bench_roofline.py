@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run cache (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun_cells.jsonl (produced by
+``python -m repro.launch.dryrun --all [--multi-pod]``) and prints the
+three-term table; derived column = roofline MFU upper bound.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+CACHE = os.path.join(os.path.dirname(__file__), "results",
+                     "dryrun_cells.jsonl")
+
+
+def load_rows(mesh: str = "16x16"):
+    rows = []
+    if not os.path.exists(CACHE):
+        return rows
+    seen = {}
+    with open(CACHE) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("skipped") or r.get("mesh") != mesh:
+                continue
+            seen[(r["arch"], r["shape"])] = r   # last write wins
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    return sorted(seen.values(),
+                  key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+
+
+def main(csv: bool = False):
+    from repro.roofline.analysis import table
+    rows = load_rows()
+    if not rows:
+        print("no dry-run cache; run: python -m repro.launch.dryrun --all")
+        return [("roofline_cells", 0.0, 0)]
+    if not csv:
+        print(table(rows))
+        mp = load_rows("2x16x16")
+        print(f"\nsingle-pod cells: {len(rows)}; "
+              f"multi-pod (2x16x16) cells compiled: {len(mp)}")
+    return [(f"roofline_{r['arch']}_{r['shape']}",
+             max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+             round(r["mfu_upper_bound"], 4)) for r in rows]
+
+
+if __name__ == "__main__":
+    main()

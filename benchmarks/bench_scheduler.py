@@ -1,0 +1,114 @@
+"""Scheduler tables beyond Figure 3:
+
+* strategy comparison (cost / time / conservative) on one workload —
+  the paper §3 trade-off as a table;
+* control-plane scalability: events/second and wall time as the grid
+  grows to 1000+ resources and 10k jobs (large-scale runnability of the
+  scheduling layer itself);
+* fault-tolerance accounting under an unreliable grid.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (Dispatcher, NimrodG, PriceSchedule,
+                        ResourceDirectory, SchedulerConfig,
+                        SimulatedExecutor, Simulator, TradeServer,
+                        UserRequirements, gusto_like_testbed, parse_plan)
+
+HOUR = 3600.0
+
+
+def _plan(n_jobs: int):
+    return parse_plan(f"""
+parameter i integer range from 1 to {n_jobs} step 1
+task main
+    execute run --i $i
+endtask
+""")
+
+
+def _engine(n_jobs, n_machines, deadline_h, strategy, budget=1e9, seed=0,
+            est=1800.0, mtbf_scale=1.0):
+    directory = ResourceDirectory()
+    for spec in gusto_like_testbed(n_machines, seed=1):
+        if mtbf_scale != 1.0:
+            import dataclasses
+            spec = dataclasses.replace(
+                spec, mtbf_hours=spec.mtbf_hours * mtbf_scale)
+        directory.register(spec)
+    schedules = {n: PriceSchedule(directory.spec(n))
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, directory, seed=seed)
+    disp = Dispatcher(ex, directory)
+    req = UserRequirements(deadline=deadline_h * HOUR, budget=budget,
+                           strategy=strategy)
+    return NimrodG.from_plan("bench", _plan(n_jobs), req, directory, trade,
+                             disp, est_seconds=lambda p: est, sim=sim,
+                             seed=seed)
+
+
+def strategy_table(csv: bool = False):
+    out = []
+    for strat in ("cost", "time", "conservative"):
+        t0 = time.time()
+        rep = _engine(165, 70, 15, strat, budget=30_000).run_simulated()
+        out.append((strat, rep, time.time() - t0))
+    if not csv:
+        print("strategy       done  completion_h  cost_G$  peak_res  met")
+        for strat, rep, _ in out:
+            print(f"{strat:13s} {rep.n_done:5d} "
+                  f"{rep.completion_time / HOUR:12.2f} "
+                  f"{rep.total_cost:8.1f} {rep.peak_allocation:9d}  "
+                  f"{rep.met_deadline}")
+    return [(f"strategy_{s}", dt * 1e6, rep.total_cost)
+            for s, rep, dt in out]
+
+
+def scale_table(csv: bool = False):
+    rows = []
+    for n_machines, n_jobs in ((70, 165), (300, 2000), (1000, 10000)):
+        t0 = time.time()
+        eng = _engine(n_jobs, n_machines, 24, "cost", est=600.0,
+                      mtbf_scale=10.0)
+        rep = eng.run_simulated()
+        wall = time.time() - t0
+        n_events = rep.n_done + rep.requeues + rep.duplicates_launched
+        rows.append((n_machines, n_jobs, rep, wall,
+                     n_events / max(wall, 1e-9)))
+    if not csv:
+        print("machines  jobs    done    wall_s  jobs/sec_sim  met")
+        for m, j, rep, wall, eps in rows:
+            print(f"{m:8d} {j:6d} {rep.n_done:6d} {wall:9.2f} "
+                  f"{rep.n_done / max(wall, 1e-9):12.0f}  {rep.met_deadline}")
+    return [(f"scale_{m}m_{j}j", wall * 1e6, rep.n_done)
+            for m, j, rep, wall, _ in rows]
+
+
+def fault_table(csv: bool = False):
+    rows = []
+    for mtbf_scale, label in ((1.0, "normal"), (0.05, "hostile")):
+        t0 = time.time()
+        eng = _engine(200, 40, 30, "time", est=1800.0,
+                      mtbf_scale=mtbf_scale)
+        eng.cfg = SchedulerConfig(max_attempts=50)
+        rep = eng.run_simulated()
+        rows.append((label, rep, time.time() - t0))
+    if not csv:
+        print("grid      done  requeues  duplicates  completion_h")
+        for label, rep, _ in rows:
+            print(f"{label:8s} {rep.n_done:5d} {rep.requeues:9d} "
+                  f"{rep.duplicates_launched:11d} "
+                  f"{rep.completion_time / HOUR:12.2f}")
+    return [(f"fault_{label}", dt * 1e6, rep.requeues)
+            for label, rep, dt in rows]
+
+
+def main(csv: bool = False):
+    return strategy_table(csv) + scale_table(csv) + fault_table(csv)
+
+
+if __name__ == "__main__":
+    main()

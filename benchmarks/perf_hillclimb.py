@@ -1,0 +1,124 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> record.
+
+Each experiment = (cell, sequence of config overrides).  Every variant is
+lowered+compiled on the production mesh and its roofline terms recorded to
+benchmarks/results/perf_iterations.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--cell A|B|C]
+"""
+import argparse
+import json
+import time
+
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import run_cell
+
+LOG = "benchmarks/results/perf_iterations.jsonl"
+
+# (name, arch, shape, [(variant, hypothesis, {overrides})...])
+EXPERIMENTS = {
+    "A": ("llava-next-34b", "train_4k", [
+        ("baseline", "paper-faithful generic TP/FSDP; 56 heads % 16 != 0 "
+         "forces attention replication over the model axis", {}),
+        ("A1_seq_shard", "context parallelism (seq over model) removes the "
+         "16x replicated attention/MLP compute; predict compute ~/10, "
+         "memory ~/8", {"seq_shard": True}),
+        ("A2_+bf16_params", "cast fp32 masters to bf16 pre-forward: FSDP "
+         "all-gather + weight-read bytes halve; predict collective ~-40%, "
+         "memory -20%", {"seq_shard": True, "cast_params_bf16": True}),
+        ("A3_+chunked_ce", "never materialize (B,S,V) logits; predict "
+         "memory term -10-20% more", {"seq_shard": True,
+                                      "cast_params_bf16": True,
+                                      "chunked_ce": True}),
+    ]),
+    "B": ("kimi-k2-1t-a32b", "decode_32k", [
+        ("baseline", "weight-gathered EP: every decode step all-gathers "
+         "E_loc*d*f expert weights over 'data' per layer -> collective-"
+         "bound", {}),
+        ("B1_ep_a2a", "token-routed EP (all-to-all over 'data', expert-FFN "
+         "over 'model'): tokens move (k*d B each) instead of 2.1GB/layer "
+         "weights; predict collective 7.8s -> <0.5s", {"moe_impl": "ep_a2a"}),
+        ("B2_+chunked_ce", "decode computes full-vocab logits for 128 rows; "
+         "chunking is free insurance (minor)", {"moe_impl": "ep_a2a",
+                                                "chunked_ce": False,
+                                                "cast_params_bf16": False,
+                                                "seq_shard": False}),
+    ]),
+    "C": ("gemma3-27b", "train_4k", [
+        ("baseline", "paper-faithful: fp32 masters gathered per layer; full "
+         "remat; monolithic CE", {}),
+        ("C1_bf16_params", "bf16 compute params: gather/read bytes halve; "
+         "predict collective 16.1s -> ~8.5s, memory -20%",
+         {"cast_params_bf16": True}),
+        ("C2_+chunked_ce", "chunked CE removes the 4.3GB fp32 logits "
+         "region (several passes); predict memory -10%",
+         {"cast_params_bf16": True, "chunked_ce": True}),
+        ("C3_+remat_dots", "save batch-free dots instead of full remat: "
+         "fewer recomputed matmuls; predict compute -20%, memory may rise",
+         {"cast_params_bf16": True, "chunked_ce": True, "remat": "dots"}),
+        ("C4_bf16_masters", "C1 failed because XLA gathers f32 then casts; "
+         "store masters in bf16 (fp32 Adam moments retain update "
+         "precision): gathers+reads halve BY CONSTRUCTION; predict "
+         "memory -25%, collective -40%", {"param_dtype": "bfloat16"}),
+        ("C5_+seq_shard", "gemma3-27b heads=32 shard fine, but seq-sharding "
+         "may still cut activation traffic on top of C4",
+         {"param_dtype": "bfloat16", "seq_shard": True}),
+        ("C6_+remat_dots", "with memory no longer dominant (C5), trade the "
+         "full-remat recompute for saved dots: predict compute -20%, "
+         "collective unchanged, net win if memory stays under collective",
+         {"param_dtype": "bfloat16", "seq_shard": True, "remat": "dots"}),
+    ]),
+}
+
+
+def run_experiment(key: str):
+    arch, shape_name, variants = EXPERIMENTS[key]
+    shape = get_shape(shape_name)
+    print(f"\n======== cell {key}: {arch} x {shape_name} ========")
+    rows = []
+    for name, hypothesis, overrides in variants:
+        cfg = get_config(arch)
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        t0 = time.time()
+        row = run_cell(arch, shape, multi_pod=False, verbose=False,
+                       cfg_override=cfg)
+        row.update({"experiment": key, "variant": name,
+                    "hypothesis": hypothesis, "overrides": overrides,
+                    "wall_s": round(time.time() - t0, 1)})
+        rows.append(row)
+        dom = max(row["t_compute_s"], row["t_memory_s"],
+                  row["t_collective_s"])
+        print(f"{name:18s} compute={row['t_compute_s']:8.3f}s "
+              f"memory={row['t_memory_s']:8.3f}s "
+              f"collective={row['t_collective_s']:8.3f}s "
+              f"bottleneck={row['bottleneck']:10s} "
+              f"MFU_ub={row['mfu_upper_bound']:6.2%} step_lb={dom:8.3f}s",
+              flush=True)
+        with open(LOG, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    base = max(rows[0]["t_compute_s"], rows[0]["t_memory_s"],
+               rows[0]["t_collective_s"])
+    best = min(max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+               for r in rows)
+    print(f"cell {key}: step-time lower bound {base:.3f}s -> {best:.3f}s "
+          f"({base / best:.2f}x)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(EXPERIMENTS))
+    args = ap.parse_args()
+    os.makedirs("benchmarks/results", exist_ok=True)
+    keys = [args.cell] if args.cell else list(EXPERIMENTS)
+    for k in keys:
+        run_experiment(k)
+
+
+if __name__ == "__main__":
+    main()

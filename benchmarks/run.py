@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus human-readable tables
+before the CSV block).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    results = []
+    failures = []
+    from benchmarks import (bench_figure3, bench_kernels, bench_roofline,
+                            bench_scheduler)
+    mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
+            ("scheduler tables (strategies / scale / faults)",
+             bench_scheduler),
+            ("kernels (pallas vs oracle)", bench_kernels),
+            ("roofline (dry-run 3-term table)", bench_roofline)]
+    # moe crossover needs 512 placeholder devices; include only when the
+    # process was launched with the dry-run XLA flag
+    import jax
+    if jax.device_count() >= 512:
+        from benchmarks import bench_moe_crossover
+        mods.append(("MoE EP crossover (weight-gathered vs token-routed)",
+                     bench_moe_crossover))
+    for title, mod in mods:
+        print(f"\n===== {title} =====")
+        try:
+            results.extend(mod.main())
+        except Exception:
+            traceback.print_exc()
+            failures.append(title)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in results:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print(f"\nFAILED sections: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (latest_step_dir, load_metadata,
+                                         restore, save)
+
+__all__ = ["latest_step_dir", "load_metadata", "restore", "save"]

@@ -1,0 +1,149 @@
+"""Sharded pytree checkpointing (npz shards + JSON manifest).
+
+Design goals (the Nimrod/G fault-tolerance contract):
+
+* atomic: writes go to ``<dir>.tmp`` then ``os.replace`` -> a crash never
+  leaves a half checkpoint visible;
+* resharding restore: arrays are saved as full logical tensors (assembled
+  host-side), so a job that died on a 16x16 mesh can resume on 8x8 —
+  restore applies whatever shardings the new mesh dictates;
+* integrity: every shard file carries a crc32 recorded in the manifest;
+* self-describing: the manifest stores the flattened key paths, shapes,
+  dtypes, and user metadata (step, config name, data position).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MANIFEST = "manifest.json"
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def save(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None) -> str:
+    """Save a pytree of arrays. Returns the final directory path."""
+    tmp = ckpt_dir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    entries = []
+    shard_idx, shard_bytes, shard_data = 0, 0, {}
+
+    def flush():
+        nonlocal shard_idx, shard_bytes, shard_data
+        if not shard_data:
+            return None
+        fn = f"shard_{shard_idx:05d}.npz"
+        np.savez(os.path.join(tmp, fn), **shard_data)
+        with open(os.path.join(tmp, fn), "rb") as f:
+            crc = zlib.crc32(f.read())
+        shard_idx += 1
+        shard_bytes = 0
+        shard_data = {}
+        return fn, crc
+
+    crcs = {}
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        shard_data[key] = arr
+        shard_bytes += arr.nbytes
+        entries.append({"key": key, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype), "shard": shard_idx})
+        if shard_bytes >= _SHARD_BYTES:
+            fn, crc = flush()
+            crcs[fn] = crc
+    r = flush()
+    if r:
+        crcs[r[0]] = r[1]
+
+    manifest = {"entries": entries, "crcs": crcs,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    os.replace(tmp, ckpt_dir)
+    return ckpt_dir
+
+
+def load_metadata(ckpt_dir: str) -> Dict:
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        return json.load(f)["metadata"]
+
+
+def restore(ckpt_dir: str, target: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (arrays or SDS).
+
+    ``shardings``: optional matching pytree of NamedShardings — arrays are
+    placed with jax.device_put per leaf (resharding restore).
+    """
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        manifest = json.load(f)
+    for fn, crc in manifest["crcs"].items():
+        with open(os.path.join(ckpt_dir, fn), "rb") as f:
+            if zlib.crc32(f.read()) != crc:
+                raise IOError(f"checkpoint shard {fn} failed crc32 check")
+
+    by_shard: Dict[int, list] = {}
+    for e in manifest["entries"]:
+        by_shard.setdefault(e["shard"], []).append(e["key"])
+    data: Dict[str, np.ndarray] = {}
+    for si, keys in by_shard.items():
+        with np.load(os.path.join(ckpt_dir, f"shard_{si:05d}.npz")) as z:
+            for k in keys:
+                data[k] = z[k]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = treedef.flatten_up_to(shardings)
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        key = _path_str(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"target {want_shape}")
+        dt = leaf.dtype
+        a = jnp.asarray(arr, dt)
+        if shard_leaves is not None:
+            a = jax.device_put(a, shard_leaves[i])
+        out.append(a)
+    return treedef.unflatten(out)
+
+
+def latest_step_dir(root: str) -> Optional[str]:
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    return os.path.join(root, max(steps, key=lambda s: int(s.split("_")[1])))

@@ -1,0 +1,12 @@
+from repro.configs.base import (LONG_CONTEXT_OK, MLACfg, ModelConfig, MoECfg,
+                                RGLRUCfg, RWKVCfg, SHAPES, ShapeCfg,
+                                shape_applicable)
+from repro.configs.registry import (ARCH_IDS, all_configs, cells, get_config,
+                                    get_shape, smoke_config, SMOKE_SHAPE)
+
+__all__ = [
+    "ARCH_IDS", "LONG_CONTEXT_OK", "MLACfg", "ModelConfig", "MoECfg",
+    "RGLRUCfg", "RWKVCfg", "SHAPES", "ShapeCfg", "SMOKE_SHAPE",
+    "all_configs", "cells", "get_config", "get_shape", "shape_applicable",
+    "smoke_config",
+]

@@ -1,0 +1,29 @@
+"""gemma3-1b — dense, 5:1 local:global, 128k (32k trained) context.
+
+[hf:google/gemma-3-1b-pt] 26L d_model=1152 4H (GQA kv=1, head_dim=256)
+d_ff=6912 (GeGLU) vocab=262144, qk-norm, window=512.
+26 = 4*6 + 2 remainder (local).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262_144,
+    layer_pattern=("local", "local", "local", "local", "local", "full"),
+    window_size=512,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    qk_norm=True,
+    sandwich_norm=True,
+    mlp="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    remat="full",
+)

@@ -1,0 +1,29 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-*-pt] 62L d_model=5376 32H (GQA kv=16, head_dim=128)
+d_ff=21504 (GeGLU) vocab=262144, qk-norm, window=1024,
+rope theta 10k local / 1M global.  62 = 10*6 + 2 remainder (local).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262_144,
+    layer_pattern=("local", "local", "local", "local", "local", "full"),
+    window_size=1024,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    qk_norm=True,
+    sandwich_norm=True,
+    mlp="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    remat="full",
+)

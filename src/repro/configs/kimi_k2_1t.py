@@ -1,0 +1,32 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table config).
+
+[arXiv:2501.kimi2] 61L d_model=7168 64H (GQA kv=8, head_dim=128),
+MoE 384 routed experts top-8 + 1 shared, expert d_ff=2048, vocab=163840,
+first layer dense (d_ff=18432).
+
+NOTE (DESIGN.md §4): the released Kimi K2 uses MLA (DeepSeek-V3
+lineage); the assignment table specifies "GQA kv=8", which we follow —
+the MLA path is exercised by deepseek-v2-236b.
+"""
+from repro.configs.base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,                 # routed-expert width
+    vocab_size=163_840,
+    layer_pattern=("full",),
+    prologue_layers=1,
+    rope_theta=50_000.0,
+    mlp="swiglu",
+    tie_embeddings=False,
+    moe=MoECfg(num_experts=384, top_k=8, d_ff_expert=2048,
+               num_shared=1, d_ff_dense=18432, first_k_dense=1),
+    param_dtype="bfloat16",
+    remat="full",
+)

@@ -1,0 +1,28 @@
+"""llava-next-34b — VLM; we build the 34B-class LM backbone only.
+
+[hf:llava-hf/llava-v1.6-*] 60L d_model=7168 56H (GQA kv=8, head_dim=128)
+d_ff=20480 (SwiGLU) vocab=64000.
+
+Per the assignment spec the vision frontend (anyres tiling + CLIP
+encoder + projector) is a STUB: ``input_specs()`` delivers precomputed
+patch/text embeddings of shape (B, S, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64_000,
+    layer_pattern=("full",),
+    rope_theta=5_000_000.0,
+    mlp="swiglu",
+    input_kind="embeddings",
+    tie_embeddings=False,
+    remat="full",
+)

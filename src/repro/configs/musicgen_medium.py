@@ -1,0 +1,29 @@
+"""musicgen-medium — decoder-only backbone over EnCodec tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=1536 24H (kv=24 -> MHA, head_dim=64)
+d_ff=6144 (GELU) vocab=2048.
+
+Per the assignment spec the modality frontend (EnCodec + codebook
+delay-pattern interleaving) is a STUB: ``input_specs()`` delivers
+precomputed frame embeddings of shape (B, S, d_model); the backbone
+predicts next-frame codes over the 2048-entry codebook vocabulary.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    layer_pattern=("full",),
+    rope_theta=10_000.0,
+    mlp="gelu",
+    input_kind="embeddings",
+    tie_embeddings=False,
+    remat="full",
+)

@@ -1,0 +1,24 @@
+"""nemotron-4-15b — dense decoder, GQA, squared-ReLU MLP (no gating).
+
+[arXiv:2402.16819] 32L d_model=6144 48H (GQA kv=8, head_dim=128)
+d_ff=24576 vocab=256000, rope (partial 50% in the paper; we keep 1.0
+full-rotary as the assignment table gives no fraction).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256_000,
+    layer_pattern=("full",),
+    rope_theta=10_000.0,
+    mlp="sq_relu",
+    tie_embeddings=False,
+    remat="full",
+)

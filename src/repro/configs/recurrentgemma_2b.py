@@ -1,0 +1,27 @@
+"""recurrentgemma-2b — Griffin-style hybrid: RG-LRU + local attention, 1:2.
+
+[arXiv:2402.19427; hf] 26L d_model=2560 10H (GQA kv=1, head_dim=256)
+d_ff=7680 (GeGLU) vocab=256000, window=2048.
+Pattern: (rglru, rglru, local) repeated; 26 = 8*3 + 2 remainder.
+"""
+from repro.configs.base import ModelConfig, RGLRUCfg
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    layer_pattern=("rglru", "rglru", "local"),
+    window_size=2048,
+    rope_theta=10_000.0,
+    mlp="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    rglru=RGLRUCfg(lru_width=2560, conv_width=4, num_blocks=10),
+    remat="full",
+)

@@ -1,0 +1,23 @@
+"""rwkv6-3b (Finch) — attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf] 32L d_model=2560 d_ff=8960 vocab=65536,
+head_dim=64 (40 wkv heads), decay LoRA 64, ddlerp mix LoRA 32.
+"""
+from repro.configs.base import ModelConfig, RWKVCfg
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,              # wkv heads = d_model / head_dim
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65_536,
+    layer_pattern=("rwkv",),
+    mlp="rwkv_cm",             # rwkv channel-mix (squared-relu k, sigmoid-r gate)
+    tie_embeddings=False,
+    rwkv=RWKVCfg(head_dim=64, decay_lora=64, mix_lora=32),
+    remat="full",
+)

@@ -1,0 +1,24 @@
+"""stablelm-1.6b — dense decoder, partial rotary (25%).
+
+[hf:stabilityai/stablelm-2-1_6b] 24L d_model=2048 32H (kv=32 -> MHA,
+head_dim=64) d_ff=5632 (SwiGLU) vocab=100352, rope_fraction=0.25.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100_352,
+    layer_pattern=("full",),
+    rope_theta=10_000.0,
+    rope_fraction=0.25,
+    mlp="swiglu",
+    tie_embeddings=False,
+    remat="full",
+)

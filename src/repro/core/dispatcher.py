@@ -1,0 +1,204 @@
+"""Dispatcher + job wrapper (paper §2).
+
+The dispatcher "initiates the execution of a task on the selected resource
+as per the scheduler's instruction [and] periodically updates the status of
+task execution to the parametric-engine".  The job wrapper "is responsible
+for staging of application tasks and data; starting execution ... and
+sending results back".
+
+Two executors implement the same contract:
+
+* ``SimulatedExecutor`` — runs the wrapper phases (stage-in, execute,
+  stage-out) in virtual time on the DES, honoring resource failures.
+* ``LocalExecutor``     — runs real Python payloads (e.g. jit'd train
+  steps) on a thread pool; used by the end-to-end examples where the
+  "grid" is this machine.
+
+Closed clusters route staging through ``StagingProxy`` (paper §4's
+master-node GASS proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.jobs import Job, JobStatus
+from repro.core.resources import ResourceDirectory
+from repro.core.simulator import Simulator, duration_model
+
+
+class StagingProxy:
+    """Master-node mediator for closed clusters: all stage traffic flows
+    through it; it counts bytes (and in the DES costs 2x time, modeled in
+    duration_model)."""
+
+    def __init__(self):
+        self.bytes_in = 0
+        self.bytes_out = 0
+        self.transfers = 0
+
+    def stage(self, n_bytes: int, inbound: bool) -> None:
+        self.transfers += 1
+        if inbound:
+            self.bytes_in += n_bytes
+        else:
+            self.bytes_out += n_bytes
+
+
+@dataclasses.dataclass
+class DispatchCallbacks:
+    on_started: Callable[[Job], None]
+    on_done: Callable[[Job, float], None]        # (job, exec_seconds)
+    on_failed: Callable[[Job, str], None]        # (job, reason)
+
+
+class SimulatedExecutor:
+    """Job-wrapper phases in virtual time, failure-aware."""
+
+    def __init__(self, sim: Simulator, directory: ResourceDirectory,
+                 seed: int = 0, noise_sigma: float = 0.15):
+        self.sim = sim
+        self.directory = directory
+        self.seed = seed
+        self.noise_sigma = noise_sigma
+        self.proxy = StagingProxy()
+        self._running: Dict[str, dict] = {}    # job_id -> {cancelled: bool}
+
+    def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
+        spec = self.directory.spec(resource)
+        st = self.directory.status(resource)
+        if not st.up or st.free_slots(spec) <= 0:
+            cb.on_failed(job, "resource unavailable at submit")
+            return
+        st.running += 1
+        token = {"cancelled": False}
+        self._running[job.job_id] = token
+        s_in, ex, s_out = duration_model(
+            spec, job.spec.est_seconds_base, job.spec.stage_in_bytes,
+            job.spec.stage_out_bytes, load=st.load,
+            noise_sigma=self.noise_sigma,
+            seed=(self.seed, job.job_id, job.attempt, resource))
+        if spec.closed:
+            self.proxy.stage(job.spec.stage_in_bytes, inbound=True)
+
+        def _fail_if_down(phase_next: Callable[[], None], reason: str):
+            def wrapped():
+                if token["cancelled"]:
+                    self._finish(job, spec.name)
+                    return
+                if not self.directory.status(resource).up:
+                    self._finish(job, spec.name)
+                    cb.on_failed(job, reason)
+                    return
+                phase_next()
+            return wrapped
+
+        def start_exec():
+            cb.on_started(job)
+            self.sim.after(ex, _fail_if_down(do_stage_out,
+                                             "resource failed during run"))
+
+        def do_stage_out():
+            if spec.closed:
+                self.proxy.stage(job.spec.stage_out_bytes, inbound=False)
+            self.sim.after(s_out, _fail_if_down(finish,
+                                                "resource failed staging out"))
+
+        def finish():
+            self._finish(job, spec.name)
+            cb.on_done(job, ex)
+
+        self.sim.after(s_in, _fail_if_down(start_exec,
+                                           "resource failed staging in"))
+
+    def _finish(self, job: Job, resource: str) -> None:
+        self._running.pop(job.job_id, None)
+        st = self.directory.status(resource)
+        st.running = max(0, st.running - 1)
+
+    def cancel(self, job: Job) -> None:
+        tok = self._running.get(job.job_id)
+        if tok:
+            tok["cancelled"] = True
+
+    def estimate(self, job: Job, resource: str) -> float:
+        spec = self.directory.spec(resource)
+        s_in, ex, s_out = duration_model(
+            spec, job.spec.est_seconds_base, job.spec.stage_in_bytes,
+            job.spec.stage_out_bytes, load=self.directory.status(resource).load,
+            noise_sigma=0.0, seed=())
+        return s_in + ex + s_out
+
+
+class LocalExecutor:
+    """Real execution: ``job.spec.payload`` is a callable() -> result."""
+
+    def __init__(self, directory: ResourceDirectory, max_workers: int = 4):
+        self.directory = directory
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.proxy = StagingProxy()
+        self._futures: Dict[str, Future] = {}
+        self._lock = threading.Lock()
+
+    def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
+        spec = self.directory.spec(resource)
+        st = self.directory.status(resource)
+        if not st.up or st.free_slots(spec) <= 0:
+            cb.on_failed(job, "resource unavailable at submit")
+            return
+        st.running += 1
+
+        def run():
+            cb.on_started(job)
+            t0 = time.monotonic()
+            try:
+                job.result = (job.spec.payload() if callable(job.spec.payload)
+                              else None)
+            except Exception as e:  # noqa: BLE001 — job failure, not ours
+                with self._lock:
+                    st.running = max(0, st.running - 1)
+                cb.on_failed(job, f"payload raised: {e!r}")
+                return
+            with self._lock:
+                st.running = max(0, st.running - 1)
+            cb.on_done(job, time.monotonic() - t0)
+
+        self._futures[job.job_id] = self.pool.submit(run)
+
+    def cancel(self, job: Job) -> None:
+        f = self._futures.get(job.job_id)
+        if f:
+            f.cancel()
+
+    def estimate(self, job: Job, resource: str) -> float:
+        spec = self.directory.spec(resource)
+        return job.spec.est_seconds_base / max(spec.perf_factor, 1e-6)
+
+    def shutdown(self) -> None:
+        self.pool.shutdown(wait=True)
+
+
+class Dispatcher:
+    """Thin mediation layer the engine talks to (paper's component)."""
+
+    def __init__(self, executor, directory: ResourceDirectory):
+        self.executor = executor
+        self.directory = directory
+        self.dispatched = 0
+
+    def dispatch(self, job: Job, resource: str, cb: DispatchCallbacks
+                 ) -> None:
+        job.resource = resource
+        job.status = JobStatus.STAGED
+        job.attempt += 1
+        self.dispatched += 1
+        self.executor.submit(job, resource, cb)
+
+    def cancel(self, job: Job) -> None:
+        self.executor.cancel(job)
+
+    def estimate(self, job: Job, resource: str) -> float:
+        return self.executor.estimate(job, resource)

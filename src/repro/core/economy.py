@@ -1,0 +1,163 @@
+"""Computational economy (paper §3) and the GRACE market machinery
+(paper §7): owner-set time-varying prices, per-user multipliers,
+budget/deadline containers, sealed-bid tendering, and advance
+reservations.
+
+Prices are in "grid dollars" (G$) per chip-hour, exactly the paper's
+artificial-cost setting; owners control their schedule, users see a quote
+that can differ per user (the paper: "the cost can vary from one user to
+another").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.resources import ResourceDirectory, ResourceSpec
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class UserRequirements:
+    """What the client hands the scheduler: the paper's two knobs."""
+    deadline: float                 # absolute virtual time by which to finish
+    budget: float                   # G$ the user is willing to pay
+    strategy: str = "cost"          # cost | time | conservative
+    user: str = "rajkumar"
+
+
+class PriceSchedule:
+    """Owner-set price: base * peak-hours multiplier * per-user factor,
+    plus optional spot-style fluctuation (deterministic in virtual time)."""
+
+    def __init__(self, spec: ResourceSpec,
+                 user_factors: Optional[Dict[str, float]] = None,
+                 spot_amplitude: float = 0.0, spot_period: float = 5 * HOUR,
+                 phase: float = 0.0):
+        self.spec = spec
+        self.user_factors = user_factors or {}
+        self.spot_amplitude = spot_amplitude
+        self.spot_period = spot_period
+        self.phase = phase
+
+    def chip_hour_price(self, t: float, user: str = "") -> float:
+        day = (t / HOUR + self.phase) % 24.0
+        peak = self.spec.peak_multiplier if 8.0 <= day < 20.0 else 1.0
+        spot = 1.0
+        if self.spot_amplitude:
+            spot = 1.0 + self.spot_amplitude * math.sin(
+                2 * math.pi * (t + self.phase * HOUR) / self.spot_period)
+        uf = self.user_factors.get(user, 1.0)
+        return self.spec.base_price * peak * spot * uf
+
+    def job_cost(self, t: float, duration: float, user: str = "") -> float:
+        """Cost of occupying the whole slice for ``duration`` seconds."""
+        return (self.chip_hour_price(t, user) * self.spec.chips
+                * duration / HOUR)
+
+
+@dataclasses.dataclass
+class Reservation:
+    resource: str
+    user: str
+    start: float
+    end: float
+    locked_price: float             # chip-hour price honored in the window
+    reservation_id: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Bid:
+    resource: str
+    chip_hour_price: float
+    available_slots: int
+    est_rate: float                 # jobs/hour this resource can sustain
+    valid_until: float
+
+
+class TradeServer:
+    """GRACE bid-server + trade-manager: quotes, sealed bids, reservations.
+
+    One per grid (in reality one per domain; a single instance keeps the
+    simulation simple while preserving the protocol shape).
+    """
+
+    def __init__(self, directory: ResourceDirectory,
+                 schedules: Dict[str, PriceSchedule]):
+        self.directory = directory
+        self.schedules = schedules
+        self.reservations: List[Reservation] = []
+        self._next_rid = 1
+
+    def quote(self, resource: str, t: float, user: str = "") -> float:
+        return self.schedules[resource].chip_hour_price(t, user)
+
+    def solicit_bids(self, t: float, user: str,
+                     est_job_seconds: Callable[[ResourceSpec], float]
+                     ) -> List[Bid]:
+        """Open-market tender: each authorized, up resource returns a
+        sealed bid (price honored until valid_until)."""
+        bids = []
+        for spec in self.directory.discover(user):
+            st = self.directory.status(spec.name)
+            dur = est_job_seconds(spec)
+            rate = (HOUR / dur) * spec.slots if dur > 0 else 0.0
+            bids.append(Bid(
+                resource=spec.name,
+                chip_hour_price=self.quote(spec.name, t, user),
+                available_slots=st.free_slots(spec),
+                est_rate=rate,
+                valid_until=t + HOUR,
+            ))
+        return sorted(bids, key=lambda b: b.chip_hour_price)
+
+    def reserve(self, resource: str, user: str, start: float, end: float,
+                t: float) -> Reservation:
+        r = Reservation(resource=resource, user=user, start=start, end=end,
+                        locked_price=self.quote(resource, t, user),
+                        reservation_id=self._next_rid)
+        self._next_rid += 1
+        self.reservations.append(r)
+        return r
+
+    def cancel(self, reservation_id: int) -> bool:
+        n = len(self.reservations)
+        self.reservations = [r for r in self.reservations
+                             if r.reservation_id != reservation_id]
+        return len(self.reservations) < n
+
+    def reserved_price(self, resource: str, user: str, t: float
+                       ) -> Optional[float]:
+        for r in self.reservations:
+            if (r.resource == resource and r.user == user
+                    and r.start <= t < r.end):
+                return r.locked_price
+        return None
+
+    def effective_price(self, resource: str, user: str, t: float) -> float:
+        locked = self.reserved_price(resource, user, t)
+        return locked if locked is not None else self.quote(resource, t, user)
+
+
+@dataclasses.dataclass
+class BudgetLedger:
+    """Tracks spend against the user's budget (committed vs settled)."""
+    budget: float
+    settled: float = 0.0
+    committed: float = 0.0
+
+    def can_commit(self, amount: float) -> bool:
+        return self.settled + self.committed + amount <= self.budget + 1e-9
+
+    def commit(self, amount: float) -> None:
+        self.committed += amount
+
+    def settle(self, committed: float, actual: float) -> None:
+        self.committed = max(0.0, self.committed - committed)
+        self.settled += actual
+
+    @property
+    def remaining(self) -> float:
+        return self.budget - self.settled - self.committed

@@ -1,0 +1,54 @@
+"""Job model: one parameter point of the experiment = one grid job."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.plan import TaskStep
+
+
+class JobStatus(str, enum.Enum):
+    PENDING = "pending"        # created, not yet assigned
+    STAGED = "staged"          # assigned to a resource, staging in
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"          # last attempt failed (will requeue or give up)
+    KILLED = "killed"          # duplicate lost the straggler race
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    job_id: str
+    experiment: str
+    point: Dict[str, Any]                  # parameter values
+    steps: Tuple[TaskStep, ...]            # substituted task steps
+    est_seconds_base: float = 3600.0       # runtime on a perf_factor=1 slice
+    stage_in_bytes: int = 10_000_000
+    stage_out_bytes: int = 1_000_000
+    payload: Any = None                    # LocalExecutor: callable to run
+
+
+@dataclasses.dataclass
+class Job:
+    spec: JobSpec
+    status: JobStatus = JobStatus.PENDING
+    resource: Optional[str] = None
+    attempt: int = 0
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    committed_cost: float = 0.0
+    actual_cost: float = 0.0
+    result: Any = None
+    duplicate_of: Optional[str] = None     # straggler backup provenance
+    duplicates: Tuple[str, ...] = ()
+
+    @property
+    def job_id(self) -> str:
+        return self.spec.job_id
+
+    def runtime(self) -> float:
+        if self.finished_at and self.started_at:
+            return self.finished_at - self.started_at
+        return 0.0

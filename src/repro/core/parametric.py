@@ -1,0 +1,491 @@
+"""The parametric engine (paper §2): persistent job-control agent.
+
+Owns the experiment: expands the declarative plan into the job farm,
+tracks every job's lifecycle, journals every transition for exact restart,
+asks the schedule advisor where to run things, hands dispatches to the
+dispatcher, enforces the deadline/budget economy, requeues failures and
+races duplicates against stragglers.
+
+Runs against either the virtual-time grid (``run_simulated``) or a real
+thread-pool grid executing genuine payloads (``run_local``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time as _time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core import plan as plan_mod
+from repro.core.dispatcher import DispatchCallbacks, Dispatcher
+from repro.core.economy import BudgetLedger, TradeServer, UserRequirements
+from repro.core.jobs import Job, JobSpec, JobStatus
+from repro.core.persistence import Journal, load_events
+from repro.core.resources import ResourceDirectory
+from repro.core.scheduler import (ResourceView, ScheduleAdvisor,
+                                  SchedulerConfig, cost_per_job)
+from repro.core.simulator import FailureProcess, Simulator
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass
+class ExperimentReport:
+    experiment: str
+    strategy: str
+    deadline: float
+    budget: float
+    n_jobs: int
+    n_done: int = 0
+    n_failed_final: int = 0
+    completion_time: float = math.inf
+    total_cost: float = 0.0
+    met_deadline: bool = False
+    within_budget: bool = False
+    resources_used: Set[str] = dataclasses.field(default_factory=set)
+    peak_allocation: int = 0
+    duplicates_launched: int = 0
+    requeues: int = 0
+    timeline: List[Tuple[float, int, int, float]] = dataclasses.field(
+        default_factory=list)        # (t, allocated, done, spent)
+    stall_reason: Optional[str] = None
+
+    def summary(self) -> str:
+        return (f"[{self.experiment}] {self.strategy}: "
+                f"{self.n_done}/{self.n_jobs} jobs, "
+                f"t={self.completion_time / HOUR:.2f}h "
+                f"(deadline {self.deadline / HOUR:.1f}h, "
+                f"met={self.met_deadline}), "
+                f"cost={self.total_cost:.1f}G$ "
+                f"(budget {self.budget:.0f}, within={self.within_budget}), "
+                f"peak_resources={self.peak_allocation}, "
+                f"dups={self.duplicates_launched} requeues={self.requeues}")
+
+
+class NimrodG:
+    """Engine + scheduler + dispatcher wiring for one experiment."""
+
+    def __init__(self, experiment: str, jobs: Sequence[JobSpec],
+                 requirements: UserRequirements,
+                 directory: ResourceDirectory, trade: TradeServer,
+                 dispatcher: Dispatcher,
+                 sim: Optional[Simulator] = None,
+                 journal: Optional[Journal] = None,
+                 sched_cfg: SchedulerConfig = SchedulerConfig(),
+                 seed: int = 0):
+        self.experiment = experiment
+        self.req = requirements
+        self.directory = directory
+        self.trade = trade
+        self.dispatcher = dispatcher
+        self.sim = sim
+        self.journal = journal
+        self.cfg = sched_cfg
+        self.seed = seed
+
+        self.advisor = ScheduleAdvisor(sched_cfg, requirements)
+        self.ledger = BudgetLedger(budget=requirements.budget)
+        self.jobs: Dict[str, Job] = {
+            s.job_id: Job(spec=s) for s in jobs}
+        self.attempts: Dict[str, List[Job]] = collections.defaultdict(list)
+        self.views: Dict[str, ResourceView] = {}
+        self.allocated: Set[str] = set()
+        self.report = ExperimentReport(
+            experiment=experiment, strategy=requirements.strategy,
+            deadline=requirements.deadline, budget=requirements.budget,
+            n_jobs=len(self.jobs))
+        self._events: collections.deque = collections.deque()
+        self._finished = False
+        self._dup_counter = 0
+
+        self._log("EXP_CREATED", n_jobs=len(self.jobs),
+                  deadline=requirements.deadline, budget=requirements.budget,
+                  strategy=requirements.strategy, user=requirements.user)
+        for s in jobs:
+            self._log("JOB_CREATED", job_id=s.job_id, point=s.point,
+                      est=s.est_seconds_base)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_plan(cls, experiment: str, p: plan_mod.Plan,
+                  requirements: UserRequirements,
+                  directory: ResourceDirectory, trade: TradeServer,
+                  dispatcher: Dispatcher,
+                  est_seconds: Callable[[Dict[str, Any]], float],
+                  stage_in_bytes: int = 10_000_000,
+                  stage_out_bytes: int = 1_000_000,
+                  **kw) -> "NimrodG":
+        specs = []
+        for i, point in enumerate(p.points()):
+            jid = f"j{i:05d}"
+            steps = tuple(plan_mod.substitute(s, point, jid) for s in p.task)
+            specs.append(JobSpec(
+                job_id=jid, experiment=experiment, point=point, steps=steps,
+                est_seconds_base=est_seconds(point),
+                stage_in_bytes=stage_in_bytes,
+                stage_out_bytes=stage_out_bytes))
+        return cls(experiment, specs, requirements, directory, trade,
+                   dispatcher, **kw)
+
+    # ------------------------------------------------------------------
+    # journaling / restart
+    # ------------------------------------------------------------------
+    def _log(self, kind: str, **fields) -> None:
+        if self.journal is not None:
+            t = self.sim.now if self.sim is not None else _time.time()
+            self.journal.append(kind, t=t, **fields)
+
+    @staticmethod
+    def replay_journal(path: str) -> Dict[str, Any]:
+        """Reconstruct experiment state from a journal (restart support).
+
+        Returns {done: {job_id: cost}, spent: float, meta: {...}}.
+        Jobs seen RUNNING/STAGED but never DONE are simply *not* in
+        ``done`` — the restarted engine requeues them (exactly-once
+        completion, at-least-once execution)."""
+        done: Dict[str, float] = {}
+        spent = 0.0
+        meta: Dict[str, Any] = {}
+        for ev in load_events(path):
+            k = ev["kind"]
+            if k == "EXP_CREATED":
+                meta = {f: ev[f] for f in
+                        ("n_jobs", "deadline", "budget", "strategy", "user")}
+            elif k == "DONE":
+                jid = ev["job_id"].split("~")[0]
+                if jid not in done:
+                    done[jid] = ev["cost"]
+                    spent += ev["cost"]
+            elif k == "KILL_SETTLED":
+                spent += ev["cost"]
+        return {"done": done, "spent": spent, "meta": meta}
+
+    def restore_from(self, path: str) -> int:
+        """Apply a prior journal: mark finished jobs done, restore spend.
+        Returns number of jobs recovered as DONE."""
+        st = self.replay_journal(path)
+        for jid, cost in st["done"].items():
+            if jid in self.jobs:
+                j = self.jobs[jid]
+                j.status = JobStatus.DONE
+                j.actual_cost = cost
+                self.report.n_done += 1
+        self.ledger.settled += st["spent"]
+        self.report.total_cost = st["spent"]
+        self._log("RESTORED", n_done=len(st["done"]), spent=st["spent"])
+        return len(st["done"])
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return self.sim.now if self.sim is not None else _time.time()
+
+    def _pending_jobs(self) -> List[Job]:
+        return [j for j in self.jobs.values()
+                if j.status in (JobStatus.PENDING, JobStatus.FAILED)
+                and j.attempt < self.cfg.max_attempts]
+
+    def _remaining(self) -> int:
+        return sum(1 for j in self.jobs.values()
+                   if j.status != JobStatus.DONE)
+
+    def _price(self, resource: str) -> float:
+        return self.trade.effective_price(resource, self.req.user,
+                                          self._now())
+
+    def _refresh_views(self) -> None:
+        for spec in self.directory.discover(self.req.user):
+            if spec.name not in self.views:
+                probe = Job(spec=next(iter(self.jobs.values())).spec)
+                est = self.dispatcher.estimate(probe, spec.name)
+                self.views[spec.name] = ResourceView(
+                    spec=spec, est_job_seconds=max(est, 1e-6))
+        for name, v in self.views.items():
+            v.suspected = not self.directory.status(name).up
+
+    # ------------------------------------------------------------------
+    # scheduling tick
+    # ------------------------------------------------------------------
+    def tick(self) -> None:
+        if self._finished:
+            return
+        t = self._now()
+        self._refresh_views()
+        remaining = self._remaining()
+        if remaining == 0:
+            self._finish()
+            return
+
+        prices = {n: self._price(n) for n in self.views}
+        decision = self.advisor.decide(t, self.views, prices, remaining,
+                                       self.ledger, set(self.allocated))
+        for r in decision.release:
+            self.allocated.discard(r)
+            self._log("RELEASE", resource=r)
+        for r in decision.allocate:
+            self.allocated.add(r)
+            self._log("ALLOC", resource=r, price=prices.get(r, 0.0))
+        self.report.peak_allocation = max(self.report.peak_allocation,
+                                          len(self.allocated))
+
+        self._fill_slots()
+        self._check_stragglers()
+        self.report.timeline.append(
+            (t, len(self.allocated), self.report.n_done, self.ledger.settled))
+
+        # stall detection
+        running = any(j.status in (JobStatus.STAGED, JobStatus.RUNNING)
+                      for j in self.jobs.values())
+        if not running and not self._finished:
+            pending = self._pending_jobs()
+            if not pending and self._remaining() > 0:
+                self._finish(stall="max_attempts_exhausted")
+                return
+            up = [r for r in self.allocated
+                  if r in self.views and self.directory.status(r).up]
+            if pending and up:
+                affordable = any(
+                    self.advisor.may_commit(
+                        cost_per_job(self.views[r], prices[r]), remaining,
+                        self.ledger)
+                    for r in up)
+                if not affordable:
+                    self._finish(stall="budget_exhausted")
+                    return
+
+        if self.sim is not None and not self._finished:
+            self.sim.after(self.cfg.interval, self.tick)
+
+    # ------------------------------------------------------------------
+    # dispatch machinery
+    # ------------------------------------------------------------------
+    def _fill_slots(self) -> None:
+        t = self._now()
+        pend = self._pending_jobs()
+        if not pend:
+            return
+        slots: List[str] = []
+        for r in sorted(self.allocated,
+                        key=lambda n: cost_per_job(
+                            self.views[n], self._price(n))):
+            st = self.directory.status(r)
+            spec = self.directory.spec(r)
+            slots.extend([r] * st.free_slots(spec))
+        remaining = self._remaining()
+        for job, resource in zip(pend, slots):
+            est = self.views[resource].est_job_seconds
+            cost = self._price(resource) * \
+                self.directory.spec(resource).chips * est / HOUR
+            if not self.advisor.may_commit(cost, remaining, self.ledger):
+                continue
+            self._dispatch(job, resource, cost)
+
+    def _dispatch(self, job: Job, resource: str, committed: float) -> None:
+        self.ledger.commit(committed)
+        job.committed_cost = committed
+        job.submitted_at = self._now()
+        primary = job.duplicate_of or job.job_id
+        self.attempts[primary].append(job)
+        self._log("DISPATCH", job_id=job.job_id, resource=resource,
+                  attempt=job.attempt + 1, committed=committed)
+        self.report.resources_used.add(resource)
+        cb = DispatchCallbacks(on_started=self._on_started,
+                               on_done=self._on_done,
+                               on_failed=self._on_failed)
+        self.dispatcher.dispatch(job, resource, cb)
+
+    # -- callbacks (invoked via the event queue drain) --
+    def _on_started(self, job: Job) -> None:
+        self._events.append(("started", job, None))
+        self._drain_if_sim()
+
+    def _on_done(self, job: Job, exec_seconds: float) -> None:
+        self._events.append(("done", job, exec_seconds))
+        self._drain_if_sim()
+
+    def _on_failed(self, job: Job, reason: str) -> None:
+        self._events.append(("failed", job, reason))
+        self._drain_if_sim()
+
+    def _drain_if_sim(self) -> None:
+        if self.sim is not None:
+            self.drain_events()
+
+    def drain_events(self) -> None:
+        while self._events:
+            kind, job, arg = self._events.popleft()
+            if kind == "started":
+                self._handle_started(job)
+            elif kind == "done":
+                self._handle_done(job, arg)
+            else:
+                self._handle_failed(job, arg)
+
+    def _handle_started(self, job: Job) -> None:
+        job.status = JobStatus.RUNNING
+        job.started_at = self._now()
+        self._log("START", job_id=job.job_id, resource=job.resource)
+
+    def _handle_done(self, job: Job, exec_seconds: float) -> None:
+        primary_id = job.duplicate_of or job.job_id
+        primary = self.jobs.get(primary_id)
+        t = self._now()
+        price = self.trade.effective_price(job.resource, self.req.user,
+                                           job.submitted_at)
+        actual = price * self.directory.spec(job.resource).chips * \
+            exec_seconds / HOUR
+        self.ledger.settle(job.committed_cost, actual)
+        job.finished_at = t
+        job.actual_cost = actual
+        if job.resource in self.views:
+            self.views[job.resource].observe_completion(
+                exec_seconds, self.cfg.rate_ema)
+        self._log("DONE", job_id=job.job_id, resource=job.resource,
+                  duration=exec_seconds, cost=actual)
+
+        if primary is None or primary.status == JobStatus.DONE:
+            return  # lost the race; already settled above
+        primary.status = JobStatus.DONE
+        primary.finished_at = t
+        primary.actual_cost += actual
+        primary.result = job.result
+        self.report.n_done += 1
+        self.report.total_cost = self.ledger.settled
+        # kill losing duplicates
+        for other in self.attempts[primary_id]:
+            if other is not job and other.status in (JobStatus.STAGED,
+                                                     JobStatus.RUNNING):
+                other.status = JobStatus.KILLED
+                self.dispatcher.cancel(other)
+                elapsed = max(t - other.submitted_at, 0.0)
+                kp = self.trade.effective_price(other.resource, self.req.user,
+                                                other.submitted_at)
+                kcost = kp * self.directory.spec(other.resource).chips * \
+                    elapsed / HOUR
+                self.ledger.settle(other.committed_cost, kcost)
+                self._log("KILL_SETTLED", job_id=other.job_id, cost=kcost)
+        if self._remaining() == 0:
+            self._finish()
+        else:
+            self._fill_slots()
+
+    def _handle_failed(self, job: Job, reason: str) -> None:
+        primary_id = job.duplicate_of or job.job_id
+        self.ledger.settle(job.committed_cost, 0.0)
+        if job.resource in self.views:
+            self.views[job.resource].failures += 1
+            self.views[job.resource].suspected = True
+        self._log("FAIL", job_id=job.job_id, resource=job.resource,
+                  reason=reason, attempt=job.attempt)
+        primary = self.jobs.get(primary_id)
+        if primary is None or primary.status == JobStatus.DONE:
+            return
+        if job.duplicate_of is None:
+            job.status = JobStatus.FAILED
+            self.report.requeues += 1
+            if job.attempt >= self.cfg.max_attempts:
+                self.report.n_failed_final += 1
+        self._fill_slots()
+
+    # ------------------------------------------------------------------
+    # stragglers
+    # ------------------------------------------------------------------
+    def _check_stragglers(self) -> None:
+        """Speculative execution (tail phase): a running job whose elapsed
+        time exceeds ``factor x`` the *fastest allocated resource's*
+        estimate gets a duplicate raced on a free slot — first completion
+        wins.  (MapReduce-style: predictably-slow machines are also worth
+        racing once faster slots are idle.)"""
+        t = self._now()
+        ests = [self.views[r].est_job_seconds for r in self.allocated
+                if r in self.views]
+        if not ests:
+            return
+        fastest = min(ests)
+        for primary_id, attempts in list(self.attempts.items()):
+            primary = self.jobs.get(primary_id)
+            if primary is None or primary.status != JobStatus.RUNNING:
+                continue
+            if any(a.duplicate_of for a in attempts
+                   if a.status in (JobStatus.STAGED, JobStatus.RUNNING)):
+                continue  # already racing a duplicate
+            if t - primary.started_at <= self.cfg.straggler_factor * fastest:
+                continue
+            # find a different allocated resource with a free slot
+            for r in sorted(self.allocated,
+                            key=lambda n: self.views[n].est_job_seconds):
+                if r == primary.resource:
+                    continue
+                st = self.directory.status(r)
+                if st.free_slots(self.directory.spec(r)) <= 0:
+                    continue
+                cost = self._price(r) * self.directory.spec(r).chips * \
+                    self.views[r].est_job_seconds / HOUR
+                if not self.advisor.may_commit(cost, self._remaining(),
+                                               self.ledger):
+                    break
+                self._dup_counter += 1
+                dspec = dataclasses.replace(
+                    primary.spec, job_id=f"{primary_id}~{self._dup_counter}")
+                dup = Job(spec=dspec, duplicate_of=primary_id)
+                self._log("DUPLICATE", job_id=dspec.job_id,
+                          original=primary_id, resource=r)
+                self.report.duplicates_launched += 1
+                self._dispatch(dup, r, cost)
+                break
+
+    # ------------------------------------------------------------------
+    def _finish(self, stall: Optional[str] = None) -> None:
+        if self._finished:
+            return
+        self._finished = True
+        t = self._now()
+        self.report.completion_time = t
+        self.report.met_deadline = (self.report.n_done == self.report.n_jobs
+                                    and t <= self.req.deadline + 1e-6)
+        self.report.within_budget = self.ledger.settled <= self.req.budget + 1e-6
+        self.report.total_cost = self.ledger.settled
+        self.report.stall_reason = stall
+        self._log("EXP_DONE", n_done=self.report.n_done,
+                  cost=self.ledger.settled, stall=stall)
+        if self.sim is not None:
+            self.sim.stop()
+
+    # ------------------------------------------------------------------
+    # drivers
+    # ------------------------------------------------------------------
+    def run_simulated(self, *, failures: bool = True,
+                      horizon: Optional[float] = None) -> ExperimentReport:
+        assert self.sim is not None, "construct with sim=Simulator()"
+        if failures:
+            fp = FailureProcess(self.sim, self.directory, seed=self.seed)
+            for name in self.directory.all_names():
+                fp.install(name)
+        self.sim.after(0.0, self.tick)
+        self.sim.run(until=horizon if horizon is not None
+                     else self.req.deadline * 4 + 8 * HOUR)
+        if not self._finished:
+            self._finish(stall="horizon_reached")
+        return self.report
+
+    def run_local(self, poll: float = 0.02,
+                  wall_timeout: float = 3600.0) -> ExperimentReport:
+        """Drive real payload execution (thread-pool grid)."""
+        assert self.sim is None
+        t0 = _time.time()
+        self.tick()
+        last_tick = _time.time()
+        while not self._finished and _time.time() - t0 < wall_timeout:
+            _time.sleep(poll)
+            self.drain_events()
+            if self._remaining() == 0:
+                self._finish()
+                break
+            if _time.time() - last_tick >= min(self.cfg.interval, 0.25):
+                self.tick()
+                last_tick = _time.time()
+        if not self._finished:
+            self._finish(stall="wall_timeout")
+        return self.report

@@ -1,0 +1,67 @@
+"""Append-only experiment journal (the paper: "the parametric engine ...
+ensures that the state is recorded in persistent storage. This allows the
+experiment to be restarted if the node running Nimrod goes down").
+
+Events are JSON lines, fsync'd on write.  Restart = replay.  A torn final
+line (crash mid-write) is detected and dropped.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterator, List, Optional
+
+
+class Journal:
+    def __init__(self, path: str, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+        self._seq = self._count_existing()
+
+    def _count_existing(self) -> int:
+        n = 0
+        if os.path.exists(self.path):
+            for _ in replay(self.path):
+                n += 1
+        return n
+
+    def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
+        ev = {"seq": self._seq, "kind": kind, **fields}
+        self._f.write(json.dumps(ev, sort_keys=True) + "\n")
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self._seq += 1
+        return ev
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def replay(path: str) -> Iterator[Dict[str, Any]]:
+    """Yield events; silently drop a torn trailing line."""
+    if not os.path.exists(path):
+        return
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                return  # torn tail — crash mid-write; ignore the fragment
+
+
+def load_events(path: str) -> List[Dict[str, Any]]:
+    return list(replay(path))

@@ -1,0 +1,177 @@
+"""The declarative parametric modeling language (paper §1/§2; Clustor
+"plan file" lineage [13]).
+
+Grammar (line oriented; ``#`` comments)::
+
+    parameter <name> float   range from <a> to <b> step <s>
+    parameter <name> integer range from <a> to <b> step <s>
+    parameter <name> <type>  select anyof <v1> <v2> ...
+    parameter <name> <type>  default <v>
+    task <name>
+        copy <src> node:<dst>
+        execute <command ... $param ...>
+        copy node:<src> <dst>
+    endtask
+
+Expansion is the full cross product of parameter values — the paper's
+"task farm".  ``$name`` / ``${name}`` / ``$jobname`` substitute into task
+steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import re
+import shlex
+from typing import Any, Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Parameter:
+    name: str
+    ptype: str                   # float | integer | text
+    values: Tuple[Any, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskStep:
+    op: str                      # copy | execute
+    args: Tuple[str, ...]
+
+    @property
+    def is_stage_in(self) -> bool:
+        return self.op == "copy" and not self.args[0].startswith("node:")
+
+    @property
+    def is_stage_out(self) -> bool:
+        return self.op == "copy" and self.args[0].startswith("node:")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    parameters: Tuple[Parameter, ...]
+    task: Tuple[TaskStep, ...]
+    task_name: str = "main"
+
+    def n_jobs(self) -> int:
+        n = 1
+        for p in self.parameters:
+            n *= len(p.values)
+        return n
+
+    def points(self) -> List[Dict[str, Any]]:
+        names = [p.name for p in self.parameters]
+        vals = [p.values for p in self.parameters]
+        return [dict(zip(names, combo))
+                for combo in itertools.product(*vals)]
+
+
+class PlanError(ValueError):
+    pass
+
+
+def _coerce(ptype: str, tok: str) -> Any:
+    if ptype == "integer":
+        return int(tok)
+    if ptype == "float":
+        return float(tok)
+    return tok.strip('"')
+
+
+def _frange(a: float, b: float, s: float) -> List[float]:
+    if s <= 0:
+        raise PlanError(f"step must be positive, got {s}")
+    out, x, i = [], a, 0
+    while x <= b + 1e-9:
+        out.append(round(x, 12))
+        i += 1
+        x = a + i * s
+    return out
+
+
+def parse_plan(text: str) -> Plan:
+    params: List[Parameter] = []
+    steps: List[TaskStep] = []
+    task_name = "main"
+    in_task = False
+    seen_task = False
+
+    for ln, raw in enumerate(text.splitlines(), start=1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        toks = shlex.split(line, posix=False)
+        head = toks[0].lower()
+
+        if head == "parameter":
+            if in_task:
+                raise PlanError(f"line {ln}: parameter inside task block")
+            if len(toks) < 4:
+                raise PlanError(f"line {ln}: malformed parameter")
+            name, ptype = toks[1], toks[2].lower()
+            if ptype not in ("float", "integer", "text"):
+                raise PlanError(f"line {ln}: unknown type {ptype!r}")
+            mode = toks[3].lower()
+            if mode == "range":
+                if ptype == "text" or len(toks) != 10 or \
+                        (toks[4].lower(), toks[6].lower(),
+                         toks[8].lower()) != ("from", "to", "step"):
+                    raise PlanError(f"line {ln}: malformed range")
+                a, b, s = (float(toks[5]), float(toks[7]), float(toks[9]))
+                vals = _frange(a, b, s)
+                if ptype == "integer":
+                    vals = [int(round(v)) for v in vals]
+                params.append(Parameter(name, ptype, tuple(vals)))
+            elif mode == "select":
+                if len(toks) < 6 or toks[4].lower() != "anyof":
+                    raise PlanError(f"line {ln}: malformed select")
+                vals = tuple(_coerce(ptype, t) for t in toks[5:])
+                params.append(Parameter(name, ptype, vals))
+            elif mode == "default":
+                params.append(Parameter(name, ptype,
+                                        (_coerce(ptype, toks[4]),)))
+            else:
+                raise PlanError(f"line {ln}: unknown parameter mode {mode!r}")
+        elif head == "task":
+            if seen_task:
+                raise PlanError(f"line {ln}: only one task block supported")
+            in_task, seen_task = True, True
+            if len(toks) > 1:
+                task_name = toks[1]
+        elif head == "endtask":
+            if not in_task:
+                raise PlanError(f"line {ln}: endtask outside task")
+            in_task = False
+        elif head in ("copy", "execute"):
+            if not in_task:
+                raise PlanError(f"line {ln}: {head} outside task block")
+            steps.append(TaskStep(head, tuple(toks[1:])))
+        else:
+            raise PlanError(f"line {ln}: unknown directive {head!r}")
+
+    if in_task:
+        raise PlanError("unterminated task block")
+    if not seen_task:
+        raise PlanError("plan has no task block")
+    if not params:
+        raise PlanError("plan declares no parameters")
+    names = [p.name for p in params]
+    if len(set(names)) != len(names):
+        raise PlanError("duplicate parameter names")
+    return Plan(tuple(params), tuple(steps), task_name)
+
+
+_SUB = re.compile(r"\$\{(\w+)\}|\$(\w+)")
+
+
+def substitute(step: TaskStep, point: Dict[str, Any], jobname: str
+               ) -> TaskStep:
+    env = {**{k: str(v) for k, v in point.items()}, "jobname": jobname}
+
+    def rep(m: re.Match) -> str:
+        key = m.group(1) or m.group(2)
+        if key not in env:
+            raise PlanError(f"undefined plan variable ${key}")
+        return env[key]
+
+    return TaskStep(step.op, tuple(_SUB.sub(rep, a) for a in step.args))

@@ -1,0 +1,126 @@
+"""Grid resources and the resource directory (the paper's MDS analogue).
+
+A *resource* here is a TPU slice owned by some administrative domain:
+it has a capability (chips, peak FLOP/s, HBM bandwidth), an access policy
+(which users are authorized), a queue, an owner-set price schedule, a
+reliability model (MTBF), and optionally sits behind a closed-cluster
+proxy (only the master node speaks to the WAN — paper §4).
+
+All dynamic behaviour is driven by the virtual clock so scheduler
+experiments are deterministic and unit-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# TPU v5e per-chip constants (match the roofline section)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceSpec:
+    name: str
+    site: str
+    chips: int = 8
+    peak_flops_per_chip: float = PEAK_FLOPS
+    perf_factor: float = 1.0          # relative efficiency of this slice
+    slots: int = 1                    # concurrent jobs the queue runs
+    base_price: float = 1.0           # G$ per chip-hour at off-peak
+    peak_multiplier: float = 2.0      # daytime price multiplier
+    mtbf_hours: float = 400.0         # mean time between failures
+    mttr_hours: float = 1.0           # mean time to repair
+    closed: bool = False              # behind a master-node proxy
+    authorized_users: Tuple[str, ...] = ()   # empty = everyone
+    stage_bw: float = 1e9             # bytes/s for stage-in/out
+
+    def effective_flops(self) -> float:
+        return self.chips * self.peak_flops_per_chip * self.perf_factor
+
+
+@dataclasses.dataclass
+class ResourceStatus:
+    up: bool = True
+    running: int = 0
+    queued: int = 0
+    load: float = 0.0                 # exogenous competing load [0,1)
+    next_transition: float = math.inf
+
+    def free_slots(self, spec: ResourceSpec) -> int:
+        return max(0, spec.slots - self.running) if self.up else 0
+
+
+class ResourceDirectory:
+    """MDS-style directory: registration, discovery, authorization."""
+
+    def __init__(self):
+        self._specs: Dict[str, ResourceSpec] = {}
+        self._status: Dict[str, ResourceStatus] = {}
+
+    # -- registration (resource owners) --
+    def register(self, spec: ResourceSpec) -> None:
+        if spec.name in self._specs:
+            raise ValueError(f"resource {spec.name!r} already registered")
+        self._specs[spec.name] = spec
+        self._status[spec.name] = ResourceStatus()
+
+    def deregister(self, name: str) -> None:
+        self._specs.pop(name, None)
+        self._status.pop(name, None)
+
+    # -- discovery (schedulers) --
+    def discover(self, user: str, *, site: Optional[str] = None,
+                 min_chips: int = 0, up_only: bool = True
+                 ) -> List[ResourceSpec]:
+        out = []
+        for spec in self._specs.values():
+            if spec.authorized_users and user not in spec.authorized_users:
+                continue
+            if site is not None and spec.site != site:
+                continue
+            if spec.chips < min_chips:
+                continue
+            if up_only and not self._status[spec.name].up:
+                continue
+            out.append(spec)
+        return sorted(out, key=lambda s: s.name)
+
+    def spec(self, name: str) -> ResourceSpec:
+        return self._specs[name]
+
+    def status(self, name: str) -> ResourceStatus:
+        return self._status[name]
+
+    def all_names(self) -> List[str]:
+        return sorted(self._specs)
+
+
+def gusto_like_testbed(n_machines: int = 70, seed: int = 0,
+                       sites: Sequence[str] = ("ANL", "ISI", "Monash", "UVA",
+                                               "UTK"),
+                       ) -> List[ResourceSpec]:
+    """A testbed shaped like the paper's GUSTO trial (~70 heterogeneous
+    machines across several administrative domains, varied speed/price)."""
+    import random
+    rng = random.Random(seed)
+    specs = []
+    for i in range(n_machines):
+        site = sites[i % len(sites)]
+        perf = rng.choice([0.5, 0.75, 1.0, 1.0, 1.5, 2.0])
+        price = rng.choice([0.5, 1.0, 1.0, 2.0, 3.0]) * (0.8 + 0.4 * rng.random())
+        specs.append(ResourceSpec(
+            name=f"{site.lower()}-{i:03d}", site=site,
+            chips=rng.choice([1, 1, 2, 4]),
+            perf_factor=perf,
+            slots=1,
+            base_price=price,
+            peak_multiplier=rng.choice([1.0, 1.5, 2.0, 3.0]),
+            mtbf_hours=rng.choice([100.0, 200.0, 400.0, 800.0]),
+            mttr_hours=rng.choice([0.25, 0.5, 1.0]),
+            closed=(rng.random() < 0.2),
+            stage_bw=rng.choice([10e6, 100e6, 1e9]),
+        ))
+    return specs

@@ -1,0 +1,227 @@
+"""Deadline/budget-constrained (DBC) adaptive scheduling — paper §3.
+
+The schedule advisor periodically re-plans against live grid state:
+
+1. *discovery*   — authorized, up resources from the directory (MDS);
+2. *trading*     — price quotes / sealed bids from the trade server;
+3. *rate model*  — jobs/second each resource sustains: roofline-seeded
+   estimate refined by an EMA of measured completions (the paper's
+   "historical information, including job consumption rate");
+4. *selection*   — one of the three classic Nimrod/G strategies:
+
+   * ``cost``          minimize G$ subject to the deadline: cheapest
+                       resources first, just enough aggregate rate;
+   * ``time``          minimize completion time subject to the budget:
+                       add resources cheapest-per-job first while the
+                       rate-weighted projected spend fits the budget;
+   * ``conservative``  like ``cost`` but guarantees every unfinished job
+                       a budget share before committing a dispatch.
+
+As the deadline tightens the cost strategy buys more (and more expensive)
+resources — exactly the paper's Figure 3 behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.economy import Bid, BudgetLedger, TradeServer, UserRequirements
+from repro.core.resources import ResourceDirectory, ResourceSpec
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    interval: float = 120.0          # seconds between advisor wakeups
+    safety: float = 1.15             # aggregate-rate margin over the minimum
+    straggler_factor: float = 2.5    # duplicate when elapsed > f * estimate
+    max_attempts: int = 5
+    rate_ema: float = 0.5            # weight of new measurement
+    min_resources: int = 1
+
+
+@dataclasses.dataclass
+class ResourceView:
+    """Scheduler-local model of one resource."""
+    spec: ResourceSpec
+    est_job_seconds: float           # current duration estimate
+    measured_rate: Optional[float] = None    # jobs/s EMA
+    completions: int = 0
+    failures: int = 0
+    suspected: bool = False
+
+    def rate(self) -> float:
+        if self.measured_rate is not None:
+            return self.measured_rate
+        return self.spec.slots / max(self.est_job_seconds, 1e-9)
+
+    def observe_completion(self, duration: float, ema: float) -> None:
+        r = self.spec.slots / max(duration, 1e-9)
+        self.measured_rate = (r if self.measured_rate is None
+                              else (1 - ema) * self.measured_rate + ema * r)
+        self.est_job_seconds = self.spec.slots / max(self.rate(), 1e-12)
+        self.completions += 1
+        self.suspected = False
+
+
+def cost_per_job(view: ResourceView, price_chip_hour: float) -> float:
+    return price_chip_hour * view.spec.chips * view.est_job_seconds / HOUR
+
+
+@dataclasses.dataclass
+class AllocationDecision:
+    allocate: List[str]
+    release: List[str]
+    projected_rate: float
+    needed_rate: float
+    projected_cost_per_job: float
+    feasible_time: bool
+    feasible_budget: bool
+
+
+class ScheduleAdvisor:
+    """The pluggable scheduling policy (the paper exposes exactly this
+    seam: "a user could build an alternative scheduler by using these
+    APIs")."""
+
+    def __init__(self, cfg: SchedulerConfig, requirements: UserRequirements):
+        self.cfg = cfg
+        self.req = requirements
+
+    # -- selection strategies ------------------------------------------------
+
+    def decide(self, t: float, views: Dict[str, ResourceView],
+               prices: Dict[str, float], remaining_jobs: int,
+               ledger: BudgetLedger, current: Set[str]
+               ) -> AllocationDecision:
+        live = {n: v for n, v in views.items() if not v.suspected}
+        time_left = max(self.req.deadline - t, 1e-6)
+        needed = self.cfg.safety * remaining_jobs / time_left
+
+        ranked = sorted(
+            live, key=lambda n: (cost_per_job(live[n], prices[n]), n))
+        if not ranked:   # transient: everything down/suspected — hold state
+            return AllocationDecision(
+                allocate=[], release=[], projected_rate=0.0,
+                needed_rate=needed, projected_cost_per_job=math.inf,
+                feasible_time=False, feasible_budget=False)
+
+        if self.req.strategy == "time":
+            chosen = self._select_time_opt(ranked, live, prices,
+                                           remaining_jobs, ledger)
+        else:  # cost | conservative share the selection rule
+            chosen = self._select_cost_opt(ranked, live, prices, needed)
+
+        if len(chosen) < self.cfg.min_resources:
+            chosen = set(ranked[:self.cfg.min_resources])
+
+        rate = sum(live[n].rate() for n in chosen)
+        wcost = (sum(live[n].rate() * cost_per_job(live[n], prices[n])
+                     for n in chosen) / rate) if rate > 0 else math.inf
+        return AllocationDecision(
+            allocate=sorted(chosen - current),
+            release=sorted(current - chosen),
+            projected_rate=rate,
+            needed_rate=needed,
+            projected_cost_per_job=wcost,
+            feasible_time=rate + 1e-12 >= remaining_jobs / time_left,
+            feasible_budget=(wcost * remaining_jobs <= ledger.remaining + 1e-9),
+        )
+
+    def _select_cost_opt(self, ranked: Sequence[str],
+                         views: Dict[str, ResourceView],
+                         prices: Dict[str, float], needed: float) -> Set[str]:
+        chosen: Set[str] = set()
+        acc = 0.0
+        for name in ranked:
+            if acc >= needed:
+                break
+            chosen.add(name)
+            acc += views[name].rate()
+        return chosen
+
+    def _select_time_opt(self, ranked: Sequence[str],
+                         views: Dict[str, ResourceView],
+                         prices: Dict[str, float], remaining_jobs: int,
+                         ledger: BudgetLedger) -> Set[str]:
+        chosen: Set[str] = set()
+        rate = 0.0
+        spend_rate = 0.0             # G$/s of the allocation
+        for name in ranked:
+            r = views[name].rate()
+            c = cost_per_job(views[name], prices[name])
+            new_rate = rate + r
+            new_spend = spend_rate + r * c
+            projected = remaining_jobs * (new_spend / new_rate) \
+                if new_rate > 0 else math.inf
+            if projected <= ledger.remaining + 1e-9:
+                chosen.add(name)
+                rate, spend_rate = new_rate, new_spend
+        return chosen
+
+    # -- per-dispatch budget guard -------------------------------------------
+
+    def may_commit(self, est_cost: float, remaining_jobs: int,
+                   ledger: BudgetLedger) -> bool:
+        if not ledger.can_commit(est_cost):
+            return False
+        if self.req.strategy == "conservative" and remaining_jobs > 0:
+            share = ledger.remaining / remaining_jobs
+            return est_cost <= share + 1e-9
+        return True
+
+
+# ---------------------------------------------------------------------------
+# contract mode (paper §3, "second method"): negotiate before running
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ContractQuote:
+    feasible: bool
+    est_completion: float            # absolute virtual time
+    est_cost: float
+    n_resources: int
+    reserved: Tuple[int, ...] = ()   # reservation ids if accepted
+
+
+def negotiate_contract(t: float, req: UserRequirements, n_jobs: int,
+                       trade: TradeServer, views: Dict[str, ResourceView],
+                       accept: bool = False) -> ContractQuote:
+    """Solicit bids, pick the cheapest feasible set, optionally lock it in
+    with advance reservations.  The user can then proceed or renegotiate
+    with a different deadline/budget (exactly the paper's protocol)."""
+    bids = trade.solicit_bids(
+        t, req.user, lambda spec: views[spec.name].est_job_seconds
+        if spec.name in views else 3600.0)
+    time_left = max(req.deadline - t, 1e-6)
+    needed = n_jobs / time_left
+
+    chosen: List[Bid] = []
+    acc = 0.0
+    by_cpj = sorted(
+        bids, key=lambda b: b.chip_hour_price * trade.directory.spec(
+            b.resource).chips / max(b.est_rate, 1e-9))
+    for b in by_cpj:
+        if acc >= needed:
+            break
+        chosen.append(b)
+        acc += b.est_rate / HOUR
+    feasible_time = acc >= needed
+    if acc <= 0:
+        return ContractQuote(False, math.inf, math.inf, 0)
+    completion = t + n_jobs / acc
+    cost = 0.0
+    for b in chosen:
+        share = (b.est_rate / HOUR) / acc * n_jobs
+        spec = trade.directory.spec(b.resource)
+        cost += share * (b.chip_hour_price * spec.chips
+                         * (HOUR / max(b.est_rate, 1e-9)) * spec.slots / HOUR)
+    feasible = feasible_time and cost <= req.budget
+    rids: Tuple[int, ...] = ()
+    if feasible and accept:
+        rids = tuple(
+            trade.reserve(b.resource, req.user, t, req.deadline, t
+                          ).reservation_id for b in chosen)
+    return ContractQuote(feasible, completion, cost, len(chosen), rids)

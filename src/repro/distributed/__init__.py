@@ -1,0 +1,7 @@
+from repro.distributed import sharding
+from repro.distributed.sharding import (base_rules, batch_axes,
+                                        batch_sharding, cache_sharding,
+                                        spec_from_axes, tree_shardings)
+
+__all__ = ["base_rules", "batch_axes", "batch_sharding", "cache_sharding",
+           "sharding", "spec_from_axes", "tree_shardings"]

@@ -1,0 +1,5 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import flash_attention, group_gemm, rglru_scan, wkv
+
+__all__ = ["ops", "ref", "flash_attention", "group_gemm", "rglru_scan",
+           "wkv"]

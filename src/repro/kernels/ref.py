@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, compiled on TPU).  They are deliberately naive — O(S^2)
+attention, sequential scans — favouring obviousness over speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale=None):
+    """q: (B,H,Sq,D), k/v: (B,K,Sk,D) with H % K == 0. fp32 math."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, K, G, Sq, D) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None] + (Sk - Sq)      # align ends (decode-style)
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU oracle: h_t = a_t h_{t-1} + b_t  (sequential scan, fp32)
+# ---------------------------------------------------------------------------
+
+def rglru_ref(log_a, b, h0=None):
+    """log_a, b: (B,S,L) fp32; h0: (B,L) or None. Returns h (B,S,L)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    B, S, L = a.shape
+    h = jnp.zeros((B, L), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (a.transpose(1, 0, 2), bf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV oracle (sequential, fp32)
+# ---------------------------------------------------------------------------
+
+def wkv_ref(r, k, v, logw, u, state0=None):
+    """r,k,v,logw: (B,S,H,N); u: (H,N). Returns (y (B,S,H,N), state (B,H,N,N)).
+
+    y_t = r_t · (S_{t-1} + u ⊙ k_t v_t^T);  S_t = w_t ⊙ S_{t-1} + k_t v_t^T
+    (state indexed [key_dim, value_dim])
+    """
+    B, S, H, N = r.shape
+    f32 = jnp.float32
+    rf, kf, vf = (x.astype(f32).transpose(1, 0, 2, 3) for x in (r, k, v))
+    wf = jnp.exp(logw.astype(f32)).transpose(1, 0, 2, 3)
+    st = (jnp.zeros((B, H, N, N), f32) if state0 is None
+          else state0.astype(f32))
+    uf = u.astype(f32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, st + uf[None, :, :, None] * kv)
+        st = wt[..., None] * st + kv
+        return st, y
+
+    st, ys = jax.lax.scan(step, st, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3), st
+
+
+# ---------------------------------------------------------------------------
+# grouped (per-expert) GEMM oracle
+# ---------------------------------------------------------------------------
+
+def group_gemm_ref(x, w, n_valid):
+    """x: (E,C,D), w: (E,D,F), n_valid: (E,) rows actually used.
+    Rows >= n_valid[e] produce zeros."""
+    E, C, D = x.shape
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    mask = jnp.arange(C)[None, :] < n_valid[:, None]
+    return (out * mask[..., None]).astype(x.dtype)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import pulls in jax —
+# jax locks the device count on first backend initialization.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, lower + compile the right step
+function (train_step / prefill_step / decode_step) against the production
+mesh with ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / collective bytes, and append the roofline
+row to a JSONL cache.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+
+Failures here (sharding mismatch, unsupported collective) are bugs in the
+system — the run aborts loudly.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import (SHAPES, ShapeCfg, cells, get_config, get_shape,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamWConfig
+from repro.roofline import analysis as ra
+from repro.train import steps as steps_mod
+
+CACHE = "benchmarks/results/dryrun_cells.jsonl"
+
+
+def lower_cell(arch: str, shape: ShapeCfg, mesh, *, opt_cfg=None,
+               cfg_override=None):
+    """Returns (lowered, cfg). Pure lowering; no compile."""
+    cfg = cfg_override or get_config(arch)
+    opt_cfg = opt_cfg or AdamWConfig()
+    cs = steps_mod.cell_shardings(cfg, shape, mesh, opt_cfg)
+
+    if shape.kind == "train":
+        fn = steps_mod.make_train_step(cfg, opt_cfg, mesh=mesh)
+        jf = jax.jit(
+            fn,
+            in_shardings=(cs["params_sharding"], cs["opt_sharding"],
+                          cs["batch_sharding"]),
+            out_shardings=(cs["params_sharding"], cs["opt_sharding"], None),
+        )
+        lowered = jf.lower(cs["params"], cs["opt"], cs["batch"])
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, shape.seq_len, mesh=mesh)
+        jf = jax.jit(
+            fn,
+            in_shardings=(cs["params_sharding"], cs["batch_sharding"],
+                          cs["cache_sharding"]),
+            out_shardings=(None, cs["cache_sharding"]),
+        )
+        lowered = jf.lower(cs["params"], cs["batch"], cs["cache"])
+    else:
+        fn = steps_mod.make_decode_step(cfg, mesh=mesh)
+        jf = jax.jit(
+            fn,
+            in_shardings=(cs["params_sharding"], cs["batch_sharding"],
+                          cs["cache_sharding"]),
+            out_shardings=(None, cs["cache_sharding"]),
+        )
+        lowered = jf.lower(cs["params"], cs["batch"], cs["cache"])
+    return lowered, cfg
+
+
+def run_cell(arch: str, shape: ShapeCfg, *, multi_pod: bool = False,
+             verbose: bool = True, cfg_override=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    with mesh:
+        lowered, cfg = lower_cell(arch, shape, mesh,
+                                  cfg_override=cfg_override)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cell = ra.cell_from_compiled(arch, shape, mesh_name, chips, cfg, compiled)
+    row = cell.row()
+    row["t_lower_s"] = round(t_lower, 2)
+    row["t_compile_s"] = round(t_compile, 2)
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"--- {arch} x {shape.name} on {mesh_name} ---")
+        print(f"memory_analysis: {ma}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        keep = {k: v for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals")}
+        print(f"cost_analysis: {keep}")
+        print(f"collectives: {row['coll_breakdown']}")
+        print(f"terms: compute={ra.fmt_seconds(row['t_compute_s'])} "
+              f"memory={ra.fmt_seconds(row['t_memory_s'])} "
+              f"collective={ra.fmt_seconds(row['t_collective_s'])} "
+              f"bottleneck={row['bottleneck']} "
+              f"MFU_ub={row['mfu_upper_bound']:.2%}")
+        print(f"lower={t_lower:.1f}s compile={t_compile:.1f}s", flush=True)
+    return row
+
+
+def _load_cache(path: str) -> dict:
+    done = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                done[(r["arch"], r["shape"], r["mesh"])] = r
+    return done
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cache", default=CACHE)
+    ap.add_argument("--refresh", action="store_true",
+                    help="recompute cells already in the cache")
+    args = ap.parse_args(argv)
+
+    os.makedirs(os.path.dirname(args.cache), exist_ok=True)
+    done = {} if args.refresh else _load_cache(args.cache)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    todo = []
+    if args.all:
+        for arch, shape, ok in cells(include_skipped=True):
+            for mp in meshes:
+                todo.append((arch, shape, mp, ok))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        shape = get_shape(args.shape)
+        for mp in meshes:
+            todo.append((args.arch, shape,
+                         mp, shape_applicable(args.arch, shape)))
+
+    failures = []
+    for arch, shape, mp, ok in todo:
+        mesh_name = "2x16x16" if mp else "16x16"
+        key = (arch, shape.name, mesh_name)
+        if key in done:
+            print(f"skip (cached): {key}")
+            continue
+        if not ok:
+            row = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                   "skipped": True,
+                   "reason": "long_500k needs sub-quadratic attention "
+                             "(pure full-attention arch; DESIGN.md §4)"}
+            with open(args.cache, "a") as f:
+                f.write(json.dumps(row) + "\n")
+            print(f"SKIP {key}: {row['reason']}")
+            continue
+        try:
+            row = run_cell(arch, shape, multi_pod=mp)
+            with open(args.cache, "a") as f:
+                f.write(json.dumps(row) + "\n")
+        except Exception:
+            print(f"FAILED {key}")
+            traceback.print_exc()
+            failures.append(key)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        return 1
+    print("\nall requested cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,152 @@
+"""Nimrod/G over the TPU fleet: submit an (arch x hyper-parameter) sweep
+as a grid experiment with a deadline and a budget.
+
+This is where the paper meets the roofline machinery: each job's duration
+estimate on a TPU slice comes from the dry-run's roofline terms
+(step_time lower bound x steps), refined online by the scheduler's
+measured consumption rates.  Pods are priced per chip-hour by their
+owners; the DBC strategy picks the fleet subset.
+
+    PYTHONPATH=src python -m repro.launch.grid_submit \
+        --deadline-hours 12 --budget 50000 --strategy cost
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.core import (Dispatcher, NimrodG, Journal, PriceSchedule,
+                        ResourceDirectory, ResourceSpec, SimulatedExecutor,
+                        Simulator, TradeServer, UserRequirements, parse_plan)
+from repro.roofline.analysis import PEAK_FLOPS
+
+HOUR = 3600.0
+DRYRUN_CACHE = "benchmarks/results/dryrun_cells.jsonl"
+
+
+def tpu_fleet(n_pods: int = 24, seed: int = 0):
+    """A fleet of TPU v5e pods across sites with owner-set prices."""
+    import random
+    rng = random.Random(seed)
+    sites = ("us-central", "us-east", "europe-west", "asia-ne")
+    specs = []
+    for i in range(n_pods):
+        chips = rng.choice([64, 128, 256, 256])
+        specs.append(ResourceSpec(
+            name=f"pod-{sites[i % 4]}-{i:02d}", site=sites[i % 4],
+            chips=chips,
+            peak_flops_per_chip=PEAK_FLOPS,
+            perf_factor=rng.choice([0.85, 1.0, 1.0, 1.1]),
+            slots=1,
+            base_price=0.4 * chips * rng.choice([0.8, 1.0, 1.3]) / 64,
+            peak_multiplier=rng.choice([1.0, 1.5, 2.0]),
+            mtbf_hours=rng.choice([150.0, 300.0, 600.0]),
+            mttr_hours=0.5,
+            closed=(rng.random() < 0.25),
+            stage_bw=rng.choice([1e9, 10e9]),
+        ))
+    return specs
+
+
+def load_step_time_lb(cache: str = DRYRUN_CACHE) -> Dict[str, float]:
+    """arch -> roofline step-time lower bound (s) for train_4k on 16x16."""
+    out: Dict[str, float] = {}
+    if not os.path.exists(cache):
+        return out
+    with open(cache) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("skipped") or r.get("shape") != "train_4k" or \
+                    r.get("mesh") != "16x16":
+                continue
+            out[r["arch"]] = max(r["t_compute_s"], r["t_memory_s"],
+                                 r["t_collective_s"])
+    return out
+
+
+def est_seconds_fn(step_lbs: Dict[str, float], steps_per_job: int,
+                   efficiency: float = 0.35):
+    """Roofline LB -> wall estimate on a reference 256-chip pod."""
+    def est(point) -> float:
+        arch = point.get("arch", "gemma3-1b")
+        lb = step_lbs.get(arch, 0.5)
+        return steps_per_job * lb / efficiency
+    return est
+
+
+def build_sweep_plan(archs=None, lrs=(1e-3, 3e-4, 1e-4), seeds=(0, 1)):
+    archs = archs or list(ARCH_IDS)
+    arch_list = " ".join(f'"{a}"' for a in archs)
+    lr_list = " ".join(str(v) for v in lrs)
+    seed_hi = len(seeds) - 1
+    return parse_plan(f"""
+parameter arch text select anyof {arch_list}
+parameter lr float select anyof {lr_list}
+parameter seed integer range from 0 to {seed_hi} step 1
+task main
+    copy dataset.idx node:.
+    execute python -m repro.launch.train --arch $arch --lr $lr --seed $seed
+    copy node:metrics.json results/$jobname.json
+endtask
+""")
+
+
+def run_grid(deadline_hours: float = 12.0, budget: float = 50_000.0,
+             strategy: str = "cost", steps_per_job: int = 2000,
+             n_pods: int = 24, seed: int = 0,
+             journal_path: Optional[str] = None, verbose: bool = True):
+    directory = ResourceDirectory()
+    for spec in tpu_fleet(n_pods, seed=seed):
+        directory.register(spec)
+    schedules = {n: PriceSchedule(directory.spec(n), spot_amplitude=0.15,
+                                  phase=hash(n) % 24)
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    executor = SimulatedExecutor(sim, directory, seed=seed)
+    disp = Dispatcher(executor, directory)
+
+    plan = build_sweep_plan()
+    step_lbs = load_step_time_lb()
+    req = UserRequirements(deadline=deadline_hours * HOUR, budget=budget,
+                           strategy=strategy)
+    journal = Journal(journal_path) if journal_path else None
+    eng = NimrodG.from_plan(
+        "arch-sweep", plan, req, directory, trade, disp,
+        est_seconds=est_seconds_fn(step_lbs, steps_per_job),
+        stage_in_bytes=2_000_000_000,   # dataset shard + container
+        stage_out_bytes=50_000_000,
+        sim=sim, journal=journal, seed=seed)
+    report = eng.run_simulated()
+    if verbose:
+        print(report.summary())
+        used = sorted(report.resources_used)
+        print(f"pods used ({len(used)}): {', '.join(used[:8])}"
+              + (" ..." if len(used) > 8 else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--deadline-hours", type=float, default=12.0)
+    ap.add_argument("--budget", type=float, default=50_000.0)
+    ap.add_argument("--strategy", default="cost",
+                    choices=("cost", "time", "conservative"))
+    ap.add_argument("--steps-per-job", type=int, default=2000)
+    ap.add_argument("--n-pods", type=int, default=24)
+    ap.add_argument("--journal", default=None)
+    args = ap.parse_args(argv)
+    run_grid(args.deadline_hours, args.budget, args.strategy,
+             args.steps_per_job, args.n_pods, journal_path=args.journal)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,134 @@
+"""Training driver (single-process; any arch at smoke or full scale).
+
+Real training on the local device(s) with the full substrate: synthetic
+data pipeline, AdamW + cosine schedule, sharded checkpoint save/restore
+with exact data-position resume — the per-job payload the Nimrod/G grid
+schedules and restarts.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+        --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/run1 --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step_dir, load_metadata, restore, save
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, abstract_opt_state, init_opt_state
+from repro.train.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps: int
+    final_loss: float
+    losses: list
+    tokens_per_sec: float
+    restored_from: Optional[str] = None
+
+
+def run_training(arch: str, *, smoke: bool = True, steps: int = 50,
+                 batch: int = 8, seq: int = 256, lr: float = 1e-3,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 seed: int = 0, log_every: int = 10,
+                 quantized_moments: bool = False,
+                 verbose: bool = True) -> TrainResult:
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    mesh = make_local_mesh()
+    opt_cfg = AdamWConfig(lr=lr, quantized_moments=quantized_moments)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+        seed=seed, input_kind=cfg.input_kind, d_model=cfg.d_model))
+
+    start_step = 0
+    restored_from = None
+    params = opt_state = None
+    if ckpt_dir:
+        last = latest_step_dir(ckpt_dir)
+        if last is not None:
+            meta = load_metadata(last)
+            start_step = int(meta["step"])
+            aparams = tfm.abstract_model(cfg)
+            params = restore(os.path.join(last, "params"), aparams)
+            aopt = abstract_opt_state(aparams, opt_cfg)
+            opt_state = restore(os.path.join(last, "opt"), aopt)
+            restored_from = last
+            if verbose:
+                print(f"restored step {start_step} from {last}")
+    if params is None:
+        params = tfm.init_model(cfg, jax.random.PRNGKey(seed))
+        opt_state = init_opt_state(params, opt_cfg)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, mesh=mesh,
+                                      total_steps=max(steps, 100)))
+    losses = []
+    t0 = time.time()
+    tokens = 0
+    for step in range(start_step, steps):
+        b = data.batch(step)
+        batch_dev = {k: jax.numpy.asarray(v) for k, v in b.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        tokens += batch * seq
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f}", flush=True)
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"loss diverged at step {step}")
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            d = os.path.join(ckpt_dir, f"step_{step + 1:07d}")
+            save(os.path.join(d, "params"), params,
+                 metadata={"step": step + 1, "arch": arch})
+            save(os.path.join(d, "opt"), opt_state,
+                 metadata={"step": step + 1})
+            with open(os.path.join(d, "manifest.json"), "w") as f:
+                json.dump({"metadata": {"step": step + 1, "arch": arch},
+                           "entries": [], "crcs": {}}, f)
+            if verbose:
+                print(f"checkpointed -> {d}")
+    dt = max(time.time() - t0, 1e-9)
+    return TrainResult(steps=steps - start_step,
+                       final_loss=losses[-1] if losses else float("nan"),
+                       losses=losses,
+                       tokens_per_sec=tokens / dt,
+                       restored_from=restored_from)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quantized-moments", action="store_true")
+    args = ap.parse_args(argv)
+    r = run_training(args.arch, smoke=args.smoke, steps=args.steps,
+                     batch=args.batch, seq=args.seq, lr=args.lr,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     seed=args.seed,
+                     quantized_moments=args.quantized_moments)
+    print(f"done: {r.steps} steps, final_loss={r.final_loss:.4f}, "
+          f"{r.tokens_per_sec:,.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,168 @@
+"""Shared model machinery.
+
+Single source of truth for parameters is a *spec tree*: a pytree whose
+leaves are :class:`ParamSpec`.  From the same spec tree we derive
+
+* ``init_params``      — materialized random arrays (trainable state),
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run),
+* ``param_axes``       — logical-axis name tuples (sharding),
+
+so shapes, shardings and initialization can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    init: str = "fan_in"                     # fan_in | zeros | ones | normal | rglru_a
+    fan_dims: Tuple[int, ...] = (0,)         # dims that count as fan-in
+    scale: float = 1.0
+    dtype: Optional[str] = None              # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_init(key, spec: ParamSpec, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype or dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(dt)
+    if spec.init == "rglru_a":
+        # Griffin: a = exp(-c * softplus(Λ)), init so a^c uniform in [0.9, 0.999]
+        u = jax.random.uniform(key, spec.shape, minval=0.9, maxval=0.999)
+        # store Λ such that sigmoid-ish param recovers; we keep raw in (0,1) logit
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))   # inverse softplus
+        return lam.astype(dt)
+    if spec.init == "fan_in":
+        fan = float(np.prod([spec.shape[d] for d in spec.fan_dims])) or 1.0
+        std = spec.scale / np.sqrt(fan)
+        return (std * jax.random.normal(key, spec.shape)).astype(dt)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(spec_tree, key, dtype: str):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_leaf_init(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(spec_tree, dtype: str):
+    def f(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype))
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+def param_axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = None):
+    """Add a leading (scan) dimension of size n to every leaf spec."""
+    def f(s: ParamSpec):
+        return dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes,
+            fan_dims=tuple(d + 1 for d in s.fan_dims))
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def constrain_batch(x, mesh, seq_shard: bool = False,
+                    vocab_last: bool = False):
+    """Pin activation sharding: batch over (pod,data) on dim 0; optionally
+    seq over "model" on dim 1 (context parallelism) or vocab over "model"
+    on the last dim; everything else replicated (stops SPMD from inventing
+    partial shardings that force involuntary collectives)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not baxes:
+        return x
+    n = 1
+    for a in baxes:
+        n *= mesh.shape[a]
+    if x.ndim == 0 or x.shape[0] % n or n == 1:
+        return x
+    parts = [baxes if len(baxes) > 1 else baxes[0]] + [None] * (x.ndim - 1)
+    nm = mesh.shape.get("model", 1)
+    if seq_shard and x.ndim >= 2 and nm > 1 and x.shape[1] % nm == 0 \
+            and x.shape[1] > 1:
+        parts[1] = "model"
+    elif vocab_last and x.ndim >= 3 and "model" in mesh.axis_names and \
+            x.shape[-1] % nm == 0:
+        parts[-1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def rms_norm(x, weight, eps: float, zero_centered: bool = True):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    w = 1.0 + w if zero_centered else w
+    return (x * w).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+# -- rotary ----------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return rot, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot, inv = rope_freqs(d, theta, fraction)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions.astype(jnp.float32)[..., None] * inv          # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)

@@ -1,0 +1,35 @@
+"""Dense feed-forward variants: SwiGLU / GeGLU / GELU / squared-ReLU,
+plus the RWKV channel-mix (which lives in rwkv6.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, activation
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None,
+              mlp_axis: str = "mlp") -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    gated = cfg.mlp in ("swiglu", "geglu")
+    sp = {
+        "w_up": ParamSpec((d, f), ("embed", mlp_axis)),
+        "w_down": ParamSpec((f, d), (mlp_axis, "embed")),
+    }
+    if gated:
+        sp["w_gate"] = ParamSpec((d, f), ("embed", mlp_axis))
+    return sp
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x):
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * up
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(dt)) * up
+    else:
+        h = activation(cfg.mlp)(up)
+    return h @ p["w_down"].astype(dt)

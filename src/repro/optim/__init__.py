@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, OptState, abstract_opt_state,
+                               apply_updates, global_norm, init_opt_state)
+from repro.optim.schedule import constant, linear_warmup_cosine
+
+__all__ = ["AdamWConfig", "OptState", "abstract_opt_state", "apply_updates",
+           "global_norm", "init_opt_state", "constant",
+           "linear_warmup_cosine"]

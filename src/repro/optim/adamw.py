@@ -1,0 +1,122 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and optional
+int8 block-quantized moments (distributed-optimization memory trick; the
+quantized states shard exactly like the params, ZeRO-style via FSDP)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized_moments: bool = False   # int8 m/v with per-block scales
+    qblock: int = 256
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+# -- int8 moment quantization ------------------------------------------------
+
+def _is_q(x) -> bool:
+    return isinstance(x, dict) and "q" in x and "s" in x
+
+
+def _q8(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _dq8(qd, shape):
+    out = (qd["q"].astype(jnp.float32) * qd["s"]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape)
+
+
+def _moment_zeros(p, quantized, block):
+    z = jnp.zeros_like(p, jnp.float32)
+    return _q8(z, block) if quantized else z
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: _moment_zeros(p, cfg.quantized_moments, cfg.qblock)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def abstract_opt_state(abstract_params, cfg: AdamWConfig) -> OptState:
+    def zeros(p):
+        if not cfg.quantized_moments:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        n = 1
+        for s in p.shape:
+            n *= s
+        rows = -(-n // cfg.qblock)
+        return {"q": jax.ShapeDtypeStruct((rows, cfg.qblock), jnp.int8),
+                "s": jax.ShapeDtypeStruct((rows, 1), jnp.float32)}
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=jax.tree.map(zeros, abstract_params),
+                    v=jax.tree.map(zeros, abstract_params))
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig,
+                  lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.asarray(1.0, jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = _dq8(m, p.shape) if _is_q(m) else m
+        vf = _dq8(v, p.shape) if _is_q(v) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        new_m = _q8(mf, cfg.qblock) if _is_q(m) else mf
+        new_v = _q8(vf, cfg.qblock) if _is_q(v) else vf
+        return new_p, new_m, new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}

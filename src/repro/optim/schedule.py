@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, warmup: int, total: int,
+                         min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)

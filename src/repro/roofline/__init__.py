@@ -1,0 +1,6 @@
+from repro.roofline import analysis
+from repro.roofline.analysis import (RooflineCell, cell_from_compiled,
+                                     collective_bytes, model_flops_for, table)
+
+__all__ = ["RooflineCell", "analysis", "cell_from_compiled",
+           "collective_bytes", "model_flops_for", "table"]

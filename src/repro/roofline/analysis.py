@@ -1,0 +1,216 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+    compute    = HLO_FLOPs_global   / (chips * 197e12)
+    memory     = HLO_bytes_global   / (chips * 819e9)
+    collective = coll_bytes_global  / (chips * 50e9)
+
+``compiled.cost_analysis()`` reports per-device numbers for the SPMD
+program; we scale by chip count so the table shows global quantities (the
+two conventions give identical *terms*).  Collective bytes are not in
+cost_analysis: we parse the post-partitioning HLO and sum operand bytes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+ops (per-device, scaled to global the same way).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^=]*?)"
+    r"\s*([\w\-]+)\(", re.ASCII)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (result sizes)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        # normalize fusions like "all-reduce-start"
+        base = None
+        for k in _COLLECTIVES:
+            if opname == k or opname.startswith(k + "-"):
+                if opname.endswith("-done"):
+                    base = None   # avoid double count of async pairs
+                else:
+                    base = k
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(result_type)
+        counts[base] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float            # HLO flops, all chips
+    bytes_global: float            # HLO bytes accessed, all chips
+    coll_bytes_global: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float             # 6*N*D (active params for MoE)
+    peak_memory_per_chip: int = 0  # from memory_analysis
+    argument_size_per_chip: int = 0
+    output_size_per_chip: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_global / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time (max of the three terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """MODEL_FLOPS / (chips*peak*step_time_lb): roofline MFU."""
+        t = self.step_time_lb
+        return (self.model_flops / (self.chips * PEAK_FLOPS * t)) if t else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "bytes_global": self.bytes_global,
+            "coll_bytes_global": self.coll_bytes_global,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "argument_size_per_chip": self.argument_size_per_chip,
+            "output_size_per_chip": self.output_size_per_chip,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D training FLOPs / 2*N*D inference FLOPs (active params)."""
+    n_active = cfg.active_param_count()
+    d_tokens = shape.tokens_per_step
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * d_tokens
+
+
+def cell_from_compiled(arch: str, shape, mesh_name: str, chips: int,
+                       cfg, compiled) -> RooflineCell:
+    from repro.roofline import hlo_cost
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    # loop-aware analysis (XLA's cost_analysis counts while bodies once)
+    cost = hlo_cost.analyze(hlo)
+    flops_dev = cost.flops
+    bytes_dev = cost.bytes
+    coll = {k: int(v) for k, v in cost.coll.items()}
+    coll.update({f"n_{k}": int(v) for k, v in cost.coll_count.items()})
+    coll["xla_raw_flops"] = float(ca.get("flops", 0.0))
+    coll["xla_raw_bytes"] = float(ca.get("bytes accessed", 0.0))
+    coll_dev = cost.coll_bytes
+    ma = compiled.memory_analysis()
+    peak = getattr(ma, "temp_size_in_bytes", 0) or 0
+    argb = getattr(ma, "argument_size_in_bytes", 0) or 0
+    outb = getattr(ma, "output_size_in_bytes", 0) or 0
+    return RooflineCell(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_global=flops_dev * chips,
+        bytes_global=bytes_dev * chips,
+        coll_bytes_global=coll_dev * chips,
+        coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape),
+        peak_memory_per_chip=int(peak),
+        argument_size_per_chip=int(argb),
+        output_size_per_chip=int(outb),
+    )
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<20} {'shape':<12} {'mesh':<6} {'compute':>10} "
+           f"{'memory':>10} {'collective':>10} {'bottleneck':>11} "
+           f"{'useful':>7} {'MFU_ub':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<6} "
+            f"{fmt_seconds(r['t_compute_s']):>10} "
+            f"{fmt_seconds(r['t_memory_s']):>10} "
+            f"{fmt_seconds(r['t_collective_s']):>10} "
+            f"{r['bottleneck']:>11} "
+            f"{r['useful_flops_fraction']:>7.2f} "
+            f"{r['mfu_upper_bound']:>7.2%}")
+    return "\n".join(lines)

@@ -1,0 +1,8 @@
+from repro.train import steps
+from repro.train.steps import (cell_shardings, cross_entropy, input_specs,
+                               loss_fn, make_decode_step, make_prefill_step,
+                               make_train_step)
+
+__all__ = ["cell_shardings", "cross_entropy", "input_specs", "loss_fn",
+           "make_decode_step", "make_prefill_step", "make_train_step",
+           "steps"]

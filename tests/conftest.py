@@ -1,0 +1,15 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# flag before importing jax; never set it globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def local_mesh():
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh()

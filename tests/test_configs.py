@@ -1,0 +1,68 @@
+"""Config integrity: the 40-cell table, parameter counts, stack plans."""
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, all_configs, cells, get_config,
+                           shape_applicable, smoke_config)
+
+
+def test_ten_archs_registered():
+    assert len(ARCH_IDS) == 10
+
+
+def test_cell_table_is_40():
+    assert sum(1 for _ in cells(include_skipped=True)) == 40
+
+
+def test_long_context_skips_are_the_documented_six():
+    skipped = [a for a, s, ok in cells(include_skipped=True) if not ok]
+    assert len(skipped) == 6
+    assert set(skipped) == {"stablelm-1.6b", "nemotron-4-15b",
+                            "musicgen-medium", "deepseek-v2-236b",
+                            "kimi-k2-1t-a32b", "llava-next-34b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_stack_plan_covers_all_layers(arch):
+    cfg = get_config(arch)
+    pro, n, epi = cfg.stack_plan()
+    assert len(pro) + n * cfg.period + len(epi) == cfg.num_layers
+    assert len(cfg.expanded_kinds()) == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("gemma3-1b", 0.8e9, 1.4e9),
+    ("gemma3-27b", 22e9, 32e9),
+    ("stablelm-1.6b", 1.2e9, 2.1e9),
+    ("nemotron-4-15b", 12e9, 18e9),
+    ("recurrentgemma-2b", 2.0e9, 3.3e9),
+    ("musicgen-medium", 1.2e9, 2.2e9),
+    ("deepseek-v2-236b", 200e9, 260e9),
+    ("kimi-k2-1t-a32b", 0.9e12, 1.2e12),
+    ("llava-next-34b", 30e9, 38e9),
+    ("rwkv6-3b", 2.6e9, 3.6e9),
+])
+def test_param_counts_match_model_class(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B outside [{lo / 1e9}, {hi / 1e9}]B"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "kimi-k2-1t-a32b"])
+def test_moe_active_params_much_smaller(arch):
+    cfg = get_config(arch)
+    assert cfg.active_param_count() < 0.12 * cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_is_tiny_same_family(arch):
+    full, sm = get_config(arch), smoke_config(arch)
+    assert sm.family == full.family
+    assert sm.layer_pattern == full.layer_pattern
+    assert (sm.moe is None) == (full.moe is None)
+    assert (sm.mla is None) == (full.mla is None)
+    assert sm.param_count() < 10_000_000
+
+
+def test_tokens_per_step():
+    assert SHAPES["train_4k"].tokens_per_step == 4096 * 256
+    assert SHAPES["decode_32k"].tokens_per_step == 128
+    assert SHAPES["long_500k"].tokens_per_step == 1

@@ -1,0 +1,98 @@
+"""Computational-economy machinery: prices, bids, reservations, ledger."""
+import math
+
+import pytest
+
+from repro.core import (BudgetLedger, PriceSchedule, ResourceDirectory,
+                        ResourceSpec, TradeServer)
+
+HOUR = 3600.0
+
+
+def _spec(name="r0", price=2.0, peak=2.0, chips=4):
+    return ResourceSpec(name=name, site="s", chips=chips, base_price=price,
+                        peak_multiplier=peak)
+
+
+def test_peak_offpeak_pricing():
+    ps = PriceSchedule(_spec())
+    off = ps.chip_hour_price(2 * HOUR)           # 02:00 local
+    on = ps.chip_hour_price(12 * HOUR)           # 12:00 local
+    assert on == pytest.approx(off * 2.0)
+
+
+def test_per_user_price_discrimination():
+    ps = PriceSchedule(_spec(), user_factors={"vip": 0.5, "rival": 3.0})
+    t = 2 * HOUR
+    base = ps.chip_hour_price(t)
+    assert ps.chip_hour_price(t, "vip") == pytest.approx(0.5 * base)
+    assert ps.chip_hour_price(t, "rival") == pytest.approx(3.0 * base)
+    assert ps.chip_hour_price(t, "anon") == pytest.approx(base)
+
+
+def test_spot_fluctuation_bounded_and_deterministic():
+    ps = PriceSchedule(_spec(), spot_amplitude=0.2)
+    xs = [ps.chip_hour_price(t * 60.0) for t in range(0, 600)]
+    base = _spec().base_price
+    assert all(0.8 * base - 1e-9 <= x <= 2.0 * 1.2 * base + 1e-9 for x in xs)
+    assert xs == [PriceSchedule(_spec(), spot_amplitude=0.2)
+                  .chip_hour_price(t * 60.0) for t in range(0, 600)]
+
+
+def test_job_cost_scales_with_chips_and_time():
+    ps = PriceSchedule(_spec(price=1.0, peak=1.0, chips=8))
+    assert ps.job_cost(0.0, HOUR) == pytest.approx(8.0)
+    assert ps.job_cost(0.0, HOUR / 2) == pytest.approx(4.0)
+
+
+def _trade(n=4):
+    d = ResourceDirectory()
+    for i in range(n):
+        d.register(_spec(f"r{i}", price=1.0 + i, peak=1.0))
+    scheds = {f"r{i}": PriceSchedule(d.spec(f"r{i}")) for i in range(n)}
+    return TradeServer(d, scheds), d
+
+
+def test_bids_sorted_by_price():
+    trade, d = _trade()
+    bids = trade.solicit_bids(0.0, "u", lambda s: 600.0)
+    assert [b.chip_hour_price for b in bids] == sorted(
+        b.chip_hour_price for b in bids)
+    assert all(b.est_rate == pytest.approx(6.0) for b in bids)
+
+
+def test_reservation_locks_price():
+    trade, d = _trade()
+    r = trade.reserve("r0", "u", start=0.0, end=10 * HOUR, t=0.0)
+    # owner hikes the price later (peak hours) — reserved user keeps it
+    locked = trade.effective_price("r0", "u", 12 * HOUR)
+    assert locked == pytest.approx(r.locked_price)
+    # other users pay the live price
+    assert trade.effective_price("r0", "other", 12 * HOUR) >= locked
+    assert trade.cancel(r.reservation_id)
+    assert trade.reserved_price("r0", "u", 5 * HOUR) is None
+
+
+def test_directory_authorization_and_filters():
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="open", site="a", chips=2))
+    d.register(ResourceSpec(name="closed", site="b", chips=8,
+                            authorized_users=("alice",)))
+    assert [s.name for s in d.discover("bob")] == ["open"]
+    assert {s.name for s in d.discover("alice")} == {"closed", "open"}
+    assert [s.name for s in d.discover("alice", min_chips=4)] == ["closed"]
+    assert [s.name for s in d.discover("alice", site="a")] == ["open"]
+    d.status("open").up = False
+    assert [s.name for s in d.discover("alice")] == ["closed"]
+
+
+def test_budget_ledger_commit_settle_cycle():
+    led = BudgetLedger(budget=100.0)
+    assert led.can_commit(60.0)
+    led.commit(60.0)
+    assert not led.can_commit(50.0)
+    assert led.can_commit(40.0)
+    led.settle(60.0, 55.0)          # actual cheaper than committed
+    assert led.settled == pytest.approx(55.0)
+    assert led.committed == pytest.approx(0.0)
+    assert led.remaining == pytest.approx(45.0)

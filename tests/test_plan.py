@@ -1,0 +1,73 @@
+"""The declarative parametric plan language."""
+import pytest
+
+from repro.core.plan import PlanError, parse_plan, substitute
+
+
+GOOD = """
+# ionization study
+parameter angle float range from 0.5 to 2.0 step 0.5
+parameter mesh integer range from 1 to 3 step 1
+parameter solver text select anyof "cg" "gmres"
+parameter tag text default "v1"
+task main
+    copy model.bin node:.
+    execute sim --angle $angle --mesh $mesh --solver $solver --tag ${tag}
+    copy node:out.dat results/$jobname.dat
+endtask
+"""
+
+
+def test_parse_and_cross_product():
+    p = parse_plan(GOOD)
+    assert [q.name for q in p.parameters] == ["angle", "mesh", "solver", "tag"]
+    assert p.parameters[0].values == (0.5, 1.0, 1.5, 2.0)
+    assert p.parameters[1].values == (1, 2, 3)
+    assert p.parameters[2].values == ("cg", "gmres")
+    assert p.n_jobs() == 4 * 3 * 2 * 1
+    pts = p.points()
+    assert len(pts) == 24
+    assert pts[0] == {"angle": 0.5, "mesh": 1, "solver": "cg", "tag": "v1"}
+    assert len({tuple(sorted(pt.items())) for pt in pts}) == 24  # unique
+
+
+def test_substitution():
+    p = parse_plan(GOOD)
+    step = p.task[1]
+    out = substitute(step, {"angle": 0.5, "mesh": 2, "solver": "cg",
+                            "tag": "v1"}, "j00001")
+    assert "--angle 0.5" in " ".join(out.args)
+    assert "${tag}" not in " ".join(out.args)
+    out2 = substitute(p.task[2], {"angle": 1.0, "mesh": 1, "solver": "cg",
+                                  "tag": "v1"}, "j00042")
+    assert out2.args[-1] == "results/j00042.dat"
+
+
+def test_stage_direction_detection():
+    p = parse_plan(GOOD)
+    assert p.task[0].is_stage_in
+    assert p.task[2].is_stage_out
+    assert not p.task[1].is_stage_in
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("task main\nexecute x\nendtask", "no parameters"),
+    ("parameter a float range from 0 to 1 step 0.5", "no task"),
+    ("parameter a float range from 0 to 1 step -1\ntask t\nexecute x\nendtask",
+     "step must be positive"),
+    ("parameter a blob default 3\ntask t\nexecute x\nendtask", "unknown type"),
+    ("parameter a float default 1\nparameter a float default 2\n"
+     "task t\nexecute x\nendtask", "duplicate"),
+    ("parameter a float default 1\ntask t\nexecute x", "unterminated"),
+    ("parameter a float default 1\nfrobnicate\ntask t\nexecute x\nendtask",
+     "unknown directive"),
+])
+def test_parse_errors(bad, msg):
+    with pytest.raises(PlanError, match=msg):
+        parse_plan(bad)
+
+
+def test_undefined_variable_raises():
+    p = parse_plan(GOOD)
+    with pytest.raises(PlanError, match="undefined"):
+        substitute(p.task[1], {"angle": 1.0}, "j0")

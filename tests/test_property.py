@@ -1,0 +1,200 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.economy import BudgetLedger, PriceSchedule
+from repro.core.plan import parse_plan
+from repro.core.resources import ResourceSpec
+from repro.core.scheduler import (ResourceView, ScheduleAdvisor,
+                                  SchedulerConfig, cost_per_job)
+from repro.core.economy import UserRequirements
+from repro.kernels import ops, ref
+from repro.roofline.hlo_cost import _parse_rhs, _type_bytes
+
+HOUR = 3600.0
+COMMON = dict(deadline=None, max_examples=25)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def grids(draw):
+    n = draw(st.integers(2, 12))
+    views, prices = {}, {}
+    for i in range(n):
+        name = f"r{i}"
+        spec = ResourceSpec(
+            name=name, site="s",
+            chips=draw(st.integers(1, 8)),
+            perf_factor=draw(st.floats(0.25, 4.0)),
+            base_price=draw(st.floats(0.1, 5.0)),
+            slots=draw(st.integers(1, 3)))
+        views[name] = ResourceView(
+            spec=spec, est_job_seconds=draw(st.floats(60.0, 7200.0)))
+        prices[name] = draw(st.floats(0.05, 10.0))
+    return views, prices
+
+
+@given(grids(), st.integers(1, 500), st.floats(0.5, 48.0),
+       st.floats(10.0, 1e6),
+       st.sampled_from(["cost", "time", "conservative"]))
+@settings(**COMMON)
+def test_decision_invariants(grid, n_jobs, deadline_h, budget, strategy):
+    views, prices = grid
+    adv = ScheduleAdvisor(SchedulerConfig(),
+                          UserRequirements(deadline=deadline_h * HOUR,
+                                           budget=budget, strategy=strategy))
+    led = BudgetLedger(budget=budget)
+    d = adv.decide(0.0, views, prices, n_jobs, led, set())
+    chosen = set(d.allocate)
+    # allocations are real resources, no duplicates with releases
+    assert chosen <= set(views)
+    assert not (chosen & set(d.release))
+    assert d.projected_rate >= 0
+    # cost strategy: chosen set is a prefix of the cheapest-per-job ranking
+    if strategy in ("cost", "conservative") and chosen:
+        ranked = sorted(views, key=lambda n: (cost_per_job(views[n],
+                                                           prices[n]), n))
+        k = len(chosen)
+        assert chosen == set(ranked[:k])
+    # time strategy never projects spend over budget — except the
+    # min_resources floor (the engine never idles entirely; the ledger's
+    # per-dispatch commit guard is the hard budget wall, tested below)
+    if strategy == "time" and len(chosen) > SchedulerConfig().min_resources \
+            and math.isfinite(d.projected_cost_per_job):
+        assert d.projected_cost_per_job * n_jobs <= budget * 1.001 + 1e-6
+
+
+@given(grids(), st.integers(1, 300), st.floats(1.0, 24.0),
+       st.floats(100.0, 1e5))
+@settings(**COMMON)
+def test_tighter_deadline_never_fewer_resources(grid, n_jobs, dl_h, budget):
+    views, prices = grid
+    led = BudgetLedger(budget=budget)
+    def n_chosen(hours):
+        adv = ScheduleAdvisor(SchedulerConfig(),
+                              UserRequirements(deadline=hours * HOUR,
+                                               budget=budget,
+                                               strategy="cost"))
+        return len(adv.decide(0.0, views, prices, n_jobs, led,
+                              set()).allocate)
+    assert n_chosen(dl_h) >= n_chosen(dl_h * 2)   # Figure 3, as a law
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 100.0), st.floats(0.0, 100.0)),
+                min_size=1, max_size=40),
+       st.floats(1.0, 1e4))
+@settings(**COMMON)
+def test_ledger_never_negative(ops_list, budget):
+    led = BudgetLedger(budget=budget)
+    for commit, actual in ops_list:
+        if led.can_commit(commit):
+            led.commit(commit)
+            led.settle(commit, min(actual, commit))
+    assert led.settled <= budget + 1e-6
+    assert led.committed >= -1e-9
+    assert led.remaining >= -1e-6
+
+
+# ---------------------------------------------------------------------------
+# economy
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.1, 10.0), st.floats(1.0, 4.0), st.integers(1, 256),
+       st.floats(0.0, 72.0))
+@settings(**COMMON)
+def test_price_positive_and_bounded(base, peak, chips, t_hours):
+    spec = ResourceSpec(name="r", site="s", chips=chips, base_price=base,
+                        peak_multiplier=peak)
+    ps = PriceSchedule(spec)
+    p = ps.chip_hour_price(t_hours * HOUR)
+    assert base - 1e-9 <= p <= base * peak + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# plan language
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 4))
+@settings(**COMMON)
+def test_cross_product_size(na, nb, nc):
+    plan = parse_plan(f"""
+parameter a integer range from 1 to {na} step 1
+parameter b integer range from 1 to {nb} step 1
+parameter c integer range from 0 to {nc - 1} step 1
+task main
+    execute run --a $a --b $b --c $c
+endtask
+""")
+    pts = plan.points()
+    assert len(pts) == na * nb * nc
+    assert len({tuple(sorted(p.items())) for p in pts}) == len(pts)
+
+
+# ---------------------------------------------------------------------------
+# kernels: flash attention == oracle over random shape draws
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(16, 80),
+       st.integers(8, 32), st.booleans(), st.integers(0, 1),
+       st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=12)
+def test_flash_attention_random(B, G, S, D, causal, win_mode, seed):
+    K = 2
+    H = K * G
+    window = 0 if not win_mode else max(4, S // 3)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, K, S, D))
+    v = jax.random.normal(ks[2], (B, K, S, D))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(st.integers(1, 3), st.integers(4, 70), st.integers(4, 40),
+       st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=12)
+def test_rglru_random(B, S, L, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    log_a = -jnp.exp(jax.random.normal(ks[0], (B, S, L)) * 0.5 - 2)
+    b = jax.random.normal(ks[1], (B, S, L))
+    h0 = jax.random.normal(ks[2], (B, L))
+    out = ops.rglru_scan(log_a, b, h0, block_t=16, block_l=16)
+    want = ref.rglru_ref(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# HLO parser
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["f32", "bf16", "s32", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(**COMMON)
+def test_type_bytes_matches_numpy(dt, dims):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}[dt]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    assert _type_bytes(s) == n * bytes_per
+
+
+def test_parse_rhs_tuple_with_index_comments():
+    rhs = ("(s32[], bf16[16,4096,1152]{2,1,0}, /*index=5*/f32[4,256]{1,0}) "
+           "while(%tuple.1), condition=%c, body=%b")
+    rtype, opcode, rest = _parse_rhs(rhs)
+    assert opcode == "while"
+    assert "bf16[16,4096,1152]" in rtype
+    assert "condition=%c" in rest

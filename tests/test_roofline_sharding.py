@@ -1,0 +1,150 @@
+"""Unit tests: loop-aware HLO analyzer + logical-axis sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_local_mesh
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import model_flops_for
+
+
+# ---------------------------------------------------------------------------
+# hlo_cost
+# ---------------------------------------------------------------------------
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def loop(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=9)
+        return y
+    c = _compile(loop, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    cost = hlo_cost.analyze(c.as_text())
+    expect = 9 * 2 * 128 ** 3
+    assert 0.95 * expect <= cost.flops <= 1.10 * expect
+
+
+def test_nested_scan_flops():
+    def loop(x, w):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ w, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+    c = _compile(loop, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    cost = hlo_cost.analyze(c.as_text())
+    expect = 12 * 2 * 64 ** 3
+    assert 0.9 * expect <= cost.flops <= 1.2 * expect
+
+
+def test_plain_matmul_exact():
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((256, 512), jnp.float32),
+                 jax.ShapeDtypeStruct((512, 128), jnp.float32))
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.flops == pytest.approx(2 * 256 * 512 * 128, rel=1e-3)
+
+
+def test_dus_not_charged_full_buffer():
+    """dynamic-update-slice of a tiny slice into a huge buffer must not
+    count the whole buffer as traffic.  (XLA inserts one real defensive
+    copy of the undonated input — 2x buffer — but the DUS itself must add
+    only ~2x the update slice, not another 2x buffer.)"""
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+    c = _compile(f, jax.ShapeDtypeStruct((4096, 4096), jnp.float32),
+                 jax.ShapeDtypeStruct((1, 4096), jnp.float32))
+    cost = hlo_cost.analyze(c.as_text())
+    buf_bytes = 4096 * 4096 * 4
+    assert cost.bytes < 2.5 * buf_bytes   # naive accounting would be ~4x
+
+
+def test_type_bytes_tuple_with_comments():
+    s = ("(s32[], bf16[4,8]{1,0}, /*index=2*/f32[10]{0})")
+    assert hlo_cost._type_bytes(s) == 4 + 4 * 8 * 2 + 10 * 4
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # abstract 16x16 mesh for rule checks (no devices needed)
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_rules_shard_divisible_dims(mesh16):
+    cfg = get_config("gemma3-27b")
+    r = shd.base_rules(cfg, SHAPES["train_4k"], mesh16)
+    assert r["heads"] == "model"        # 32 % 16 == 0
+    assert r["kv_heads"] == "model"     # 16 % 16 == 0
+    assert r["mlp"] == "model"
+    assert r["embed"] == "data"         # FSDP for training
+    assert r["vocab"] == "model"
+
+
+def test_rules_fall_back_on_indivisible(mesh16):
+    cfg = get_config("llava-next-34b")
+    r = shd.base_rules(cfg, SHAPES["train_4k"], mesh16)
+    assert r["heads"] is None           # 56 % 16 != 0
+    assert r["kv_heads"] is None        # follows heads
+    cfg = get_config("recurrentgemma-2b")
+    r = shd.base_rules(cfg, SHAPES["train_4k"], mesh16)
+    assert r["heads"] is None           # 10 % 16
+    assert r["lru"] == "model"          # 2560 % 16 == 0
+
+
+def test_serving_drops_fsdp_for_small_models(mesh16):
+    cfg = get_config("gemma3-1b")       # ~1GB weights: fits TP-sharded
+    r = shd.base_rules(cfg, SHAPES["decode_32k"], mesh16)
+    assert r["embed"] is None
+    cfg = get_config("kimi-k2-1t-a32b")  # 1T params: needs FSDP even to serve
+    r = shd.base_rules(cfg, SHAPES["decode_32k"], mesh16)
+    assert r["embed"] == "data"
+
+
+def test_spec_from_axes_no_duplicate_mesh_axes():
+    rules = {"a": "model", "b": "model", "batch": ("data",)}
+    spec = shd.spec_from_axes(("a", "b"), rules)
+    assert spec == P("model")           # second use of "model" dropped
+
+
+def test_model_flops_for_train_vs_decode():
+    cfg = get_config("gemma3-1b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    de = model_flops_for(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * cfg.param_count() * 4096 * 256)
+    assert de == pytest.approx(2 * cfg.param_count() * 128)
+
+
+def test_collective_parser_counts_kinds():
+    text = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%p), replica_groups={}
+  %ag = f32[16]{0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[8]{0} reduce-scatter(%ag), dimensions={0}
+}
+"""
+    mod = hlo_cost.HloModule(text)
+    cost = mod.entry_cost()
+    assert cost.coll_count["all-reduce"] == 1
+    assert cost.coll_count["all-gather"] == 1
+    assert cost.coll_count["reduce-scatter"] == 1
+    assert cost.coll["all-reduce"] == 32
+    assert cost.coll["all-gather"] == 64
+    assert cost.coll["reduce-scatter"] == 64   # max(operand, result)

@@ -1,0 +1,174 @@
+"""DBC scheduler behaviour: the paper's core claims.
+
+* Figure 3: tighter deadline => more resources allocated, all deadlines met.
+* cost-opt picks cheap resources; time-opt minimizes completion time
+  within budget; conservative never over-commits the budget.
+* failures requeue; stragglers get duplicated; measured rates adapt.
+"""
+import pytest
+
+from repro.core import (Dispatcher, NimrodG, PriceSchedule,
+                        ResourceDirectory, ResourceSpec, SchedulerConfig,
+                        SimulatedExecutor, Simulator, TradeServer,
+                        UserRequirements, gusto_like_testbed, parse_plan,
+                        negotiate_contract)
+
+HOUR = 3600.0
+
+PLAN_165 = """
+parameter angle float range from 1 to 165 step 1
+task main
+    copy model.bin node:.
+    execute ionize --angle $angle
+    copy node:out.dat res/$jobname.dat
+endtask
+"""
+
+
+def build_engine(deadline_h, strategy="cost", budget=30_000.0, n_jobs_plan=PLAN_165,
+                 n_machines=70, seed=0, est=2400.0, sched=None,
+                 failures_seed=0, testbed_seed=1):
+    directory = ResourceDirectory()
+    for spec in gusto_like_testbed(n_machines, seed=testbed_seed):
+        directory.register(spec)
+    schedules = {n: PriceSchedule(directory.spec(n))
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, directory, seed=failures_seed)
+    disp = Dispatcher(ex, directory)
+    req = UserRequirements(deadline=deadline_h * HOUR, budget=budget,
+                           strategy=strategy)
+    eng = NimrodG.from_plan(
+        "exp", parse_plan(n_jobs_plan), req, directory, trade, disp,
+        est_seconds=lambda p: est, sim=sim,
+        sched_cfg=sched or SchedulerConfig(), seed=seed)
+    return eng
+
+
+def test_figure3_deadline_vs_resources():
+    peaks, met = {}, {}
+    for dl in (10, 15, 20):
+        rep = build_engine(dl).run_simulated()
+        peaks[dl] = rep.peak_allocation
+        met[dl] = rep.met_deadline
+        assert rep.n_done == 165
+    assert all(met.values()), met
+    assert peaks[10] > peaks[15] >= peaks[20], peaks
+
+
+def test_time_opt_faster_but_costlier_than_cost_opt():
+    rc = build_engine(15, "cost").run_simulated()
+    rt = build_engine(15, "time").run_simulated()
+    assert rt.completion_time < rc.completion_time
+    assert rt.total_cost > rc.total_cost
+    assert rt.n_done == rc.n_done == 165
+
+
+def test_all_strategies_respect_budget():
+    for strat in ("cost", "time", "conservative"):
+        rep = build_engine(12, strat, budget=500.0).run_simulated()
+        assert rep.total_cost <= 500.0 + 1e-6, (strat, rep.total_cost)
+
+
+def test_conservative_stalls_instead_of_overspending():
+    # budget far too small to finish: engine must stop with a stall reason,
+    # never a negative ledger
+    rep = build_engine(10, "conservative", budget=3.0).run_simulated()
+    assert rep.n_done < 165
+    assert rep.total_cost <= 3.0 + 1e-6
+    assert rep.stall_reason in ("budget_exhausted", "horizon_reached")
+
+
+def test_infeasible_deadline_still_terminates():
+    rep = build_engine(0.05, "cost", budget=1e9).run_simulated()
+    assert rep.completion_time > 0.05 * HOUR  # missed, but finished/stopped
+    assert not rep.met_deadline or rep.n_done == 165
+
+
+def test_failures_requeue_and_complete():
+    # very unreliable testbed: every job still completes exactly once
+    directory = ResourceDirectory()
+    for i in range(10):
+        directory.register(ResourceSpec(
+            name=f"r{i:02d}", site="x", chips=1, perf_factor=1.0,
+            base_price=1.0, mtbf_hours=2.0, mttr_hours=0.2))
+    schedules = {n: PriceSchedule(directory.spec(n))
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, directory, seed=3)
+    disp = Dispatcher(ex, directory)
+    plan = parse_plan("""
+parameter i integer range from 1 to 30 step 1
+task main
+    execute run --i $i
+endtask
+""")
+    req = UserRequirements(deadline=40 * HOUR, budget=1e6, strategy="time")
+    eng = NimrodG.from_plan("flaky", plan, req, directory, trade, disp,
+                            est_seconds=lambda p: 1800.0, sim=sim,
+                            sched_cfg=SchedulerConfig(max_attempts=50))
+    rep = eng.run_simulated()
+    assert rep.n_done == 30
+    assert rep.requeues > 0   # failures actually happened and were retried
+
+
+def test_straggler_duplication_first_wins():
+    # two-machine grid: one fast, one pathologically slow; straggler
+    # duplication should rescue jobs stuck on the slow machine
+    directory = ResourceDirectory()
+    directory.register(ResourceSpec(name="fast", site="a", chips=1,
+                                    perf_factor=4.0, base_price=1.0,
+                                    mtbf_hours=float("inf")))
+    directory.register(ResourceSpec(name="slow", site="a", chips=1,
+                                    perf_factor=0.05, base_price=0.1,
+                                    mtbf_hours=float("inf")))
+    schedules = {n: PriceSchedule(directory.spec(n))
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, directory, seed=0, noise_sigma=0.0)
+    disp = Dispatcher(ex, directory)
+    plan = parse_plan("""
+parameter i integer range from 1 to 6 step 1
+task main
+    execute run --i $i
+endtask
+""")
+    req = UserRequirements(deadline=6 * HOUR, budget=1e6, strategy="time")
+    eng = NimrodG.from_plan(
+        "strag", plan, req, directory, trade, disp,
+        est_seconds=lambda p: 1200.0, sim=sim,
+        sched_cfg=SchedulerConfig(straggler_factor=2.0, interval=60.0))
+    rep = eng.run_simulated(failures=False)
+    assert rep.n_done == 6
+    assert rep.duplicates_launched > 0
+    assert rep.met_deadline
+
+
+def test_rates_adapt_from_measurements():
+    eng = build_engine(10)
+    rep = eng.run_simulated()
+    measured = [v for v in eng.views.values() if v.measured_rate is not None]
+    assert measured, "no consumption rates were learned"
+    assert all(v.completions > 0 for v in measured)
+
+
+def test_contract_negotiation_modes():
+    eng = build_engine(10)
+    eng._refresh_views()
+    quote = negotiate_contract(0.0, eng.req, 165, eng.trade, eng.views)
+    assert quote.feasible
+    assert quote.est_cost < eng.req.budget
+    # renegotiate with an impossible deadline
+    tight = UserRequirements(deadline=30.0, budget=eng.req.budget)
+    q2 = negotiate_contract(0.0, tight, 165, eng.trade, eng.views)
+    assert not q2.feasible
+    # accepting locks reservations
+    q3 = negotiate_contract(0.0, eng.req, 165, eng.trade, eng.views,
+                            accept=True)
+    assert q3.reserved
+    locked = eng.trade.reserved_price(
+        eng.trade.reservations[0].resource, eng.req.user, 100.0)
+    assert locked is not None
