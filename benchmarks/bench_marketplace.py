@@ -1,0 +1,75 @@
+"""Grid-marketplace sweep: the economy under competition.
+
+N ∈ {1, 2, 4, 8, 16} brokers (cost/time/conservative mix) share one
+GUSTO-like testbed on one virtual clock.  Reports per-user deadline-met
+and spend stats, market-wide slot-race pressure, and the demand-priced
+mean quote — then re-runs the largest market with the same seed and
+verifies the result is byte-identical (deterministic economy).
+
+    PYTHONPATH=src python -m benchmarks.bench_marketplace
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import standard_market
+
+HOUR = 3600.0
+
+SWEEP = (1, 2, 4, 8, 16)
+SEED = 11
+N_MACHINES = 16
+N_JOBS = 24
+
+
+def _run(n_users: int, seed: int = SEED):
+    market = standard_market(n_users, n_machines=N_MACHINES, seed=seed,
+                             n_jobs=N_JOBS, demand_elasticity=1.0)
+    return market, market.run()
+
+
+def sweep_table(csv: bool = False, rows: list = None):
+    rows = [] if rows is None else rows
+    for n in SWEEP:
+        t0 = time.time()
+        market, rep = _run(n)
+        wall = time.time() - t0
+        peak_quote = max(p for _, p in rep.price_trace)
+        rows.append((n, rep, wall, peak_quote))
+    if not csv:
+        print("users  done/jobs  met%   spend_G$  races_lost  "
+              "peak_quote  wall_s")
+        for n, rep, wall, pq in rows:
+            print(f"{n:5d} {rep.total_done:5d}/{rep.total_jobs:<5d} "
+                  f"{rep.deadline_met_frac:5.0%} {rep.total_spent:9.1f} "
+                  f"{rep.slot_races_lost:11d} {pq:11.3f} {wall:7.2f}")
+        print("\nper-user stats, most contended market "
+              f"(N={SWEEP[-1]}):")
+        print(rows[-1][1].summary())
+    return [(f"market_{n}u", wall * 1e6, rep.slot_races_lost)
+            for n, rep, wall, _ in rows]
+
+
+def determinism_check(csv: bool = False, rep1=None):
+    t0 = time.time()
+    if rep1 is None:
+        _, rep1 = _run(SWEEP[-1])
+    _, rep2 = _run(SWEEP[-1])
+    wall = time.time() - t0
+    identical = rep1.stable_repr() == rep2.stable_repr()
+    if not csv:
+        print(f"\nsame-seed re-run byte-identical: {identical}")
+    if not identical:
+        raise AssertionError("marketplace run is not seed-deterministic")
+    return [("market_determinism", wall * 1e6, int(identical))]
+
+
+def main(csv: bool = False):
+    rows: list = []
+    out = sweep_table(csv, rows=rows)
+    # reuse the N=16 sweep report: the re-run must match it byte-for-byte
+    return out + determinism_check(csv, rep1=rows[-1][1])
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,12 @@ Components (paper Figure 1): client, parametric engine, scheduler,
 dispatcher, job wrapper — plus the GRACE computational-economy market
 (trade server, bids, reservations) and the virtual-time grid simulator.
 """
-from repro.core.economy import (Bid, BudgetLedger, PriceSchedule, Reservation,
-                                TradeServer, UserRequirements)
+from repro.core.economy import (AdmissionError, Bid, BudgetLedger,
+                                PriceSchedule, Reservation, TradeServer,
+                                UserRequirements)
 from repro.core.jobs import Job, JobSpec, JobStatus
+from repro.core.marketplace import (Marketplace, MarketReport, MarketUser,
+                                    UserOutcome, standard_market)
 from repro.core.parametric import ExperimentReport, NimrodG
 from repro.core.persistence import Journal, load_events, replay
 from repro.core.plan import Plan, PlanError, parse_plan, substitute
@@ -16,17 +19,20 @@ from repro.core.scheduler import (AllocationDecision, ContractQuote,
                                   ResourceView, ScheduleAdvisor,
                                   SchedulerConfig, negotiate_contract)
 from repro.core.simulator import FailureProcess, Simulator, duration_model
-from repro.core.dispatcher import (DispatchCallbacks, Dispatcher,
+from repro.core.dispatcher import (SLOT_LOST, DispatchCallbacks, Dispatcher,
                                    LocalExecutor, SimulatedExecutor,
                                    StagingProxy)
 
 __all__ = [
-    "AllocationDecision", "Bid", "BudgetLedger", "ContractQuote",
-    "DispatchCallbacks", "Dispatcher", "ExperimentReport", "FailureProcess",
-    "Job", "JobSpec", "JobStatus", "Journal", "LocalExecutor", "NimrodG",
+    "AdmissionError", "AllocationDecision", "Bid", "BudgetLedger",
+    "ContractQuote", "DispatchCallbacks", "Dispatcher", "ExperimentReport",
+    "FailureProcess", "Job", "JobSpec", "JobStatus", "Journal",
+    "LocalExecutor", "MarketReport", "MarketUser", "Marketplace", "NimrodG",
     "Plan", "PlanError", "PriceSchedule", "Reservation", "ResourceDirectory",
-    "ResourceSpec", "ResourceStatus", "ResourceView", "ScheduleAdvisor",
-    "SchedulerConfig", "SimulatedExecutor", "Simulator", "StagingProxy",
-    "TradeServer", "UserRequirements", "duration_model", "gusto_like_testbed",
-    "load_events", "negotiate_contract", "parse_plan", "replay", "substitute",
+    "ResourceSpec", "ResourceStatus", "ResourceView", "SLOT_LOST",
+    "ScheduleAdvisor", "SchedulerConfig", "SimulatedExecutor", "Simulator",
+    "StagingProxy", "TradeServer", "UserOutcome", "UserRequirements",
+    "duration_model", "gusto_like_testbed", "load_events",
+    "negotiate_contract", "parse_plan", "replay", "standard_market",
+    "substitute",
 ]

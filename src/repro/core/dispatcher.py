@@ -23,7 +23,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Union
 
 from repro.core.jobs import Job, JobStatus
 from repro.core.resources import ResourceDirectory
@@ -48,34 +48,78 @@ class StagingProxy:
             self.bytes_out += n_bytes
 
 
+# Reason string the executors report when a dispatch loses the race for
+# the last free slot to a rival broker.  Distinct from a real failure: the
+# resource is healthy, the job should simply requeue (no attempt burned,
+# no suspicion cast on the resource).
+SLOT_LOST = "slot contention: lost race for free slot"
+
+
 @dataclasses.dataclass
 class DispatchCallbacks:
     on_started: Callable[[Job], None]
     on_done: Callable[[Job, float], None]        # (job, exec_seconds)
     on_failed: Callable[[Job, str], None]        # (job, reason)
+    on_blocked: Optional[Callable[[Job, str], None]] = None  # slot races
+
+    def blocked(self, job: Job, reason: str) -> None:
+        (self.on_blocked or self.on_failed)(job, reason)
 
 
 class SimulatedExecutor:
-    """Job-wrapper phases in virtual time, failure-aware."""
+    """Job-wrapper phases in virtual time, failure-aware.
+
+    ``dispatch_latency`` models the WAN hop between a broker's decision
+    and the remote queue actually granting the slot — with it non-zero,
+    two brokers that decided in the same scheduling round genuinely race
+    for the last slot and one of them loses (gets ``SLOT_LOST``)."""
 
     def __init__(self, sim: Simulator, directory: ResourceDirectory,
-                 seed: int = 0, noise_sigma: float = 0.15):
+                 seed: Union[int, str] = 0, noise_sigma: float = 0.15,
+                 dispatch_latency: float = 0.0):
         self.sim = sim
         self.directory = directory
         self.seed = seed
         self.noise_sigma = noise_sigma
+        self.dispatch_latency = dispatch_latency
         self.proxy = StagingProxy()
+        self.slot_races_lost = 0
         self._running: Dict[str, dict] = {}    # job_id -> {cancelled: bool}
 
     def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
-        spec = self.directory.spec(resource)
-        st = self.directory.status(resource)
-        if not st.up or st.free_slots(spec) <= 0:
-            cb.on_failed(job, "resource unavailable at submit")
-            return
-        st.running += 1
+        # register the cancel token BEFORE the latency hop: a duplicate
+        # killed while still in flight must never acquire a slot and run
         token = {"cancelled": False}
         self._running[job.job_id] = token
+        if self.dispatch_latency > 0.0:
+            self.sim.after(
+                self.dispatch_latency,
+                lambda: self._acquire_and_run(job, resource, cb, token))
+        else:
+            self._acquire_and_run(job, resource, cb, token)
+
+    def _drop_token(self, job: Job, token: dict) -> None:
+        if self._running.get(job.job_id) is token:
+            del self._running[job.job_id]
+
+    def _acquire_and_run(self, job: Job, resource: str,
+                         cb: DispatchCallbacks, token: dict) -> None:
+        if token["cancelled"]:          # killed while in the WAN hop
+            self._drop_token(job, token)
+            return
+        spec = self.directory.spec(resource)
+        st = self.directory.status(resource)
+        if not st.up:
+            self._drop_token(job, token)
+            cb.on_failed(job, "resource unavailable at submit")
+            return
+        if not st.acquire(spec):
+            self._drop_token(job, token)
+            self.slot_races_lost += 1
+            cb.blocked(job, SLOT_LOST)
+            return
+        job.slot_held = True
+        job.acquired_at = self.sim.now
         s_in, ex, s_out = duration_model(
             spec, job.spec.est_seconds_base, job.spec.stage_in_bytes,
             job.spec.stage_out_bytes, load=st.load,
@@ -116,8 +160,8 @@ class SimulatedExecutor:
 
     def _finish(self, job: Job, resource: str) -> None:
         self._running.pop(job.job_id, None)
-        st = self.directory.status(resource)
-        st.running = max(0, st.running - 1)
+        job.slot_held = False
+        self.directory.status(resource).release()
 
     def cancel(self, job: Job) -> None:
         tok = self._running.get(job.job_id)
@@ -146,10 +190,15 @@ class LocalExecutor:
     def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
         spec = self.directory.spec(resource)
         st = self.directory.status(resource)
-        if not st.up or st.free_slots(spec) <= 0:
-            cb.on_failed(job, "resource unavailable at submit")
-            return
-        st.running += 1
+        with self._lock:
+            if not st.up:
+                cb.on_failed(job, "resource unavailable at submit")
+                return
+            if not st.acquire(spec):
+                cb.blocked(job, SLOT_LOST)
+                return
+            job.slot_held = True
+            job.acquired_at = time.time()
 
         def run():
             cb.on_started(job)
@@ -159,11 +208,13 @@ class LocalExecutor:
                               else None)
             except Exception as e:  # noqa: BLE001 — job failure, not ours
                 with self._lock:
-                    st.running = max(0, st.running - 1)
+                    job.slot_held = False
+                    st.release()
                 cb.on_failed(job, f"payload raised: {e!r}")
                 return
             with self._lock:
-                st.running = max(0, st.running - 1)
+                job.slot_held = False
+                st.release()
             cb.on_done(job, time.monotonic() - t0)
 
         self._futures[job.job_id] = self.pool.submit(run)

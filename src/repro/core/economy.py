@@ -30,19 +30,23 @@ class UserRequirements:
 
 class PriceSchedule:
     """Owner-set price: base * peak-hours multiplier * per-user factor,
-    plus optional spot-style fluctuation (deterministic in virtual time)."""
+    plus optional spot-style fluctuation (deterministic in virtual time)
+    and a demand-responsive multiplier (GRACE's supply-and-demand knob:
+    a busy queue raises the quote, an idle one relaxes it)."""
 
     def __init__(self, spec: ResourceSpec,
                  user_factors: Optional[Dict[str, float]] = None,
                  spot_amplitude: float = 0.0, spot_period: float = 5 * HOUR,
-                 phase: float = 0.0):
+                 phase: float = 0.0, demand_elasticity: float = 0.0):
         self.spec = spec
         self.user_factors = user_factors or {}
         self.spot_amplitude = spot_amplitude
         self.spot_period = spot_period
         self.phase = phase
+        self.demand_elasticity = demand_elasticity
 
-    def chip_hour_price(self, t: float, user: str = "") -> float:
+    def chip_hour_price(self, t: float, user: str = "",
+                        utilization: float = 0.0) -> float:
         day = (t / HOUR + self.phase) % 24.0
         peak = self.spec.peak_multiplier if 8.0 <= day < 20.0 else 1.0
         spot = 1.0
@@ -50,11 +54,13 @@ class PriceSchedule:
             spot = 1.0 + self.spot_amplitude * math.sin(
                 2 * math.pi * (t + self.phase * HOUR) / self.spot_period)
         uf = self.user_factors.get(user, 1.0)
-        return self.spec.base_price * peak * spot * uf
+        demand = 1.0 + self.demand_elasticity * max(0.0, min(1.0, utilization))
+        return self.spec.base_price * peak * spot * uf * demand
 
-    def job_cost(self, t: float, duration: float, user: str = "") -> float:
+    def job_cost(self, t: float, duration: float, user: str = "",
+                 utilization: float = 0.0) -> float:
         """Cost of occupying the whole slice for ``duration`` seconds."""
-        return (self.chip_hour_price(t, user) * self.spec.chips
+        return (self.chip_hour_price(t, user, utilization) * self.spec.chips
                 * duration / HOUR)
 
 
@@ -77,22 +83,39 @@ class Bid:
     valid_until: float
 
 
+class AdmissionError(Exception):
+    """Reservation refused: resource window full or user over quota."""
+
+
 class TradeServer:
     """GRACE bid-server + trade-manager: quotes, sealed bids, reservations.
 
     One per grid (in reality one per domain; a single instance keeps the
-    simulation simple while preserving the protocol shape).
+    simulation simple while preserving the protocol shape).  With many
+    brokers sharing the grid, quotes reflect live demand (queue
+    utilization feeds each owner's ``PriceSchedule``) and reservations go
+    through admission control: a window can hold at most ``slots``
+    overlapping reservations, and optionally at most
+    ``max_reservations_per_user`` per user across the grid.
     """
 
     def __init__(self, directory: ResourceDirectory,
-                 schedules: Dict[str, PriceSchedule]):
+                 schedules: Dict[str, PriceSchedule],
+                 max_reservations_per_user: Optional[int] = None):
         self.directory = directory
         self.schedules = schedules
+        self.max_reservations_per_user = max_reservations_per_user
         self.reservations: List[Reservation] = []
         self._next_rid = 1
 
+    def utilization(self, resource: str) -> float:
+        return self.directory.status(resource).utilization(
+            self.directory.spec(resource))
+
     def quote(self, resource: str, t: float, user: str = "") -> float:
-        return self.schedules[resource].chip_hour_price(t, user)
+        sched = self.schedules[resource]
+        util = self.utilization(resource) if sched.demand_elasticity else 0.0
+        return sched.chip_hour_price(t, user, utilization=util)
 
     def solicit_bids(self, t: float, user: str,
                      est_job_seconds: Callable[[ResourceSpec], float]
@@ -115,6 +138,21 @@ class TradeServer:
 
     def reserve(self, resource: str, user: str, start: float, end: float,
                 t: float) -> Reservation:
+        spec = self.directory.spec(resource)
+        overlapping = sum(1 for r in self.reservations
+                          if r.resource == resource
+                          and r.start < end and start < r.end)
+        if overlapping >= spec.slots:
+            raise AdmissionError(
+                f"{resource}: {overlapping} reservations already overlap "
+                f"[{start}, {end}) (capacity {spec.slots})")
+        if self.max_reservations_per_user is not None:
+            active = sum(1 for r in self.reservations
+                         if r.user == user and r.end > t)
+            if active >= self.max_reservations_per_user:
+                raise AdmissionError(
+                    f"user {user!r} holds {active} active reservations "
+                    f"(quota {self.max_reservations_per_user})")
         r = Reservation(resource=resource, user=user, start=start, end=end,
                         locked_price=self.quote(resource, t, user),
                         reservation_id=self._next_rid)

@@ -39,6 +39,9 @@ class Job:
     started_at: float = 0.0
     finished_at: float = 0.0
     committed_cost: float = 0.0
+    quoted_price: float = 0.0              # chip-hour price locked at dispatch
+    slot_held: bool = False                # executor truth: slot acquired
+    acquired_at: float = 0.0               # when the slot was granted
     actual_cost: float = 0.0
     result: Any = None
     duplicate_of: Optional[str] = None     # straggler backup provenance

@@ -1,0 +1,267 @@
+"""Multi-user grid marketplace (paper §3 + §7 GRACE).
+
+Nimrod/G's premise is *distributed ownership*: many users, each with an
+independent deadline/budget broker, competing for the same scattered
+resources, with prices mediating demand.  ``Marketplace`` realizes that
+experiment: N concurrent ``NimrodG`` engines — each with its own
+``UserRequirements``, ``BudgetLedger`` and ``ScheduleAdvisor`` — run
+against ONE shared ``ResourceDirectory``/``TradeServer`` on a single
+``Simulator`` clock.
+
+What the shared grid changes versus the single-user engine:
+
+* slot accounting is contention-safe — a broker's dispatch can lose the
+  race for the last free slot (``SLOT_LOST``) and requeues without
+  burning an attempt or suspecting the resource;
+* owners quote demand-responsive prices (utilization-indexed multiplier,
+  the GRACE supply-and-demand knob), so a crowded grid gets expensive
+  and cost-minimizing brokers back off to off-peak/cheap machines;
+* each broker reads *free* capacity (slots not held by rivals), not the
+  resource's full rate.
+
+Everything unfolds in virtual time from seeded RNG streams: the entire
+market run is exactly reproducible per seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.dispatcher import Dispatcher, SimulatedExecutor
+from repro.core.economy import PriceSchedule, TradeServer, UserRequirements
+from repro.core.jobs import JobSpec
+from repro.core.parametric import NimrodG
+from repro.core.resources import (ResourceDirectory, ResourceSpec,
+                                  gusto_like_testbed)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import FailureProcess, Simulator
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketUser:
+    """One participant: their broker's knobs (paper's deadline + budget)."""
+    name: str
+    deadline: float                  # absolute virtual time
+    budget: float                    # G$
+    strategy: str = "cost"           # cost | time | conservative
+    n_jobs: int = 50
+    est_seconds: float = 1800.0      # per-job runtime on perf_factor=1
+
+
+@dataclasses.dataclass
+class UserOutcome:
+    """Per-user market result (the broker's report, condensed)."""
+    user: str
+    strategy: str
+    n_jobs: int
+    n_done: int
+    completion_time: float
+    spent: float
+    budget: float
+    met_deadline: bool
+    within_budget: bool
+    requeues: int
+    slot_races_lost: int
+    peak_allocation: int
+    stall_reason: Optional[str]
+
+    def row(self) -> str:
+        return (f"{self.user:12s} {self.strategy:12s} "
+                f"{self.n_done:4d}/{self.n_jobs:<4d} "
+                f"t={self.completion_time / HOUR:7.2f}h "
+                f"spent={self.spent:9.2f}/{self.budget:<9.0f} "
+                f"met={str(self.met_deadline):5s} "
+                f"races_lost={self.slot_races_lost:3d} "
+                f"requeues={self.requeues:3d}")
+
+
+@dataclasses.dataclass
+class MarketReport:
+    seed: int
+    n_users: int
+    n_resources: int
+    outcomes: List[UserOutcome]
+    total_jobs: int
+    total_done: int
+    total_spent: float
+    slot_races_lost: int
+    deadline_met_frac: float
+    price_trace: List[Tuple[float, float]]   # (t, mean grid quote)
+
+    def summary(self) -> str:
+        lines = [f"marketplace seed={self.seed}: {self.n_users} users on "
+                 f"{self.n_resources} resources — "
+                 f"{self.total_done}/{self.total_jobs} jobs, "
+                 f"{self.deadline_met_frac:.0%} deadlines met, "
+                 f"spend={self.total_spent:.1f}G$, "
+                 f"slot races lost={self.slot_races_lost}"]
+        lines += ["  " + o.row() for o in self.outcomes]
+        return "\n".join(lines)
+
+    def stable_repr(self) -> str:
+        """Byte-stable serialization (repr floats are exact) for
+        determinism checks: two same-seed runs must match exactly."""
+        parts = [f"seed={self.seed};users={self.n_users};"
+                 f"res={self.n_resources}"]
+        for o in self.outcomes:
+            parts.append(
+                f"{o.user}|{o.strategy}|{o.n_done}/{o.n_jobs}"
+                f"|t={o.completion_time!r}|spent={o.spent!r}"
+                f"|met={o.met_deadline}|races={o.slot_races_lost}"
+                f"|rq={o.requeues}|peak={o.peak_allocation}"
+                f"|stall={o.stall_reason}")
+        parts.append("trace=" + ",".join(
+            f"({t!r},{p!r})" for t, p in self.price_trace))
+        return "\n".join(parts)
+
+
+class Marketplace:
+    """N brokers, one grid, one clock.
+
+    Each user gets their own dispatcher/executor (the paper's per-broker
+    architecture) but all of them mutate the same directory status — the
+    shared truth the slot race is fought over.
+    """
+
+    def __init__(self, specs: Optional[Sequence[ResourceSpec]] = None,
+                 *, n_machines: int = 20, seed: int = 0,
+                 demand_elasticity: float = 0.5,
+                 spot_amplitude: float = 0.0,
+                 dispatch_latency: float = 1.0,
+                 noise_sigma: float = 0.1,
+                 max_reservations_per_user: Optional[int] = None):
+        self.seed = seed
+        self.sim = Simulator()
+        self.directory = ResourceDirectory()
+        for spec in (specs if specs is not None
+                     else gusto_like_testbed(n_machines, seed=seed)):
+            self.directory.register(spec)
+        self.schedules: Dict[str, PriceSchedule] = {
+            name: PriceSchedule(self.directory.spec(name),
+                                demand_elasticity=demand_elasticity,
+                                spot_amplitude=spot_amplitude)
+            for name in self.directory.all_names()}
+        self.trade = TradeServer(
+            self.directory, self.schedules,
+            max_reservations_per_user=max_reservations_per_user)
+        self.dispatch_latency = dispatch_latency
+        self.noise_sigma = noise_sigma
+        self.users: List[MarketUser] = []
+        self.engines: List[NimrodG] = []
+        self.price_trace: List[Tuple[float, float]] = []
+
+    # ------------------------------------------------------------------
+    def add_user(self, user: MarketUser,
+                 sched_cfg: Optional[SchedulerConfig] = None) -> NimrodG:
+        if any(u.name == user.name for u in self.users):
+            raise ValueError(f"user {user.name!r} already in market")
+        executor = SimulatedExecutor(
+            self.sim, self.directory,
+            seed=f"{self.seed}:{user.name}",
+            noise_sigma=self.noise_sigma,
+            dispatch_latency=self.dispatch_latency)
+        dispatcher = Dispatcher(executor, self.directory)
+        jobs = [JobSpec(job_id=f"{user.name}:j{i:05d}", experiment=user.name,
+                        point={"i": i}, steps=(),
+                        est_seconds_base=user.est_seconds)
+                for i in range(user.n_jobs)]
+        req = UserRequirements(deadline=user.deadline, budget=user.budget,
+                               strategy=user.strategy, user=user.name)
+        engine = NimrodG(user.name, jobs, req, self.directory, self.trade,
+                         dispatcher, sim=self.sim,
+                         sched_cfg=sched_cfg or SchedulerConfig(),
+                         seed=self.seed, stop_sim_when_done=False)
+        self.users.append(user)
+        self.engines.append(engine)
+        return engine
+
+    # ------------------------------------------------------------------
+    def mean_quote(self, t: float) -> float:
+        names = self.directory.all_names()
+        if not names:
+            return 0.0
+        return sum(self.trade.quote(n, t) for n in names) / len(names)
+
+    def _watch(self, sample_interval: float, horizon: float) -> None:
+        t = self.sim.now
+        self.price_trace.append((t, self.mean_quote(t)))
+        if all(e.finished for e in self.engines):
+            self.sim.stop()
+            return
+        if t + sample_interval <= horizon:
+            self.sim.after(sample_interval,
+                           lambda: self._watch(sample_interval, horizon))
+
+    def run(self, *, failures: bool = False, horizon: Optional[float] = None,
+            sample_interval: float = 600.0) -> MarketReport:
+        if not self.engines:
+            raise ValueError("no users in the market — add_user() first")
+        if horizon is None:
+            horizon = max(u.deadline for u in self.users) * 1.5 + 8 * HOUR
+        if failures:
+            fp = FailureProcess(self.sim, self.directory, seed=self.seed)
+            for name in self.directory.all_names():
+                fp.install(name)
+        for engine in self.engines:
+            self.sim.after(0.0, engine.tick)
+        self.sim.after(0.0, lambda: self._watch(sample_interval, horizon))
+        self.sim.run(until=horizon)
+        for engine in self.engines:
+            if not engine.finished:
+                engine.finish(stall="horizon_reached")
+        return self._report()
+
+    # ------------------------------------------------------------------
+    def _report(self) -> MarketReport:
+        outcomes = []
+        for user, engine in zip(self.users, self.engines):
+            rep = engine.report
+            outcomes.append(UserOutcome(
+                user=user.name, strategy=user.strategy,
+                n_jobs=rep.n_jobs, n_done=rep.n_done,
+                completion_time=rep.completion_time,
+                spent=rep.total_cost, budget=user.budget,
+                met_deadline=rep.met_deadline,
+                within_budget=rep.within_budget,
+                requeues=rep.requeues,
+                slot_races_lost=rep.slot_races_lost,
+                peak_allocation=rep.peak_allocation,
+                stall_reason=rep.stall_reason))
+        total_jobs = sum(o.n_jobs for o in outcomes)
+        total_done = sum(o.n_done for o in outcomes)
+        met = sum(1 for o in outcomes if o.met_deadline)
+        return MarketReport(
+            seed=self.seed, n_users=len(outcomes),
+            n_resources=len(self.directory.all_names()),
+            outcomes=outcomes, total_jobs=total_jobs, total_done=total_done,
+            total_spent=sum(o.spent for o in outcomes),
+            slot_races_lost=sum(o.slot_races_lost for o in outcomes),
+            deadline_met_frac=met / max(len(outcomes), 1),
+            price_trace=list(self.price_trace))
+
+
+# ---------------------------------------------------------------------------
+def standard_market(n_users: int, *, n_machines: int = 20, seed: int = 0,
+                    deadline_h: float = 12.0, budget: float = 5_000.0,
+                    n_jobs: int = 40, est_seconds: float = 1800.0,
+                    strategies: Sequence[str] = ("cost", "time",
+                                                 "conservative"),
+                    demand_elasticity: float = 0.5,
+                    dispatch_latency: float = 1.0) -> Marketplace:
+    """Canonical N-user market: strategies round-robin over the mix,
+    deadlines/budgets slightly staggered so brokers are heterogeneous but
+    everything stays deterministic in (n_users, seed)."""
+    market = Marketplace(n_machines=n_machines, seed=seed,
+                         demand_elasticity=demand_elasticity,
+                         dispatch_latency=dispatch_latency)
+    for i in range(n_users):
+        market.add_user(MarketUser(
+            name=f"user{i:02d}",
+            deadline=(deadline_h + 2.0 * (i % 3)) * HOUR,
+            budget=budget * (1.0 + 0.25 * (i % 4)),
+            strategy=strategies[i % len(strategies)],
+            n_jobs=n_jobs,
+            est_seconds=est_seconds))
+    return market

@@ -47,6 +47,7 @@ class ExperimentReport:
     peak_allocation: int = 0
     duplicates_launched: int = 0
     requeues: int = 0
+    slot_races_lost: int = 0         # dispatches that lost a slot race
     timeline: List[Tuple[float, int, int, float]] = dataclasses.field(
         default_factory=list)        # (t, allocated, done, spent)
     stall_reason: Optional[str] = None
@@ -73,7 +74,7 @@ class NimrodG:
                  sim: Optional[Simulator] = None,
                  journal: Optional[Journal] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
-                 seed: int = 0):
+                 seed: int = 0, stop_sim_when_done: bool = True):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -83,6 +84,9 @@ class NimrodG:
         self.journal = journal
         self.cfg = sched_cfg
         self.seed = seed
+        # a marketplace run shares one clock among many engines: only the
+        # driver may stop it, not the first engine to finish
+        self.stop_sim_when_done = stop_sim_when_done
 
         self.advisor = ScheduleAdvisor(sched_cfg, requirements)
         self.ledger = BudgetLedger(budget=requirements.budget)
@@ -195,6 +199,24 @@ class NimrodG:
         return self.trade.effective_price(resource, self.req.user,
                                           self._now())
 
+    def _my_running(self) -> Dict[str, int]:
+        """Slots this experiment currently occupies, per resource.
+
+        Counts ``slot_held`` (set by the executor at acquisition), not
+        job status: a requeued job appears multiple times in the attempts
+        log, and a STAGED dispatch still in the WAN hop holds nothing —
+        either would misstate rival occupancy."""
+        mine: Dict[str, int] = {}
+        seen: set = set()
+        for attempts in self.attempts.values():
+            for j in attempts:
+                if id(j) in seen:
+                    continue
+                seen.add(id(j))
+                if j.slot_held and j.resource:
+                    mine[j.resource] = mine.get(j.resource, 0) + 1
+        return mine
+
     def _refresh_views(self) -> None:
         for spec in self.directory.discover(self.req.user):
             if spec.name not in self.views:
@@ -202,8 +224,13 @@ class NimrodG:
                 est = self.dispatcher.estimate(probe, spec.name)
                 self.views[spec.name] = ResourceView(
                     spec=spec, est_job_seconds=max(est, 1e-6))
+        mine = self._my_running()
         for name, v in self.views.items():
-            v.suspected = not self.directory.status(name).up
+            st = self.directory.status(name)
+            v.suspected = not st.up
+            # free capacity = slots not held by OTHER users' jobs
+            others = max(0, st.running - mine.get(name, 0))
+            v.avail_slots = max(0, v.spec.slots - others)
 
     # ------------------------------------------------------------------
     # scheduling tick
@@ -268,8 +295,8 @@ class NimrodG:
             return
         slots: List[str] = []
         for r in sorted(self.allocated,
-                        key=lambda n: cost_per_job(
-                            self.views[n], self._price(n))):
+                        key=lambda n: (cost_per_job(
+                            self.views[n], self._price(n)), n)):
             st = self.directory.status(r)
             spec = self.directory.spec(r)
             slots.extend([r] * st.free_slots(spec))
@@ -285,6 +312,10 @@ class NimrodG:
     def _dispatch(self, job: Job, resource: str, committed: float) -> None:
         self.ledger.commit(committed)
         job.committed_cost = committed
+        # lock the quote the broker committed against: settles use it, so
+        # demand swings between dispatch and completion can't re-price a
+        # job after the fact
+        job.quoted_price = self._price(resource)
         job.submitted_at = self._now()
         primary = job.duplicate_of or job.job_id
         self.attempts[primary].append(job)
@@ -293,7 +324,8 @@ class NimrodG:
         self.report.resources_used.add(resource)
         cb = DispatchCallbacks(on_started=self._on_started,
                                on_done=self._on_done,
-                               on_failed=self._on_failed)
+                               on_failed=self._on_failed,
+                               on_blocked=self._on_blocked)
         self.dispatcher.dispatch(job, resource, cb)
 
     # -- callbacks (invoked via the event queue drain) --
@@ -309,6 +341,10 @@ class NimrodG:
         self._events.append(("failed", job, reason))
         self._drain_if_sim()
 
+    def _on_blocked(self, job: Job, reason: str) -> None:
+        self._events.append(("blocked", job, reason))
+        self._drain_if_sim()
+
     def _drain_if_sim(self) -> None:
         if self.sim is not None:
             self.drain_events()
@@ -320,6 +356,8 @@ class NimrodG:
                 self._handle_started(job)
             elif kind == "done":
                 self._handle_done(job, arg)
+            elif kind == "blocked":
+                self._handle_blocked(job, arg)
             else:
                 self._handle_failed(job, arg)
 
@@ -332,8 +370,8 @@ class NimrodG:
         primary_id = job.duplicate_of or job.job_id
         primary = self.jobs.get(primary_id)
         t = self._now()
-        price = self.trade.effective_price(job.resource, self.req.user,
-                                           job.submitted_at)
+        price = job.quoted_price or self.trade.effective_price(
+            job.resource, self.req.user, job.submitted_at)
         actual = price * self.directory.spec(job.resource).chips * \
             exec_seconds / HOUR
         self.ledger.settle(job.committed_cost, actual)
@@ -359,9 +397,12 @@ class NimrodG:
                                                      JobStatus.RUNNING):
                 other.status = JobStatus.KILLED
                 self.dispatcher.cancel(other)
-                elapsed = max(t - other.submitted_at, 0.0)
-                kp = self.trade.effective_price(other.resource, self.req.user,
-                                                other.submitted_at)
+                # pay only for chip time actually held: a duplicate still
+                # in the dispatch hop never acquired a slot and costs 0
+                elapsed = (max(t - other.acquired_at, 0.0)
+                           if other.slot_held else 0.0)
+                kp = other.quoted_price or self.trade.effective_price(
+                    other.resource, self.req.user, other.submitted_at)
                 kcost = kp * self.directory.spec(other.resource).chips * \
                     elapsed / HOUR
                 self.ledger.settle(other.committed_cost, kcost)
@@ -370,6 +411,29 @@ class NimrodG:
             self._finish()
         else:
             self._fill_slots()
+
+    def _handle_blocked(self, job: Job, reason: str) -> None:
+        """The dispatch lost the race for the last free slot to another
+        broker.  The resource is healthy and the job did not run: refund
+        the commitment, requeue without burning an attempt, and do not
+        suspect the resource."""
+        self.ledger.settle(job.committed_cost, 0.0)
+        job.committed_cost = 0.0
+        job.attempt = max(0, job.attempt - 1)
+        self.report.slot_races_lost += 1
+        self._log("SLOT_LOST", job_id=job.job_id, resource=job.resource,
+                  reason=reason)
+        primary_id = job.duplicate_of or job.job_id
+        primary = self.jobs.get(primary_id)
+        if primary is None or primary.status == JobStatus.DONE:
+            return
+        if job.duplicate_of is None:
+            job.status = JobStatus.PENDING
+            self.report.requeues += 1
+        else:
+            job.status = JobStatus.KILLED   # duplicate: primary still runs
+        # do NOT refill immediately — the slot we just lost is taken; the
+        # next scheduling tick retries against fresh status
 
     def _handle_failed(self, job: Job, reason: str) -> None:
         primary_id = job.duplicate_of or job.job_id
@@ -415,7 +479,7 @@ class NimrodG:
                 continue
             # find a different allocated resource with a free slot
             for r in sorted(self.allocated,
-                            key=lambda n: self.views[n].est_job_seconds):
+                            key=lambda n: (self.views[n].est_job_seconds, n)):
                 if r == primary.resource:
                     continue
                 st = self.directory.status(r)
@@ -437,6 +501,15 @@ class NimrodG:
                 break
 
     # ------------------------------------------------------------------
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    def finish(self, stall: Optional[str] = None) -> None:
+        """Public finalization hook (e.g. a marketplace driver cutting
+        the run off at its horizon)."""
+        self._finish(stall=stall)
+
     def _finish(self, stall: Optional[str] = None) -> None:
         if self._finished:
             return
@@ -450,7 +523,7 @@ class NimrodG:
         self.report.stall_reason = stall
         self._log("EXP_DONE", n_done=self.report.n_done,
                   cost=self.ledger.settled, stall=stall)
-        if self.sim is not None:
+        if self.sim is not None and self.stop_sim_when_done:
             self.sim.stop()
 
     # ------------------------------------------------------------------

@@ -52,6 +52,26 @@ class ResourceStatus:
     def free_slots(self, spec: ResourceSpec) -> int:
         return max(0, spec.slots - self.running) if self.up else 0
 
+    def acquire(self, spec: ResourceSpec) -> bool:
+        """Atomically claim one slot.  With many brokers sharing a grid the
+        check and the increment must be one operation — a broker that read
+        "1 free" a moment ago can still lose the slot to a rival and must
+        be told so (it requeues; it must not over-subscribe the queue)."""
+        if not self.up or self.running >= spec.slots:
+            return False
+        self.running += 1
+        return True
+
+    def release(self) -> None:
+        self.running = max(0, self.running - 1)
+
+    def utilization(self, spec: ResourceSpec) -> float:
+        """Fraction of the queue occupied — the demand half of GRACE's
+        supply-and-demand pricing."""
+        if spec.slots <= 0:
+            return 1.0
+        return min(1.0, max(0.0, self.running / spec.slots))
+
 
 class ResourceDirectory:
     """MDS-style directory: registration, discovery, authorization."""

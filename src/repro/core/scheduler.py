@@ -44,18 +44,30 @@ class SchedulerConfig:
 
 @dataclasses.dataclass
 class ResourceView:
-    """Scheduler-local model of one resource."""
+    """Scheduler-local model of one resource.
+
+    ``avail_slots`` is the capacity this broker can actually use: total
+    slots minus slots occupied by *other* users' jobs.  The single-user
+    engine never shrinks it (it owns the whole queue); under a shared
+    grid the marketplace engines refresh it every tick so rate and cost
+    projections reflect free capacity, not exclusive ownership."""
     spec: ResourceSpec
     est_job_seconds: float           # current duration estimate
-    measured_rate: Optional[float] = None    # jobs/s EMA
+    measured_rate: Optional[float] = None    # jobs/s EMA (full resource)
     completions: int = 0
     failures: int = 0
     suspected: bool = False
+    avail_slots: Optional[int] = None        # None = all of spec.slots
+
+    def _avail_fraction(self) -> float:
+        if self.avail_slots is None or self.spec.slots <= 0:
+            return 1.0
+        return max(0, min(self.avail_slots, self.spec.slots)) / self.spec.slots
 
     def rate(self) -> float:
-        if self.measured_rate is not None:
-            return self.measured_rate
-        return self.spec.slots / max(self.est_job_seconds, 1e-9)
+        full = (self.measured_rate if self.measured_rate is not None
+                else self.spec.slots / max(self.est_job_seconds, 1e-9))
+        return full * self._avail_fraction()
 
     def observe_completion(self, duration: float, ema: float) -> None:
         r = self.spec.slots / max(duration, 1e-9)
@@ -115,7 +127,11 @@ class ScheduleAdvisor:
             chosen = self._select_cost_opt(ranked, live, prices, needed)
 
         if len(chosen) < self.cfg.min_resources:
-            chosen = set(ranked[:self.cfg.min_resources])
+            # prefer resources with free capacity when topping up
+            fallback = [n for n in
+                        sorted(ranked, key=lambda n: (live[n].rate() <= 0,))
+                        if n not in chosen]
+            chosen |= set(fallback[:self.cfg.min_resources - len(chosen)])
 
         rate = sum(live[n].rate() for n in chosen)
         wcost = (sum(live[n].rate() * cost_per_job(live[n], prices[n])
@@ -138,6 +154,8 @@ class ScheduleAdvisor:
         for name in ranked:
             if acc >= needed:
                 break
+            if views[name].rate() <= 0:
+                continue             # fully contended: no free capacity
             chosen.add(name)
             acc += views[name].rate()
         return chosen
@@ -151,6 +169,8 @@ class ScheduleAdvisor:
         spend_rate = 0.0             # G$/s of the allocation
         for name in ranked:
             r = views[name].rate()
+            if r <= 0:
+                continue             # fully contended: no free capacity
             c = cost_per_job(views[name], prices[name])
             new_rate = rate + r
             new_spend = spend_rate + r * c

@@ -3,8 +3,8 @@ import math
 
 import pytest
 
-from repro.core import (BudgetLedger, PriceSchedule, ResourceDirectory,
-                        ResourceSpec, TradeServer)
+from repro.core import (AdmissionError, BudgetLedger, PriceSchedule,
+                        ResourceDirectory, ResourceSpec, TradeServer)
 
 HOUR = 3600.0
 
@@ -86,6 +86,37 @@ def test_directory_authorization_and_filters():
     assert [s.name for s in d.discover("alice")] == ["closed"]
 
 
+def test_price_math_exact_at_known_virtual_times():
+    """Every factor of the quote at hand-computed times: base * peak *
+    spot * user-factor * demand, all independently verifiable."""
+    spec = _spec(price=2.0, peak=3.0)
+    period = 4 * HOUR
+    ps = PriceSchedule(spec, user_factors={"vip": 0.5},
+                       spot_amplitude=0.25, spot_period=period,
+                       demand_elasticity=0.8)
+    # 02:00 (off-peak), spot sin(2*pi*t/period) at t=period -> sin(2pi)=0
+    t = 2 * HOUR                      # == period/2: sin(pi) = 0
+    assert ps.chip_hour_price(t) == pytest.approx(2.0)
+    # quarter period: sin(pi/2) = 1 -> spot = 1.25; 01:00 still off-peak
+    t = period / 4
+    assert ps.chip_hour_price(t) == pytest.approx(2.0 * 1.25)
+    assert ps.chip_hour_price(t, "vip") == pytest.approx(2.0 * 1.25 * 0.5)
+    # 13:00 peak: 2.0 * 3.0; t = 13h = 3.25 periods -> sin(pi/2) = 1
+    t = 13 * HOUR
+    assert ps.chip_hour_price(t) == pytest.approx(2.0 * 3.0 * 1.25)
+    # full house: utilization 1 with elasticity 0.8 -> x1.8
+    assert ps.chip_hour_price(t, utilization=1.0) == pytest.approx(
+        2.0 * 3.0 * 1.25 * 1.8)
+    # job_cost = chip_hour_price * chips * duration/HOUR (4 chips)
+    assert ps.job_cost(t, HOUR / 2) == pytest.approx(
+        2.0 * 3.0 * 1.25 * 4 * 0.5)
+
+
+def test_demand_elasticity_defaults_off():
+    ps = PriceSchedule(_spec(price=1.0, peak=1.0))
+    assert ps.chip_hour_price(0.0, utilization=1.0) == pytest.approx(1.0)
+
+
 def test_budget_ledger_commit_settle_cycle():
     led = BudgetLedger(budget=100.0)
     assert led.can_commit(60.0)
@@ -96,3 +127,99 @@ def test_budget_ledger_commit_settle_cycle():
     assert led.settled == pytest.approx(55.0)
     assert led.committed == pytest.approx(0.0)
     assert led.remaining == pytest.approx(45.0)
+
+
+def test_ledger_committed_never_negative_and_remaining_monotone():
+    """Settling more than was committed clamps committed at zero, and a
+    run of commit/settle cycles (actual == committed) drains ``remaining``
+    monotonically — no refund can ever grow the pot."""
+    led = BudgetLedger(budget=50.0)
+    led.commit(10.0)
+    led.settle(25.0, 10.0)            # over-settle the commitment
+    assert led.committed == 0.0       # clamped, never negative
+    seen = [led.remaining]
+    for _ in range(6):
+        amt = 5.0
+        if led.can_commit(amt):
+            led.commit(amt)
+            led.settle(amt, amt)
+        seen.append(led.remaining)
+    assert all(b <= a + 1e-9 for a, b in zip(seen, seen[1:])), seen
+    assert led.remaining >= -1e-9
+
+
+def test_ledger_overcommit_refused_but_refund_reopens():
+    led = BudgetLedger(budget=10.0)
+    led.commit(8.0)
+    assert not led.can_commit(3.0)
+    led.settle(8.0, 4.0)              # actual half the estimate: refund
+    assert led.can_commit(3.0)        # freed headroom is usable again
+    assert led.remaining == pytest.approx(6.0)
+
+
+def test_reservation_locks_price_against_spot_drift():
+    """A reservation's locked price holds even while the owner's spot
+    component swings the live quote around it."""
+    d = ResourceDirectory()
+    d.register(_spec("spot", price=1.0, peak=1.0))
+    period = 2 * HOUR
+    trade = TradeServer(d, {"spot": PriceSchedule(
+        d.spec("spot"), spot_amplitude=0.5, spot_period=period)})
+    r = trade.reserve("spot", "u", start=0.0, end=10 * HOUR, t=0.0)
+    assert r.locked_price == pytest.approx(1.0)      # sin(0) = 0
+    t_hi = period / 4                                # sin(pi/2): quote 1.5
+    assert trade.quote("spot", t_hi) == pytest.approx(1.5)
+    assert trade.effective_price("spot", "u", t_hi) == pytest.approx(1.0)
+    t_lo = 3 * period / 4                            # sin(3pi/2): quote 0.5
+    assert trade.quote("spot", t_lo) == pytest.approx(0.5)
+    # the lock is a contract, not a best-of: user pays it either way
+    assert trade.effective_price("spot", "u", t_lo) == pytest.approx(1.0)
+    # outside the window the live (drifting) quote applies again
+    assert trade.effective_price("spot", "u", 11 * HOUR) == pytest.approx(
+        trade.quote("spot", 11 * HOUR))
+
+
+def test_reservation_admission_capacity():
+    """A window holds at most ``slots`` overlapping reservations."""
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r0", site="s", chips=1, slots=2))
+    trade = TradeServer(d, {"r0": PriceSchedule(d.spec("r0"))})
+    trade.reserve("r0", "a", start=0.0, end=HOUR, t=0.0)
+    trade.reserve("r0", "b", start=0.0, end=HOUR, t=0.0)
+    with pytest.raises(AdmissionError):
+        trade.reserve("r0", "c", start=0.5 * HOUR, end=2 * HOUR, t=0.0)
+    # a disjoint window is fine
+    r = trade.reserve("r0", "c", start=HOUR, end=2 * HOUR, t=0.0)
+    assert trade.cancel(r.reservation_id)
+
+
+def test_reservation_per_user_quota():
+    d = ResourceDirectory()
+    for i in range(3):
+        d.register(_spec(f"r{i}", price=1.0, peak=1.0))
+    trade = TradeServer(d, {f"r{i}": PriceSchedule(d.spec(f"r{i}"))
+                            for i in range(3)},
+                        max_reservations_per_user=2)
+    trade.reserve("r0", "hog", start=0.0, end=HOUR, t=0.0)
+    trade.reserve("r1", "hog", start=0.0, end=HOUR, t=0.0)
+    with pytest.raises(AdmissionError):
+        trade.reserve("r2", "hog", start=0.0, end=HOUR, t=0.0)
+    # other users unaffected; expired reservations free the quota
+    trade.reserve("r2", "other", start=0.0, end=HOUR, t=0.0)
+    r = trade.reserve("r2", "hog", start=2 * HOUR, end=3 * HOUR,
+                      t=1.5 * HOUR)   # t past the first two windows' end
+    assert r.reservation_id > 0
+
+
+def test_quote_reflects_live_utilization():
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r0", site="s", chips=1, slots=4,
+                            base_price=1.0, peak_multiplier=1.0))
+    trade = TradeServer(d, {"r0": PriceSchedule(d.spec("r0"),
+                                                demand_elasticity=1.0)})
+    assert trade.quote("r0", 0.0) == pytest.approx(1.0)
+    st, spec = d.status("r0"), d.spec("r0")
+    assert st.acquire(spec) and st.acquire(spec)
+    assert trade.quote("r0", 0.0) == pytest.approx(1.5)   # util 0.5
+    st.release()
+    assert trade.quote("r0", 0.0) == pytest.approx(1.25)  # util 0.25

@@ -1,0 +1,164 @@
+"""Multi-user grid marketplace: contention, demand pricing, isolation,
+and whole-market determinism (paper §3 distributed ownership + §7 GRACE)."""
+import pytest
+
+from repro.core import (Marketplace, MarketUser, ResourceSpec,
+                        SchedulerConfig, standard_market)
+
+HOUR = 3600.0
+
+
+def _tight_specs(n=3, slots=1, perf=1.0):
+    """A deliberately scarce grid: n reliable identical machines."""
+    return [ResourceSpec(name=f"m{i}", site="x", chips=1, slots=slots,
+                         perf_factor=perf, base_price=1.0,
+                         peak_multiplier=1.0, mtbf_hours=float("inf"))
+            for i in range(n)]
+
+
+def _crowded_market(n_users=6, n_machines=3, seed=0, n_jobs=8,
+                    sched=None, **kw):
+    market = Marketplace(specs=_tight_specs(n_machines), seed=seed, **kw)
+    for i in range(n_users):
+        market.add_user(MarketUser(
+            name=f"u{i}", deadline=30 * HOUR, budget=1e6,
+            strategy=("cost", "time")[i % 2], n_jobs=n_jobs,
+            est_seconds=1200.0), sched_cfg=sched)
+    return market
+
+
+def test_contention_loses_slot_races_and_requeues():
+    """More brokers than slots: someone must lose the race for the last
+    free slot, requeue, and still finish — no crash, no lost jobs."""
+    market = _crowded_market()
+    rep = market.run()
+    assert rep.slot_races_lost > 0, "no contention observed on a 6v3 grid"
+    assert rep.total_done == rep.total_jobs, rep.summary()
+    # the losers requeued rather than burning out
+    losers = [o for o in rep.outcomes if o.slot_races_lost > 0]
+    assert losers
+    assert all(o.n_done == o.n_jobs for o in losers)
+
+
+def test_slot_race_does_not_burn_attempts_or_suspect_resources():
+    """Races are not failures: with max_attempts=2 and heavy contention
+    every job still completes (a race loss must not consume an attempt),
+    and healthy-but-busy machines are not marked suspect."""
+    market = _crowded_market(sched=SchedulerConfig(max_attempts=2))
+    rep = market.run()
+    assert rep.slot_races_lost > 0
+    assert rep.total_done == rep.total_jobs, rep.summary()
+    assert all(o.stall_reason is None for o in rep.outcomes)
+    for engine in market.engines:
+        assert all(not v.suspected for v in engine.views.values())
+
+
+def test_advisor_reads_free_capacity_not_full_rate():
+    """A broker's view of a resource shrinks when rivals occupy slots."""
+    market = Marketplace(specs=[ResourceSpec(
+        name="big", site="x", chips=1, slots=4, perf_factor=1.0,
+        base_price=1.0, mtbf_hours=float("inf"))], seed=0)
+    eng = market.add_user(MarketUser(name="me", deadline=10 * HOUR,
+                                     budget=1e6, n_jobs=4))
+    eng._refresh_views()
+    full = eng.views["big"].rate()
+    assert eng.views["big"].avail_slots == 4
+    # rival grabs 3 of the 4 slots
+    spec = market.directory.spec("big")
+    st = market.directory.status("big")
+    for _ in range(3):
+        assert st.acquire(spec)
+    eng._refresh_views()
+    assert eng.views["big"].avail_slots == 1
+    assert eng.views["big"].rate() == pytest.approx(full / 4)
+
+
+def test_demand_responsive_price_rises_with_utilization():
+    market = Marketplace(specs=_tight_specs(2, slots=2), seed=0,
+                         demand_elasticity=1.0)
+    idle = market.trade.quote("m0", 0.0)
+    spec = market.directory.spec("m0")
+    st = market.directory.status("m0")
+    st.acquire(spec)
+    half = market.trade.quote("m0", 0.0)
+    st.acquire(spec)
+    busy = market.trade.quote("m0", 0.0)
+    assert idle < half < busy
+    assert busy == pytest.approx(2.0 * idle)   # elasticity 1, util 1
+
+
+def test_market_price_trace_reflects_load():
+    """During a crowded run, the sampled mean grid quote exceeds the
+    idle quote while brokers occupy the queues."""
+    market = _crowded_market(demand_elasticity=1.0)
+    idle = market.mean_quote(0.0)
+    rep = market.run()
+    assert max(p for _, p in rep.price_trace) > idle + 1e-9
+
+
+def test_budget_isolation_between_users():
+    """One broke user stalling must not drain nor block the others."""
+    market = Marketplace(specs=_tight_specs(4), seed=1)
+    market.add_user(MarketUser(name="poor", deadline=20 * HOUR, budget=0.05,
+                               strategy="conservative", n_jobs=10,
+                               est_seconds=1800.0))
+    market.add_user(MarketUser(name="rich", deadline=20 * HOUR, budget=1e6,
+                               strategy="time", n_jobs=10,
+                               est_seconds=1800.0))
+    rep = market.run()
+    poor, rich = rep.outcomes
+    assert poor.user == "poor" and rich.user == "rich"
+    assert poor.n_done < poor.n_jobs          # could not afford the grid
+    assert poor.spent <= 0.05 + 1e-6
+    assert rich.n_done == rich.n_jobs         # unaffected by the stall
+    # ledgers are disjoint: engines never share a ledger object
+    e_poor, e_rich = market.engines
+    assert e_poor.ledger is not e_rich.ledger
+    assert e_rich.ledger.settled == pytest.approx(rich.spent)
+
+
+def test_whole_market_run_is_seed_deterministic():
+    r1 = standard_market(8, n_machines=10, seed=7, n_jobs=12).run()
+    r2 = standard_market(8, n_machines=10, seed=7, n_jobs=12).run()
+    assert r1.stable_repr() == r2.stable_repr()
+    r3 = standard_market(8, n_machines=10, seed=8, n_jobs=12).run()
+    assert r1.stable_repr() != r3.stable_repr()
+
+
+def test_sixteen_users_share_one_clock_and_finish():
+    market = standard_market(16, n_machines=12, seed=2, n_jobs=10)
+    rep = market.run()
+    assert rep.n_users == 16
+    assert rep.total_done == rep.total_jobs, rep.summary()
+    # one shared simulator: every engine saw the same clock object
+    assert len({id(e.sim) for e in market.engines}) == 1
+
+
+def test_duplicate_user_rejected():
+    market = Marketplace(specs=_tight_specs(2), seed=0)
+    market.add_user(MarketUser(name="a", deadline=HOUR, budget=10.0))
+    with pytest.raises(ValueError):
+        market.add_user(MarketUser(name="a", deadline=HOUR, budget=10.0))
+
+
+def test_cancel_during_dispatch_latency_never_runs():
+    """A duplicate killed while its dispatch is still in the WAN hop must
+    not acquire a slot, run, or fire any callback (zombie prevention)."""
+    from repro.core import (DispatchCallbacks, Job, JobSpec,
+                            ResourceDirectory, SimulatedExecutor, Simulator)
+    sim = Simulator()
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r", site="x", mtbf_hours=float("inf")))
+    ex = SimulatedExecutor(sim, d, dispatch_latency=5.0, noise_sigma=0.0)
+    events = []
+    job = Job(spec=JobSpec(job_id="j", experiment="e", point={}, steps=(),
+                           est_seconds_base=60.0))
+    cb = DispatchCallbacks(on_started=lambda j: events.append("start"),
+                           on_done=lambda j, s: events.append("done"),
+                           on_failed=lambda j, r: events.append("fail"),
+                           on_blocked=lambda j, r: events.append("blocked"))
+    ex.submit(job, "r", cb)
+    ex.cancel(job)              # killed before the hop lands
+    sim.run()
+    assert events == []
+    assert d.status("r").running == 0

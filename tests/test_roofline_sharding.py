@@ -84,7 +84,10 @@ def test_type_bytes_tuple_with_comments():
 def mesh16():
     # abstract 16x16 mesh for rule checks (no devices needed)
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:                      # jax >= 0.5: (shape, axis_names)
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:         # jax 0.4.x: ((name, size), ...)
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_rules_shard_divisible_dims(mesh16):

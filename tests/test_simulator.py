@@ -1,0 +1,117 @@
+"""Deterministic DES core: trace reproducibility, failure bookkeeping,
+and clock semantics at the run(until=...) boundary."""
+import math
+
+import pytest
+
+from repro.core import (FailureProcess, ResourceDirectory, ResourceSpec,
+                        Simulator)
+
+HOUR = 3600.0
+
+
+def _flaky_directory(n=5, mtbf=2.0, mttr=0.5):
+    d = ResourceDirectory()
+    for i in range(n):
+        d.register(ResourceSpec(name=f"r{i}", site="x", chips=1,
+                                mtbf_hours=mtbf, mttr_hours=mttr))
+    return d
+
+
+def _failure_trace(seed, until=50 * HOUR):
+    sim = Simulator()
+    directory = _flaky_directory()
+    trace = []
+    fp = FailureProcess(sim, directory, seed=seed,
+                        on_down=lambda r: trace.append((sim.now, "down", r)),
+                        on_up=lambda r: trace.append((sim.now, "up", r)))
+    for name in directory.all_names():
+        fp.install(name)
+    sim.run(until=until)
+    return trace
+
+
+def test_identical_seeds_identical_event_traces():
+    t1 = _failure_trace(seed=11)
+    t2 = _failure_trace(seed=11)
+    assert t1, "no failures in 50 virtual hours at mtbf=2h?"
+    assert t1 == t2           # timestamps AND order, exactly
+    t3 = _failure_trace(seed=12)
+    assert t1 != t3
+
+
+def test_failure_process_never_double_fails_a_down_resource():
+    trace = _failure_trace(seed=3, until=200 * HOUR)
+    last = {}
+    for _, kind, r in trace:
+        assert last.get(r) != kind, f"{r} got two {kind!r} in a row"
+        last[r] = kind
+    # every resource's trace alternates starting with "down"
+    firsts = {}
+    for _, kind, r in trace:
+        firsts.setdefault(r, kind)
+    assert set(firsts.values()) == {"down"}
+
+
+def test_externally_downed_resource_is_not_refailed():
+    """The renewal process checks ``up`` before declaring a failure: a
+    resource already down (e.g. by an operator) must not fire on_down
+    again — the next event it emits is the repair."""
+    sim = Simulator()
+    directory = _flaky_directory(n=1, mtbf=1.0)
+    trace = []
+    fp = FailureProcess(sim, directory, seed=0,
+                        on_down=lambda r: trace.append("down"),
+                        on_up=lambda r: trace.append("up"))
+    fp.install("r0")
+    directory.status("r0").up = False        # operator takes it down
+    sim.run(until=20 * HOUR)
+    assert trace, "renewal process went silent"
+    assert trace[0] == "up"                  # the swallowed double-fail
+    assert all(a != b for a, b in zip(trace, trace[1:]))  # alternates
+
+
+def test_run_until_executes_boundary_event_and_advances_clock():
+    sim = Simulator()
+    fired = []
+    sim.at(10.0, lambda: fired.append("at10"))
+    sim.at(25.0, lambda: fired.append("at25"))
+    sim.run(until=10.0)
+    assert fired == ["at10"]                 # t == until executes
+    assert sim.now == 10.0                   # clock stops AT the boundary
+    sim.run(until=20.0)
+    assert fired == ["at10"]                 # 25.0 is beyond the horizon
+    assert sim.now == 20.0                   # ...but the clock advances
+    sim.run(until=30.0)
+    assert fired == ["at10", "at25"]
+    assert sim.now == 25.0                   # heap drained: last event time
+
+
+def test_same_timestamp_events_fire_in_insertion_order():
+    sim = Simulator()
+    order = []
+    for i in range(5):
+        sim.at(7.0, lambda i=i: order.append(i))
+    sim.run()
+    assert order == [0, 1, 2, 3, 4]
+
+
+def test_scheduling_into_the_past_raises():
+    sim = Simulator()
+    sim.at(5.0, lambda: None)
+    sim.run()
+    assert sim.now == 5.0
+    with pytest.raises(ValueError):
+        sim.at(4.0, lambda: None)
+    sim.after(-10.0, lambda: None)           # clamped to "now", not an error
+    sim.run()
+    assert sim.now == 5.0
+
+
+def test_stop_halts_immediately():
+    sim = Simulator()
+    seen = []
+    sim.at(1.0, lambda: (seen.append(1), sim.stop()))
+    sim.at(2.0, lambda: seen.append(2))
+    sim.run(until=math.inf)
+    assert seen == [1]
