@@ -1,0 +1,122 @@
+"""Auction-vs-posted-price market sweep: what negotiation buys.
+
+For N ∈ {2, 4, 8, 16} brokers on the same seeded GUSTO-like testbed,
+runs the market twice — once all posted-price (cost/time/conservative
+mix) and once with auction brokers in the mix (double-auction contracts
+via the per-site trade servers) — and compares spend, deadlines met and
+contract volume.  Re-runs the largest mixed market with the same seed
+and asserts byte-identical results, then writes the whole table to
+``BENCH_auctions.json`` at the repo root (the perf trajectory file).
+
+    PYTHONPATH=src python -m benchmarks.bench_auctions            # full
+    PYTHONPATH=src python -m benchmarks.bench_auctions --smoke    # CI
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import mixed_auction_market, standard_market
+
+HOUR = 3600.0
+
+SWEEP = (2, 4, 8, 16)
+SMOKE_SWEEP = (2,)
+SEED = 23
+N_MACHINES = 16
+N_JOBS = 20
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_auctions.json")
+
+
+def _run(kind: str, n_users: int, seed: int = SEED):
+    maker = standard_market if kind == "posted" else mixed_auction_market
+    market = maker(n_users, n_machines=N_MACHINES, seed=seed,
+                   n_jobs=N_JOBS, demand_elasticity=1.0)
+    t0 = time.time()
+    rep = market.run()
+    wall = time.time() - t0
+    market.bank.reconcile({u.name: e.ledger for u, e in
+                           zip(market.users, market.engines)})
+    return market, rep, wall
+
+
+def _row(kind: str, rep, wall: float) -> dict:
+    return {
+        "kind": kind,
+        "n_users": rep.n_users,
+        "done": rep.total_done,
+        "jobs": rep.total_jobs,
+        "deadline_met_frac": rep.deadline_met_frac,
+        "total_spent_gd": rep.total_spent,
+        "slot_races_lost": rep.slot_races_lost,
+        "contracts": rep.contracts_struck,
+        "owner_revenue": rep.owner_revenue,
+        "wall_s": wall,
+    }
+
+
+def sweep_table(csv: bool = False, sweep=SWEEP):
+    rows = []
+    for n in sweep:
+        _, posted, wall_p = _run("posted", n)
+        market, mixed, wall_m = _run("auction", n)
+        rows.append((n, _row("posted", posted, wall_p),
+                     _row("auction", mixed, wall_m), market))
+    if not csv:
+        print("users  kind     done/jobs  met%   spend_G$  contracts  wall_s")
+        for n, p, a, _ in rows:
+            for r in (p, a):
+                print(f"{n:5d}  {r['kind']:7s} {r['done']:5d}/{r['jobs']:<5d}"
+                      f" {r['deadline_met_frac']:5.0%} "
+                      f"{r['total_spent_gd']:9.1f} {r['contracts']:9d} "
+                      f"{r['wall_s']:7.2f}")
+        last = rows[-1]
+        if last[1]["total_spent_gd"] > 0:
+            save = 1 - last[2]["total_spent_gd"] / last[1]["total_spent_gd"]
+            print(f"\nN={last[0]}: auction mix saves {save:.1%} of the "
+                  f"posted-price spend "
+                  f"({last[2]['contracts']} contracts struck)")
+    return rows
+
+
+def determinism_check(csv: bool, n: int):
+    t0 = time.time()
+    _, r1, _ = _run("auction", n)
+    _, r2, _ = _run("auction", n)
+    wall = time.time() - t0
+    identical = r1.stable_repr() == r2.stable_repr()
+    if not csv:
+        print(f"same-seed auction-market re-run byte-identical: {identical}")
+    if not identical:
+        raise AssertionError("auction market run is not seed-deterministic")
+    return [("auction_determinism", wall * 1e6, int(identical))]
+
+
+def main(csv: bool = False, smoke: bool = False):
+    sweep = SMOKE_SWEEP if smoke else SWEEP
+    rows = sweep_table(csv, sweep=sweep)
+    out = {
+        "bench": "auctions",
+        "seed": SEED,
+        "n_machines": N_MACHINES,
+        "n_jobs_per_user": N_JOBS,
+        "sweep": [{"n_users": n, "posted": p, "auction": a}
+                  for n, p, a, _ in rows],
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    if not csv:
+        print(f"wrote {OUT_PATH}")
+    results = []
+    for n, p, a, _ in rows:
+        results.append((f"auction_market_{n}u", a["wall_s"] * 1e6,
+                        a["contracts"]))
+    return results + determinism_check(csv, sweep[-1])
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

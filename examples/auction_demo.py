@@ -1,0 +1,62 @@
+"""Negotiated-economy demo: auctions, tenders, arbitrage, owner revenue.
+
+Three acts, all on one seeded virtual clock:
+
+1. a mixed market — auction brokers (double-auction contracts through
+   the per-site trade servers) compete head-to-head with posted-price
+   brokers for the same machines;
+2. a contract-net negotiation — call for tenders, counter-offers from
+   every domain, accept-within-validity (and what happens if you wait
+   too long);
+3. the GridBank's owner revenue statement — every grid-dollar spent by
+   a broker reconciles to a grid-dollar earned by a domain.
+
+    PYTHONPATH=src python examples/auction_demo.py
+"""
+from repro.core import NegotiationTimeout, mixed_auction_market
+
+HOUR = 3600.0
+
+
+def main():
+    market = mixed_auction_market(8, n_machines=12, seed=42, n_jobs=16,
+                                  demand_elasticity=1.0)
+    report = market.run()
+
+    print("=== act 1: auction brokers vs the price board ===")
+    print(report.summary())
+    house = market.auction_house
+    rounds = [r for r in house.rounds if r.matched_slots]
+    print(f"\nclearing rounds that crossed: {len(rounds)} "
+          f"(of {len(house.rounds)}); contracts struck: "
+          f"{len(house.contracts)}")
+    for c in house.contracts[:5]:
+        print(f"  #{c.contract_id} {c.user} <- {c.resource} ({c.site}) "
+              f"{c.slots} slot(s) @ {c.chip_hour_price:.3f} G$/chip-h "
+              f"[{c.start / HOUR:.0f}h, {c.end / HOUR:.0f}h) via {c.via}")
+
+    print("\n=== act 2: contract-net tender ===")
+    t = market.sim.now
+    offers = house.call_for_tenders(t, "walk-in")
+    best = offers[0]
+    print(f"{len(offers)} counter-offers; best: {best.resource} "
+          f"({best.site}) @ {best.chip_hour_price:.3f} G$/chip-h, "
+          f"valid until t={best.valid_until / HOUR:.2f}h")
+    contract = house.accept(best, "walk-in", t + 60.0)
+    print(f"accepted inside the window -> contract "
+          f"#{contract.contract_id} at the offered price")
+    stale = offers[1]
+    try:
+        house.accept(stale, "walk-in", stale.valid_until + HOUR)
+    except NegotiationTimeout as e:
+        print(f"late acceptance refused: {e}")
+
+    print("\n=== act 3: owner revenue accounting ===")
+    print(market.bank.statement())
+    total = market.bank.reconcile(
+        {u.name: e.ledger for u, e in zip(market.users, market.engines)})
+    print(f"books balance: {total:.2f} G$ spent == {total:.2f} G$ earned")
+
+
+if __name__ == "__main__":
+    main()

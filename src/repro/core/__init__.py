@@ -2,14 +2,22 @@
 
 Components (paper Figure 1): client, parametric engine, scheduler,
 dispatcher, job wrapper — plus the GRACE computational-economy market
-(trade server, bids, reservations) and the virtual-time grid simulator.
+(per-site trade servers, sealed bids, reservations, the double-auction /
+contract-net auction house, owner revenue accounting) and the
+virtual-time grid simulator.
 """
+from repro.core.accounting import (BankEntry, GridBank, ReconciliationError)
+from repro.core.auctions import (Ask, AuctionBid, AuctionBroker,
+                                 AuctionHouse, ClearingRound, Contract,
+                                 CounterOffer, DoubleAuctionBook,
+                                 NegotiationTimeout)
 from repro.core.economy import (AdmissionError, Bid, BudgetLedger,
-                                PriceSchedule, Reservation, TradeServer,
-                                UserRequirements)
+                                PriceSchedule, Reservation, TradeFederation,
+                                TradeServer, UserRequirements)
 from repro.core.jobs import Job, JobSpec, JobStatus
 from repro.core.marketplace import (Marketplace, MarketReport, MarketUser,
-                                    UserOutcome, standard_market)
+                                    UserOutcome, mixed_auction_market,
+                                    standard_market)
 from repro.core.parametric import ExperimentReport, NimrodG
 from repro.core.persistence import Journal, load_events, replay
 from repro.core.plan import Plan, PlanError, parse_plan, substitute
@@ -24,15 +32,19 @@ from repro.core.dispatcher import (SLOT_LOST, DispatchCallbacks, Dispatcher,
                                    StagingProxy)
 
 __all__ = [
-    "AdmissionError", "AllocationDecision", "Bid", "BudgetLedger",
-    "ContractQuote", "DispatchCallbacks", "Dispatcher", "ExperimentReport",
-    "FailureProcess", "Job", "JobSpec", "JobStatus", "Journal",
-    "LocalExecutor", "MarketReport", "MarketUser", "Marketplace", "NimrodG",
-    "Plan", "PlanError", "PriceSchedule", "Reservation", "ResourceDirectory",
-    "ResourceSpec", "ResourceStatus", "ResourceView", "SLOT_LOST",
-    "ScheduleAdvisor", "SchedulerConfig", "SimulatedExecutor", "Simulator",
-    "StagingProxy", "TradeServer", "UserOutcome", "UserRequirements",
-    "duration_model", "gusto_like_testbed", "load_events",
+    "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
+    "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
+    "ClearingRound", "Contract", "ContractQuote", "CounterOffer",
+    "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
+    "ExperimentReport", "FailureProcess", "GridBank", "Job", "JobSpec",
+    "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
+    "Marketplace", "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
+    "PriceSchedule", "ReconciliationError", "Reservation",
+    "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
+    "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig", "SimulatedExecutor",
+    "Simulator", "StagingProxy", "TradeFederation", "TradeServer",
+    "UserOutcome", "UserRequirements", "duration_model",
+    "gusto_like_testbed", "load_events", "mixed_auction_market",
     "negotiate_contract", "parse_plan", "replay", "standard_market",
     "substitute",
 ]

@@ -1,0 +1,131 @@
+"""GridBank: resource-owner revenue accounting (paper §7, GRACE).
+
+GRACE's economy has two sides.  PR 1 built the consumer side — each
+broker's ``BudgetLedger`` tracks what a *user* spends.  This module adds
+the producer side: every settlement a broker makes is mirrored into a
+grid-wide bank as revenue for the resource's owner (its administrative
+domain).  Owners can then see which users fund them (and extend quota
+courtesies to proven patrons — admission driven by realized revenue),
+and the market as a whole can be audited: every grid-dollar a user spent
+must show up as exactly one grid-dollar of some owner's revenue.
+
+Reconciliation notes: per-user totals are accumulated in the same order
+and with the same ``+=`` operations as the brokers' ledgers, so
+``user_spend(u) == ledger.settled`` holds bit-for-bit.  The grand
+totals are genuinely two-sided — producer books (per-owner sums) vs.
+consumer books (per-user sums) — and both are checked against an
+``fsum`` over the raw entry log, to within one part in 1e9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Tuple
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BankEntry:
+    """One settlement: ``user`` paid ``owner`` ``amount`` G$ for chip
+    time on ``resource`` at virtual time ``t``."""
+    t: float
+    user: str
+    owner: str                      # administrative domain (spec.site)
+    resource: str
+    amount: float
+    kind: str = "settle"            # settle | kill | contract
+
+
+class ReconciliationError(Exception):
+    """The books do not balance: spend and revenue diverged."""
+
+
+class GridBank:
+    """Double-entry ledger between users and resource owners."""
+
+    def __init__(self):
+        self.entries: List[BankEntry] = []
+        self._spend: Dict[str, float] = {}
+        self._revenue: Dict[str, float] = {}
+        self._pair: Dict[Tuple[str, str], float] = {}
+
+    # -- recording -----------------------------------------------------
+    def record(self, *, t: float, user: str, owner: str, resource: str,
+               amount: float, kind: str = "settle") -> None:
+        if amount == 0.0:
+            return                  # nothing moved; keep the book compact
+        self.entries.append(BankEntry(t=t, user=user, owner=owner,
+                                      resource=resource, amount=amount,
+                                      kind=kind))
+        self._spend[user] = self._spend.get(user, 0.0) + amount
+        self._revenue[owner] = self._revenue.get(owner, 0.0) + amount
+        key = (user, owner)
+        self._pair[key] = self._pair.get(key, 0.0) + amount
+
+    # -- queries -------------------------------------------------------
+    def users(self) -> List[str]:
+        return sorted(self._spend)
+
+    def owners(self) -> List[str]:
+        return sorted(self._revenue)
+
+    def user_spend(self, user: str) -> float:
+        return self._spend.get(user, 0.0)
+
+    def owner_revenue(self, owner: str) -> float:
+        return self._revenue.get(owner, 0.0)
+
+    def pair_spend(self, user: str, owner: str) -> float:
+        """What ``user`` has actually paid ``owner`` so far — the
+        realized-revenue signal owners feed back into admission."""
+        return self._pair.get((user, owner), 0.0)
+
+    def total_revenue(self) -> float:
+        """Grand total from the producer-side books (per-owner sums)."""
+        return math.fsum(self._revenue.values())
+
+    def total_spend(self) -> float:
+        """Grand total from the consumer-side books (per-user sums) —
+        independently accumulated, so comparing it against
+        ``total_revenue`` is a genuine two-sided audit."""
+        return math.fsum(self._spend.values())
+
+    def top_patrons(self, owner: str, n: int = 3) -> List[Tuple[str, float]]:
+        pairs = [(u, amt) for (u, o), amt in self._pair.items()
+                 if o == owner]
+        return sorted(pairs, key=lambda p: (-p[1], p[0]))[:n]
+
+    # -- audit ---------------------------------------------------------
+    def reconcile(self, ledgers: Optional[Mapping[str, object]] = None,
+                  tol: float = 0.0) -> float:
+        """Audit the books; returns the grand total that both sides agree
+        on.  Raises ``ReconciliationError`` if (a) owner revenue and user
+        spend diverge (they are the same entry multiset summed two ways —
+        fsum makes the comparison exact), or (b) a broker ledger's
+        ``settled`` differs from the bank's record of that user."""
+        by_owner = self.total_revenue()
+        by_user = self.total_spend()
+        total = math.fsum(e.amount for e in self.entries)
+        if not (abs(by_owner - by_user) <= tol + 1e-9 * max(1.0, abs(total))):
+            raise ReconciliationError(
+                f"owner revenue {by_owner!r} != user spend {by_user!r}")
+        if ledgers is not None:
+            for user, ledger in sorted(ledgers.items()):
+                settled = getattr(ledger, "settled", ledger)
+                if settled != self.user_spend(user):
+                    raise ReconciliationError(
+                        f"user {user!r}: ledger settled {settled!r} != "
+                        f"bank record {self.user_spend(user)!r}")
+        return total
+
+    def statement(self) -> str:
+        """Human-readable owner revenue statement."""
+        lines = [f"GridBank: {len(self.entries)} settlements, "
+                 f"{self.total_revenue():.2f}G$ total"]
+        for owner in self.owners():
+            patrons = ", ".join(f"{u}:{amt:.1f}"
+                                for u, amt in self.top_patrons(owner))
+            lines.append(f"  {owner:10s} revenue={self.owner_revenue(owner):10.2f}"
+                         f"  top patrons: {patrons}")
+        return "\n".join(lines)

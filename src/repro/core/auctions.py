@@ -1,0 +1,484 @@
+"""GRACE auction house: negotiated resource trading (paper §7).
+
+Nimrod/G's economy is not just posted prices.  The GRACE follow-up
+papers (cs/0111048, cs/0203019) spell out the negotiation protocols a
+computational market needs beyond take-it-or-leave-it quotes:
+
+* a **double auction** — brokers submit sealed bids for slot capacity,
+  owners submit asks for their idle queues, and periodic clearing rounds
+  on the virtual clock cross them at a uniform price, producing
+  price-locked ``Contract``s for slot-hours;
+* a **contract-net / tender** path — a broker issues a call for
+  tenders, every domain's owners counter-offer (price valid for a
+  window), and the broker accepts or lets the offer lapse
+  (``NegotiationTimeout`` forces a re-solicit, never a stale price).
+
+Trading happens *across per-site trade servers*: each administrative
+domain runs its own book, all rounds share one clock, and brokers
+arbitrage price differences between domains by steering their bids at
+whichever site currently clears cheapest.  Struck contracts are locked
+in as advance reservations on the owning domain's trade server, so the
+whole settlement path (``TradeServer.effective_price`` →
+``NimrodG._handle_done``) automatically charges the negotiated price,
+not the spot quote.
+
+Everything is deterministic in virtual time: books iterate in sorted
+order, ties break lexically, and no wall clock or RNG is consulted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.economy import (AdmissionError, TradeFederation, TradeServer)
+from repro.core.resources import ResourceDirectory
+from repro.core.simulator import Simulator
+
+HOUR = 3600.0
+
+
+class NegotiationTimeout(Exception):
+    """A counter-offer was accepted after its validity window closed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AuctionBid:
+    """A broker's sealed bid into one site's double auction: up to
+    ``slots`` queue slots for the next contract window, at no more than
+    ``chip_hour_price`` G$ per chip-hour."""
+    user: str
+    chip_hour_price: float          # limit price (max the broker pays)
+    slots: int
+    valid_until: float
+
+    def valid_at(self, t: float) -> bool:
+        return t <= self.valid_until + 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Ask:
+    """An owner's offer into the book: ``slots`` uncommitted slots on
+    ``resource`` for the window, at no less than ``chip_hour_price``."""
+    resource: str
+    site: str
+    chip_hour_price: float          # reserve price (min the owner takes)
+    slots: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterOffer:
+    """An owner's reply to a call for tenders (contract-net leg)."""
+    resource: str
+    site: str
+    chip_hour_price: float
+    slots: int
+    start: float
+    end: float
+    valid_until: float
+
+
+@dataclasses.dataclass
+class Contract:
+    """A struck trade: ``user`` holds ``slots`` on ``resource`` over
+    [start, end) at the locked ``chip_hour_price``.  Settlement is
+    usage-based (pay for chip time actually held), the lock is carried
+    by the advance reservations created at signing."""
+    contract_id: int
+    user: str
+    resource: str
+    site: str
+    chip_hour_price: float
+    slots: int
+    start: float
+    end: float
+    via: str                        # "auction" | "tender"
+    reservation_ids: Tuple[int, ...] = ()
+
+    def active_at(self, t: float) -> bool:
+        return self.start <= t < self.end
+
+    def max_commitment(self, directory: ResourceDirectory,
+                       t: Optional[float] = None) -> float:
+        """Worst-case G$ this contract can still cost if every remaining
+        slot-hour is consumed — the number budget guards must respect."""
+        left = self.end - (self.start if t is None else max(self.start, t))
+        if left <= 0:
+            return 0.0
+        chips = directory.spec(self.resource).chips
+        return self.chip_hour_price * chips * self.slots * left / HOUR
+
+
+@dataclasses.dataclass(frozen=True)
+class ClearingRound:
+    """Audit record of one site's clearing: what crossed and at what
+    uniform price."""
+    t: float
+    site: str
+    clearing_price: float
+    matched_slots: int
+    n_bids: int
+    n_asks: int
+
+
+class DoubleAuctionBook:
+    """One administrative domain's order book.
+
+    Brokers replace (not stack) their standing bid between rounds; asks
+    are generated fresh at each clearing from the domain's live state —
+    an owner offers exactly the slots not yet promised to anyone over
+    the coming window, at a reserve price that discounts the posted
+    quote in proportion to idleness (an empty queue earns nothing, so
+    its owner sells below the posted price rather than not at all)."""
+
+    def __init__(self, server: TradeServer, *, idle_discount: float = 0.25):
+        self.server = server
+        self.idle_discount = idle_discount
+        self.bids: Dict[str, AuctionBid] = {}
+
+    def submit(self, bid: AuctionBid) -> None:
+        self.bids[bid.user] = bid
+
+    def make_asks(self, t: float, window: float) -> List[Ask]:
+        asks = []
+        for name in self.server.resources():
+            if not self.server.directory.status(name).up:
+                continue
+            slots = self.server.reservable_slots(name, t, t + window)
+            if slots <= 0:
+                continue
+            # forward capacity is priced off the posted schedule (the
+            # spot demand premium is transient), then discounted in
+            # proportion to idleness: an empty queue earns nothing, so
+            # its owner would rather sell below list than not at all
+            util = self.server.utilization(name)
+            price = self.server.forward_quote(name, t) * (
+                1.0 - self.idle_discount * (1.0 - util))
+            asks.append(Ask(resource=name, site=self.server.site or "",
+                            chip_hour_price=price, slots=slots))
+        return asks
+
+    def clear(self, t: float, window: float
+              ) -> Tuple[List[Tuple[str, str, int]], float,
+                         ClearingRound]:
+        """Uniform-price double auction (k = 1/2).
+
+        Expand bids and asks into single-slot units, sort bids
+        descending and asks ascending by limit price, and match the
+        longest prefix where demand still out-prices supply.  All
+        matched units trade at one clearing price — the midpoint of the
+        marginal matched pair, which by construction lies within every
+        matched bid's and ask's limits.
+
+        Returns ([(user, resource, slots)], clearing_price, audit).
+        """
+        live_bids = sorted(
+            (b for b in self.bids.values() if b.valid_at(t) and b.slots > 0),
+            key=lambda b: (-b.chip_hour_price, b.user))
+        asks = self.make_asks(t, window)
+        self.bids.clear()            # bids are per-round: re-bid or drop out
+
+        bid_units: List[AuctionBid] = []
+        for b in live_bids:
+            bid_units.extend([b] * b.slots)
+        ask_units: List[Ask] = []
+        for a in sorted(asks, key=lambda a: (a.chip_hour_price, a.resource)):
+            ask_units.extend([a] * a.slots)
+
+        k = 0
+        while (k < len(bid_units) and k < len(ask_units)
+               and bid_units[k].chip_hour_price
+               >= ask_units[k].chip_hour_price - 1e-12):
+            k += 1
+        audit = ClearingRound(t=t, site=self.server.site or "",
+                              clearing_price=0.0, matched_slots=k,
+                              n_bids=len(bid_units), n_asks=len(ask_units))
+        if k == 0:
+            return [], 0.0, audit
+        price = 0.5 * (bid_units[k - 1].chip_hour_price
+                       + ask_units[k - 1].chip_hour_price)
+        matched: Dict[Tuple[str, str], int] = {}
+        for i in range(k):
+            key = (bid_units[i].user, ask_units[i].resource)
+            matched[key] = matched.get(key, 0) + 1
+        trades = sorted((u, r, n) for (u, r), n in matched.items())
+        return trades, price, dataclasses.replace(audit,
+                                                  clearing_price=price)
+
+
+class AuctionHouse:
+    """Federates one ``DoubleAuctionBook`` per site and runs the
+    negotiation protocols on the shared virtual clock.
+
+    Double-auction leg: ``start(sim)`` schedules a clearing round every
+    ``round_interval`` seconds; each round clears every site's book
+    (sites in sorted order) and converts matches into ``Contract``s
+    backed by price-locked reservations on the owning trade server.
+
+    Contract-net leg: ``call_for_tenders`` collects counter-offers from
+    every domain (price-sorted — the arbitrage view), ``accept`` strikes
+    a contract while the offer is still valid and raises
+    ``NegotiationTimeout`` after it lapses.
+    """
+
+    def __init__(self, federation: TradeFederation, *,
+                 round_interval: float = HOUR,
+                 window: float = 2 * HOUR,
+                 idle_discount: float = 0.25,
+                 tender_discount: float = 0.15,
+                 tender_validity: float = 0.5 * HOUR):
+        self.federation = federation
+        self.round_interval = round_interval
+        self.window = window
+        self.tender_discount = tender_discount
+        self.tender_validity = tender_validity
+        self.books: Dict[str, DoubleAuctionBook] = {
+            site: DoubleAuctionBook(server, idle_discount=idle_discount)
+            for site, server in federation.servers.items()}
+        self.contracts: List[Contract] = []       # full audit trail
+        self._live: Dict[str, List[Contract]] = {}  # per-user, pruned
+        self.rounds: List[ClearingRound] = []
+        self._next_cid = 1
+        self._subscribers: Dict[str, Callable[[Contract], None]] = {}
+        self._sim: Optional[Simulator] = None
+
+    # -- wiring --------------------------------------------------------
+    def register(self, user: str,
+                 on_contract: Callable[[Contract], None]) -> None:
+        self._subscribers[user] = on_contract
+
+    def start(self, sim: Simulator) -> None:
+        """Begin periodic clearing rounds on the simulator clock."""
+        self._sim = sim
+        sim.every(self.round_interval, self._run_round,
+                  start_delay=self.round_interval)
+
+    def _run_round(self) -> None:
+        assert self._sim is not None
+        self.clear_all(self._sim.now)
+
+    # -- double auction ------------------------------------------------
+    def submit_bid(self, site: str, bid: AuctionBid) -> None:
+        self.books[site].submit(bid)
+
+    def clear_all(self, t: float) -> List[Contract]:
+        struck: List[Contract] = []
+        for site in sorted(self.books):
+            trades, price, audit = self.books[site].clear(t, self.window)
+            self.rounds.append(audit)
+            for user, resource, slots in trades:
+                c = self._strike(user, resource, site, price, slots,
+                                 t, t + self.window, via="auction")
+                if c is not None:
+                    struck.append(c)
+        return struck
+
+    # -- contract-net / tender -----------------------------------------
+    def call_for_tenders(self, t: float, user: str, *,
+                         window: Optional[float] = None
+                         ) -> List[CounterOffer]:
+        """Broker solicits; every domain's owners counter-offer.  The
+        tender discount beats the idle-auction discount only modestly —
+        a direct negotiation skips the auction's price discovery, so
+        owners concede less."""
+        window = self.window if window is None else window
+        offers: List[CounterOffer] = []
+        for site in sorted(self.books):
+            server = self.books[site].server
+            for spec in server.directory.discover(user, site=site):
+                name = spec.name
+                slots = server.reservable_slots(name, t, t + window)
+                if slots <= 0:
+                    continue
+                util = server.utilization(name)
+                price = server.quote(name, t, user) * (
+                    1.0 - self.tender_discount * (1.0 - util))
+                offers.append(CounterOffer(
+                    resource=name, site=site, chip_hour_price=price,
+                    slots=slots, start=t, end=t + window,
+                    valid_until=t + self.tender_validity))
+        return sorted(offers, key=lambda o: (o.chip_hour_price, o.resource))
+
+    def accept(self, offer: CounterOffer, user: str, t: float,
+               slots: Optional[int] = None) -> Contract:
+        """Accept a counter-offer inside its validity window.  Late
+        acceptance is a protocol violation: the owner's price has moved
+        on, the broker must re-solicit."""
+        if t > offer.valid_until + 1e-9:
+            raise NegotiationTimeout(
+                f"offer on {offer.resource} expired at "
+                f"{offer.valid_until:.0f}s, acceptance attempted at "
+                f"{t:.0f}s — re-solicit tenders")
+        want = offer.slots if slots is None else min(slots, offer.slots)
+        c = self._strike(user, offer.resource, offer.site,
+                         offer.chip_hour_price, want, offer.start,
+                         offer.end, via="tender")
+        if c is None:
+            raise AdmissionError(
+                f"{offer.resource}: capacity gone before acceptance")
+        return c
+
+    def decline(self, offer: CounterOffer) -> None:
+        """Contract-net completeness: declining is free and stateless."""
+
+    # -- common --------------------------------------------------------
+    def _strike(self, user: str, resource: str, site: str, price: float,
+                slots: int, start: float, end: float, *, via: str
+                ) -> Optional[Contract]:
+        # asks are user-agnostic, so authorization is enforced at
+        # signing: a restricted resource never contracts to a stranger
+        spec = self.federation.directory.spec(resource)
+        if spec.authorized_users and user not in spec.authorized_users:
+            return None
+        server = self.federation.servers[site]
+        rids = []
+        for _ in range(slots):
+            try:
+                r = server.reserve(resource, user, start, end, start,
+                                   locked_price=price)
+            except AdmissionError:
+                break               # capacity raced away mid-signing
+            rids.append(r.reservation_id)
+        if not rids:
+            return None
+        c = Contract(contract_id=self._next_cid, user=user,
+                     resource=resource, site=site, chip_hour_price=price,
+                     slots=len(rids), start=start, end=end, via=via,
+                     reservation_ids=tuple(rids))
+        self._next_cid += 1
+        self.contracts.append(c)
+        self._live.setdefault(user, []).append(c)
+        sub = self._subscribers.get(user)
+        if sub is not None:
+            sub(c)
+        return c
+
+    def contracts_for(self, user: str) -> List[Contract]:
+        return [c for c in self.contracts if c.user == user]
+
+    def outstanding_commitment(self, user: str, t: float) -> float:
+        """Worst-case G$ of the user's not-yet-elapsed contracted
+        slot-hours — what budget guards must subtract from headroom.
+        Scans a per-user live index pruned on access (``contracts``
+        keeps the full history for audits), so broker ticks stay O(live)
+        however long the market has been trading."""
+        live = self._live.get(user)
+        if not live:
+            return 0.0
+        if any(c.end <= t for c in live):
+            live = [c for c in live if c.end > t]
+            self._live[user] = live
+        return sum(c.max_commitment(self.federation.directory, t)
+                   for c in live)
+
+
+class AuctionBroker:
+    """The bidding policy one engine runs when its user chose
+    ``strategy="auction"``.
+
+    Each scheduling tick it (re)places a sealed bid at the site that is
+    currently cheapest *per job* for it (cross-domain arbitrage), priced
+    just under the best posted quote — the broker only wants the auction
+    to beat the price board, never to outbid it.  Bid size is capped so
+    that worst-case contracted commitments can never exceed the
+    remaining budget.
+    """
+
+    def __init__(self, house: AuctionHouse, user: str, *,
+                 bid_discount: float = 1.0,
+                 commit_fraction: float = 0.8):
+        self.house = house
+        self.user = user
+        self.bid_discount = bid_discount
+        self.commit_fraction = commit_fraction
+        self.contracts: List[Contract] = []      # full history (audit)
+        self._live: List[Contract] = []          # pruned on access
+        house.register(user, self._on_contract)
+
+    def _on_contract(self, c: Contract) -> None:
+        self.contracts.append(c)
+        self._live.append(c)
+
+    def withdraw(self, t: float = 0.0) -> None:
+        """Leave the market (the experiment is over): pull all standing
+        bids so no further contract can be struck, and cancel the
+        reservations behind contracts that have not yet elapsed — a
+        finished broker must not keep blocking capacity rivals could
+        trade for."""
+        for book in self.house.books.values():
+            book.bids.pop(self.user, None)
+        for c in self._live:
+            if c.end > t:
+                for rid in c.reservation_ids:
+                    self.house.federation.cancel(rid)
+        self._live = []
+
+    def active_contracts(self, t: float) -> List[Contract]:
+        """Contracts covering ``t``, scanning only the not-yet-elapsed
+        list (dropped on access — every-tick calls stay O(live))."""
+        if any(c.end <= t for c in self._live):
+            self._live = [c for c in self._live if c.end > t]
+        return [c for c in self._live if c.active_at(t)]
+
+    def contracted_resources(self, t: float) -> List[str]:
+        return sorted({c.resource for c in self.active_contracts(t)})
+
+    # ------------------------------------------------------------------
+    def step(self, t: float, est_job_seconds: Dict[str, float],
+             remaining_jobs: int, ledger) -> Optional[AuctionBid]:
+        """Place (or refresh) this round's sealed bid.  Returns the bid
+        for observability, or None when there is nothing to bid for."""
+        if remaining_jobs <= 0:
+            return None
+        fed = self.house.federation
+        directory = fed.directory
+
+        # arbitrage: score each site by its cheapest forward
+        # cost-per-job — the posted price the broker would otherwise pay
+        # for window capacity there
+        best_site, best_cpj, site_floor = "", math.inf, math.inf
+        for site, server in fed.servers.items():
+            for name in server.resources():
+                if name not in est_job_seconds:
+                    continue
+                if not directory.status(name).up:
+                    continue
+                q = server.forward_quote(name, t, self.user)
+                cpj = q * directory.spec(name).chips \
+                    * est_job_seconds[name] / HOUR
+                if cpj < best_cpj - 1e-12 or (abs(cpj - best_cpj) <= 1e-12
+                                              and site < best_site):
+                    best_site, best_cpj = site, cpj
+                    site_floor = q
+        if not best_site or not math.isfinite(best_cpj):
+            return None
+
+        # bid the spot-equivalent value (truthful for a uniform-price
+        # auction): the clearing midpoint, not the limit, sets the
+        # actual price, so wins always come in at-or-under spot
+        price = self.bid_discount * site_floor
+        if price <= 0.0:
+            return None
+
+        # demand: enough slots to retire the backlog within the window
+        server = fed.servers[best_site]
+        ests = [est_job_seconds[n] for n in server.resources()
+                if n in est_job_seconds]
+        est = min(ests) if ests else HOUR
+        wanted = max(1, math.ceil(remaining_jobs * est / self.house.window))
+
+        # budget cap: worst-case cost of everything contracted so far
+        # plus this bid must fit inside the remaining budget
+        max_chips = max((directory.spec(n).chips
+                         for n in server.resources()), default=1)
+        unit_cost = price * max_chips * self.house.window / HOUR
+        already = self.house.outstanding_commitment(self.user, t)
+        headroom = ledger.remaining * self.commit_fraction - already
+        affordable = int(headroom / unit_cost) if unit_cost > 0 else 0
+        slots = min(wanted, affordable)
+        if slots <= 0:
+            return None
+        bid = AuctionBid(user=self.user, chip_hour_price=price, slots=slots,
+                         valid_until=t + self.house.round_interval + 1.0)
+        self.house.submit_bid(best_site, bid)
+        return bid

@@ -90,23 +90,53 @@ class AdmissionError(Exception):
 class TradeServer:
     """GRACE bid-server + trade-manager: quotes, sealed bids, reservations.
 
-    One per grid (in reality one per domain; a single instance keeps the
-    simulation simple while preserving the protocol shape).  With many
-    brokers sharing the grid, quotes reflect live demand (queue
-    utilization feeds each owner's ``PriceSchedule``) and reservations go
-    through admission control: a window can hold at most ``slots``
-    overlapping reservations, and optionally at most
-    ``max_reservations_per_user`` per user across the grid.
+    One per administrative domain (``site``) — or, with ``site=None``,
+    one for the whole grid (the single-server shape the early tests and
+    examples use).  With many brokers sharing the grid, quotes reflect
+    live demand (queue utilization feeds each owner's ``PriceSchedule``)
+    and reservations go through admission control: a window can hold at
+    most ``slots`` overlapping reservations, and optionally at most
+    ``max_reservations_per_user`` per user across the domain.
+
+    A sealed bid's price is honored for ``bid_validity`` seconds; a
+    settlement arriving later must re-quote (``honored_price``).  If a
+    ``GridBank`` is attached, owners may extend the per-user reservation
+    quota for proven patrons (realized revenue drives admission).
     """
 
     def __init__(self, directory: ResourceDirectory,
                  schedules: Dict[str, PriceSchedule],
-                 max_reservations_per_user: Optional[int] = None):
+                 max_reservations_per_user: Optional[int] = None,
+                 site: Optional[str] = None,
+                 bid_validity: float = HOUR,
+                 bank=None,
+                 patron_spend_threshold: float = math.inf,
+                 patron_quota_bonus: int = 0):
         self.directory = directory
         self.schedules = schedules
         self.max_reservations_per_user = max_reservations_per_user
+        self.site = site
+        self.bid_validity = bid_validity
+        self.bank = bank
+        self.patron_spend_threshold = patron_spend_threshold
+        self.patron_quota_bonus = patron_quota_bonus
         self.reservations: List[Reservation] = []
         self._next_rid = 1
+        self._rid_step = 1       # federation strides this for unique ids
+
+    def _prune(self, t: float) -> None:
+        """Drop expired reservations so long market runs never degrade
+        into O(total-reservations-ever) scans.  An expired reservation
+        can no longer price a query (``start <= t < end`` fails) nor
+        block admission for windows at/after ``t``."""
+        if any(r.end <= t for r in self.reservations):
+            self.reservations = [r for r in self.reservations if r.end > t]
+
+    def resources(self) -> List[str]:
+        """Names this server trades (its domain's slice of the grid)."""
+        return [n for n in self.directory.all_names()
+                if self.site is None
+                or self.directory.spec(n).site == self.site]
 
     def utilization(self, resource: str) -> float:
         return self.directory.status(resource).utilization(
@@ -117,13 +147,22 @@ class TradeServer:
         util = self.utilization(resource) if sched.demand_elasticity else 0.0
         return sched.chip_hour_price(t, user, utilization=util)
 
+    def forward_quote(self, resource: str, t: float, user: str = "") -> float:
+        """The owner's posted price for *future* window capacity: the
+        schedule without the instantaneous demand premium.  A queue that
+        is crowded right now says nothing about the slots it will have
+        free over the next contract window, so negotiated trades price
+        off this, not the spot quote."""
+        return self.schedules[resource].chip_hour_price(t, user,
+                                                        utilization=0.0)
+
     def solicit_bids(self, t: float, user: str,
                      est_job_seconds: Callable[[ResourceSpec], float]
                      ) -> List[Bid]:
         """Open-market tender: each authorized, up resource returns a
         sealed bid (price honored until valid_until)."""
         bids = []
-        for spec in self.directory.discover(user):
+        for spec in self.directory.discover(user, site=self.site):
             st = self.directory.status(spec.name)
             dur = est_job_seconds(spec)
             rate = (HOUR / dur) * spec.slots if dur > 0 else 0.0
@@ -132,12 +171,38 @@ class TradeServer:
                 chip_hour_price=self.quote(spec.name, t, user),
                 available_slots=st.free_slots(spec),
                 est_rate=rate,
-                valid_until=t + HOUR,
+                valid_until=t + self.bid_validity,
             ))
         return sorted(bids, key=lambda b: b.chip_hour_price)
 
+    def _user_quota(self, user: str) -> Optional[int]:
+        if self.max_reservations_per_user is None:
+            return None
+        quota = self.max_reservations_per_user
+        if (self.bank is not None and self.patron_quota_bonus
+                and self.site is not None
+                and self.bank.pair_spend(user, self.site)
+                >= self.patron_spend_threshold):
+            quota += self.patron_quota_bonus
+        return quota
+
+    def reservable_slots(self, resource: str, start: float, end: float
+                         ) -> int:
+        """Slots not yet promised to anyone over [start, end) — the
+        capacity an owner can put up for auction without overbooking."""
+        spec = self.directory.spec(resource)
+        overlapping = sum(1 for r in self.reservations
+                          if r.resource == resource
+                          and r.start < end and start < r.end)
+        return max(0, spec.slots - overlapping)
+
     def reserve(self, resource: str, user: str, start: float, end: float,
-                t: float) -> Reservation:
+                t: float, locked_price: Optional[float] = None
+                ) -> Reservation:
+        """Advance reservation.  ``locked_price`` overrides the live
+        quote — a negotiated (auction/tender) contract locks the struck
+        price, not whatever the owner happens to post at signing time."""
+        self._prune(t)
         spec = self.directory.spec(resource)
         overlapping = sum(1 for r in self.reservations
                           if r.resource == resource
@@ -146,17 +211,19 @@ class TradeServer:
             raise AdmissionError(
                 f"{resource}: {overlapping} reservations already overlap "
                 f"[{start}, {end}) (capacity {spec.slots})")
-        if self.max_reservations_per_user is not None:
+        quota = self._user_quota(user)
+        if quota is not None:
             active = sum(1 for r in self.reservations
                          if r.user == user and r.end > t)
-            if active >= self.max_reservations_per_user:
+            if active >= quota:
                 raise AdmissionError(
                     f"user {user!r} holds {active} active reservations "
-                    f"(quota {self.max_reservations_per_user})")
+                    f"(quota {quota})")
         r = Reservation(resource=resource, user=user, start=start, end=end,
-                        locked_price=self.quote(resource, t, user),
+                        locked_price=(locked_price if locked_price is not None
+                                      else self.quote(resource, t, user)),
                         reservation_id=self._next_rid)
-        self._next_rid += 1
+        self._next_rid += self._rid_step
         self.reservations.append(r)
         return r
 
@@ -168,15 +235,148 @@ class TradeServer:
 
     def reserved_price(self, resource: str, user: str, t: float
                        ) -> Optional[float]:
+        self._prune(t)
         for r in self.reservations:
             if (r.resource == resource and r.user == user
                     and r.start <= t < r.end):
                 return r.locked_price
         return None
 
+    def reserved_slots(self, resource: str, user: str, t: float) -> int:
+        """How many slots the user's live reservations cover on this
+        resource — the cap on how many concurrent jobs may draw the
+        locked price (the rest pay spot)."""
+        return len(self.reserved_price_list(resource, user, t))
+
+    def reserved_price_list(self, resource: str, user: str, t: float
+                            ) -> List[float]:
+        """Locked prices of ALL the user's live reservations on this
+        resource, in book order — one entry per reserved slot.  Each
+        entry prices exactly one concurrent job; overlapping contracts
+        struck at different prices each bill their own slot."""
+        self._prune(t)
+        return [r.locked_price for r in self.reservations
+                if r.resource == resource and r.user == user
+                and r.start <= t < r.end]
+
     def effective_price(self, resource: str, user: str, t: float) -> float:
         locked = self.reserved_price(resource, user, t)
         return locked if locked is not None else self.quote(resource, t, user)
+
+    def honored_price(self, resource: str, user: str, sealed_price: float,
+                      sealed_at: float, t: float) -> float:
+        """Price a settlement may use at time ``t`` for a quote sealed at
+        ``sealed_at``: the sealed price while it is still valid, a fresh
+        effective price (re-quote) once it has expired.  A dispatch that
+        settles after its sealed bid lapsed must not silently honor the
+        stale price."""
+        if t <= sealed_at + self.bid_validity + 1e-9:
+            return sealed_price
+        return self.effective_price(resource, user, t)
+
+
+class TradeFederation:
+    """Directory of per-site trade servers (GRACE: one trade server per
+    administrative domain) presenting the single-server interface.
+
+    Brokers talk to the federation exactly as they talked to the single
+    ``TradeServer``; under the hood every call routes to the owning
+    domain's server.  ``solicit_bids`` merges all domains' sealed bids
+    price-sorted — the cross-domain arbitrage view: a broker sees at a
+    glance that ISI's idle machines undercut ANL's crowded ones and
+    routes its jobs there."""
+
+    def __init__(self, servers: Dict[str, TradeServer]):
+        if not servers:
+            raise ValueError("federation needs at least one trade server")
+        self.servers = dict(sorted(servers.items()))
+        self.directory = next(iter(self.servers.values())).directory
+        self.bid_validity = max(s.bid_validity for s in self.servers.values())
+        # stride the per-server reservation counters so ids are unique
+        # federation-wide (cancel() must never hit a rival domain's
+        # book).  Counters only move FORWARD into distinct residue
+        # classes: a server that already issued ids before federation
+        # keeps them below every id issued afterwards.
+        n = len(self.servers)
+        start = max(s._next_rid for s in self.servers.values())
+        for i, server in enumerate(self.servers.values()):
+            server._rid_step = n
+            server._next_rid = start + (i + 1 - start) % n
+
+    @classmethod
+    def from_directory(cls, directory: ResourceDirectory,
+                       schedules: Dict[str, PriceSchedule],
+                       **server_kw) -> "TradeFederation":
+        """One server per administrative domain found in the directory."""
+        by_site: Dict[str, Dict[str, PriceSchedule]] = {}
+        for name, sched in schedules.items():
+            by_site.setdefault(directory.spec(name).site, {})[name] = sched
+        return cls({site: TradeServer(directory, scheds, site=site,
+                                      **server_kw)
+                    for site, scheds in sorted(by_site.items())})
+
+    # -- routing -------------------------------------------------------
+    def sites(self) -> List[str]:
+        return list(self.servers)
+
+    def server_for(self, resource: str) -> TradeServer:
+        return self.servers[self.directory.spec(resource).site]
+
+    # -- single-server interface (delegated) ---------------------------
+    def utilization(self, resource: str) -> float:
+        return self.server_for(resource).utilization(resource)
+
+    def quote(self, resource: str, t: float, user: str = "") -> float:
+        return self.server_for(resource).quote(resource, t, user)
+
+    def forward_quote(self, resource: str, t: float, user: str = "") -> float:
+        return self.server_for(resource).forward_quote(resource, t, user)
+
+    def solicit_bids(self, t: float, user: str,
+                     est_job_seconds: Callable[[ResourceSpec], float]
+                     ) -> List[Bid]:
+        bids: List[Bid] = []
+        for server in self.servers.values():
+            bids.extend(server.solicit_bids(t, user, est_job_seconds))
+        return sorted(bids, key=lambda b: (b.chip_hour_price, b.resource))
+
+    def reserve(self, resource: str, user: str, start: float, end: float,
+                t: float, locked_price: Optional[float] = None
+                ) -> Reservation:
+        return self.server_for(resource).reserve(
+            resource, user, start, end, t, locked_price=locked_price)
+
+    def cancel(self, reservation_id: int) -> bool:
+        return any(s.cancel(reservation_id)
+                   for s in self.servers.values())
+
+    def reserved_price(self, resource: str, user: str, t: float
+                       ) -> Optional[float]:
+        return self.server_for(resource).reserved_price(resource, user, t)
+
+    def reserved_slots(self, resource: str, user: str, t: float) -> int:
+        return self.server_for(resource).reserved_slots(resource, user, t)
+
+    def reserved_price_list(self, resource: str, user: str, t: float
+                            ) -> List[float]:
+        return self.server_for(resource).reserved_price_list(
+            resource, user, t)
+
+    def effective_price(self, resource: str, user: str, t: float) -> float:
+        return self.server_for(resource).effective_price(resource, user, t)
+
+    def honored_price(self, resource: str, user: str, sealed_price: float,
+                      sealed_at: float, t: float) -> float:
+        return self.server_for(resource).honored_price(
+            resource, user, sealed_price, sealed_at, t)
+
+    @property
+    def reservations(self) -> List[Reservation]:
+        """Federation-wide reservation book (read-only convenience)."""
+        out: List[Reservation] = []
+        for server in self.servers.values():
+            out.extend(server.reservations)
+        return out
 
 
 @dataclasses.dataclass

@@ -6,7 +6,11 @@ resources, with prices mediating demand.  ``Marketplace`` realizes that
 experiment: N concurrent ``NimrodG`` engines — each with its own
 ``UserRequirements``, ``BudgetLedger`` and ``ScheduleAdvisor`` — run
 against ONE shared ``ResourceDirectory``/``TradeServer`` on a single
-``Simulator`` clock.
+``Simulator`` clock.  Trading runs through one ``TradeServer`` per
+administrative domain (federated behind ``TradeFederation``), an
+``AuctionHouse`` clears negotiated contracts between brokers and owners,
+and every settlement is mirrored into the ``GridBank`` as the owning
+domain's revenue.
 
 What the shared grid changes versus the single-user engine:
 
@@ -27,8 +31,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.accounting import GridBank
+from repro.core.auctions import AuctionBroker, AuctionHouse
 from repro.core.dispatcher import Dispatcher, SimulatedExecutor
-from repro.core.economy import PriceSchedule, TradeServer, UserRequirements
+from repro.core.economy import (PriceSchedule, TradeFederation,
+                                UserRequirements)
 from repro.core.jobs import JobSpec
 from repro.core.parametric import NimrodG
 from repro.core.resources import (ResourceDirectory, ResourceSpec,
@@ -45,7 +52,7 @@ class MarketUser:
     name: str
     deadline: float                  # absolute virtual time
     budget: float                    # G$
-    strategy: str = "cost"           # cost | time | conservative
+    strategy: str = "cost"           # cost | time | conservative | auction
     n_jobs: int = 50
     est_seconds: float = 1800.0      # per-job runtime on perf_factor=1
 
@@ -66,6 +73,7 @@ class UserOutcome:
     slot_races_lost: int
     peak_allocation: int
     stall_reason: Optional[str]
+    contracts_won: int = 0
 
     def row(self) -> str:
         return (f"{self.user:12s} {self.strategy:12s} "
@@ -74,7 +82,8 @@ class UserOutcome:
                 f"spent={self.spent:9.2f}/{self.budget:<9.0f} "
                 f"met={str(self.met_deadline):5s} "
                 f"races_lost={self.slot_races_lost:3d} "
-                f"requeues={self.requeues:3d}")
+                f"requeues={self.requeues:3d} "
+                f"contracts={self.contracts_won:3d}")
 
 
 @dataclasses.dataclass
@@ -89,6 +98,8 @@ class MarketReport:
     slot_races_lost: int
     deadline_met_frac: float
     price_trace: List[Tuple[float, float]]   # (t, mean grid quote)
+    contracts_struck: int = 0
+    owner_revenue: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         lines = [f"marketplace seed={self.seed}: {self.n_users} users on "
@@ -96,8 +107,12 @@ class MarketReport:
                  f"{self.total_done}/{self.total_jobs} jobs, "
                  f"{self.deadline_met_frac:.0%} deadlines met, "
                  f"spend={self.total_spent:.1f}G$, "
-                 f"slot races lost={self.slot_races_lost}"]
+                 f"slot races lost={self.slot_races_lost}, "
+                 f"contracts={self.contracts_struck}"]
         lines += ["  " + o.row() for o in self.outcomes]
+        if self.owner_revenue:
+            lines.append("  owner revenue: " + ", ".join(
+                f"{o}={v:.1f}" for o, v in sorted(self.owner_revenue.items())))
         return "\n".join(lines)
 
     def stable_repr(self) -> str:
@@ -111,7 +126,9 @@ class MarketReport:
                 f"|t={o.completion_time!r}|spent={o.spent!r}"
                 f"|met={o.met_deadline}|races={o.slot_races_lost}"
                 f"|rq={o.requeues}|peak={o.peak_allocation}"
-                f"|stall={o.stall_reason}")
+                f"|stall={o.stall_reason}|contracts={o.contracts_won}")
+        parts.append("revenue=" + ",".join(
+            f"{o}:{v!r}" for o, v in sorted(self.owner_revenue.items())))
         parts.append("trace=" + ",".join(
             f"({t!r},{p!r})" for t, p in self.price_trace))
         return "\n".join(parts)
@@ -131,7 +148,10 @@ class Marketplace:
                  spot_amplitude: float = 0.0,
                  dispatch_latency: float = 1.0,
                  noise_sigma: float = 0.1,
-                 max_reservations_per_user: Optional[int] = None):
+                 max_reservations_per_user: Optional[int] = None,
+                 auction_round: float = HOUR,
+                 auction_window: float = 2 * HOUR,
+                 idle_discount: float = 0.25):
         self.seed = seed
         self.sim = Simulator()
         self.directory = ResourceDirectory()
@@ -143,9 +163,18 @@ class Marketplace:
                                 demand_elasticity=demand_elasticity,
                                 spot_amplitude=spot_amplitude)
             for name in self.directory.all_names()}
-        self.trade = TradeServer(
+        # the producer side of the economy: every settlement lands in
+        # the bank as the owning domain's revenue
+        self.bank = GridBank()
+        # one trade server per administrative domain, federated — the
+        # cross-domain price board brokers arbitrage over
+        self.trade = TradeFederation.from_directory(
             self.directory, self.schedules,
-            max_reservations_per_user=max_reservations_per_user)
+            max_reservations_per_user=max_reservations_per_user,
+            bank=self.bank)
+        self.auction_house = AuctionHouse(
+            self.trade, round_interval=auction_round,
+            window=auction_window, idle_discount=idle_discount)
         self.dispatch_latency = dispatch_latency
         self.noise_sigma = noise_sigma
         self.users: List[MarketUser] = []
@@ -169,10 +198,15 @@ class Marketplace:
                 for i in range(user.n_jobs)]
         req = UserRequirements(deadline=user.deadline, budget=user.budget,
                                strategy=user.strategy, user=user.name)
+        # an "auction" user negotiates (double auction + contracts) on
+        # top of the cost-optimizing allocation loop
+        broker = (AuctionBroker(self.auction_house, user.name)
+                  if user.strategy == "auction" else None)
         engine = NimrodG(user.name, jobs, req, self.directory, self.trade,
                          dispatcher, sim=self.sim,
                          sched_cfg=sched_cfg or SchedulerConfig(),
-                         seed=self.seed, stop_sim_when_done=False)
+                         seed=self.seed, stop_sim_when_done=False,
+                         auction=broker, bank=self.bank)
         self.users.append(user)
         self.engines.append(engine)
         return engine
@@ -204,6 +238,8 @@ class Marketplace:
             fp = FailureProcess(self.sim, self.directory, seed=self.seed)
             for name in self.directory.all_names():
                 fp.install(name)
+        if any(e.auction is not None for e in self.engines):
+            self.auction_house.start(self.sim)
         for engine in self.engines:
             self.sim.after(0.0, engine.tick)
         self.sim.after(0.0, lambda: self._watch(sample_interval, horizon))
@@ -228,7 +264,8 @@ class Marketplace:
                 requeues=rep.requeues,
                 slot_races_lost=rep.slot_races_lost,
                 peak_allocation=rep.peak_allocation,
-                stall_reason=rep.stall_reason))
+                stall_reason=rep.stall_reason,
+                contracts_won=rep.contracts_won))
         total_jobs = sum(o.n_jobs for o in outcomes)
         total_done = sum(o.n_done for o in outcomes)
         met = sum(1 for o in outcomes if o.met_deadline)
@@ -239,7 +276,10 @@ class Marketplace:
             total_spent=sum(o.spent for o in outcomes),
             slot_races_lost=sum(o.slot_races_lost for o in outcomes),
             deadline_met_frac=met / max(len(outcomes), 1),
-            price_trace=list(self.price_trace))
+            price_trace=list(self.price_trace),
+            contracts_struck=len(self.auction_house.contracts),
+            owner_revenue={o: self.bank.owner_revenue(o)
+                           for o in self.bank.owners()})
 
 
 # ---------------------------------------------------------------------------
@@ -265,3 +305,12 @@ def standard_market(n_users: int, *, n_machines: int = 20, seed: int = 0,
             n_jobs=n_jobs,
             est_seconds=est_seconds))
     return market
+
+
+def mixed_auction_market(n_users: int, **kw) -> Marketplace:
+    """``standard_market`` with auction brokers in the mix: every other
+    user negotiates (double auction / contracts), the rest buy at the
+    posted price — the head-to-head the GRACE papers call for."""
+    kw.setdefault("strategies", ("auction", "cost", "auction", "time",
+                                 "auction", "conservative"))
+    return standard_market(n_users, **kw)

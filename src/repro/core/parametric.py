@@ -48,6 +48,7 @@ class ExperimentReport:
     duplicates_launched: int = 0
     requeues: int = 0
     slot_races_lost: int = 0         # dispatches that lost a slot race
+    contracts_won: int = 0           # negotiated (auction/tender) contracts
     timeline: List[Tuple[float, int, int, float]] = dataclasses.field(
         default_factory=list)        # (t, allocated, done, spent)
     stall_reason: Optional[str] = None
@@ -74,7 +75,8 @@ class NimrodG:
                  sim: Optional[Simulator] = None,
                  journal: Optional[Journal] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
-                 seed: int = 0, stop_sim_when_done: bool = True):
+                 seed: int = 0, stop_sim_when_done: bool = True,
+                 auction=None, bank=None):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -84,6 +86,10 @@ class NimrodG:
         self.journal = journal
         self.cfg = sched_cfg
         self.seed = seed
+        # negotiated-economy hooks: an AuctionBroker bidding for this
+        # engine (strategy="auction") and the grid-wide revenue bank
+        self.auction = auction
+        self.bank = bank
         # a marketplace run shares one clock among many engines: only the
         # driver may stop it, not the first engine to finish
         self.stop_sim_when_done = stop_sim_when_done
@@ -199,6 +205,36 @@ class NimrodG:
         return self.trade.effective_price(resource, self.req.user,
                                           self._now())
 
+    def _dispatch_price(self, resource: str) -> float:
+        """Price the *next* dispatch to ``resource`` pays.  Each of the
+        user's reserved slots prices exactly one concurrent job at its
+        own locked price (overlapping contracts can be struck at
+        different prices); dispatches beyond the reserved draw-down pay
+        the live spot quote — one cheap contract must not discount the
+        whole queue."""
+        t = self._now()
+        locked = self.trade.reserved_price_list(resource, self.req.user, t)
+        if not locked:
+            return self.trade.quote(resource, t, self.req.user)
+        # each in-flight contract-priced job consumes one reservation
+        inflight = collections.Counter()
+        seen: set = set()
+        for attempts in self.attempts.values():
+            for j in attempts:
+                if id(j) in seen:
+                    continue
+                seen.add(id(j))
+                if (j.resource == resource
+                        and j.status in (JobStatus.STAGED,
+                                         JobStatus.RUNNING)):
+                    inflight[j.quoted_price] += 1
+        for price in locked:
+            if inflight[price] > 0:
+                inflight[price] -= 1
+                continue
+            return price
+        return self.trade.quote(resource, t, self.req.user)
+
     def _my_running(self) -> Dict[str, int]:
         """Slots this experiment currently occupies, per resource.
 
@@ -245,9 +281,29 @@ class NimrodG:
             self._finish()
             return
 
+        if self.auction is not None:
+            bid = self.auction.step(
+                t, {n: v.est_job_seconds for n, v in self.views.items()},
+                remaining, self.ledger)
+            if bid is not None:
+                self._log("AUCTION_BID", price=bid.chip_hour_price,
+                          slots=bid.slots)
+            won = len(self.auction.contracts)
+            if won > self.report.contracts_won:
+                for c in self.auction.contracts[self.report.contracts_won:]:
+                    self._log("CONTRACT", resource=c.resource,
+                              price=c.chip_hour_price, slots=c.slots,
+                              via=c.via)
+                self.report.contracts_won = won
+
+        # effective prices: an active negotiated contract (carried as a
+        # price-locked reservation) beats the spot quote automatically
         prices = {n: self._price(n) for n in self.views}
+        contracted = (set(self.auction.contracted_resources(t))
+                      if self.auction is not None else None)
         decision = self.advisor.decide(t, self.views, prices, remaining,
-                                       self.ledger, set(self.allocated))
+                                       self.ledger, set(self.allocated),
+                                       contracted=contracted)
         for r in decision.release:
             self.allocated.discard(r)
             self._log("RELEASE", resource=r)
@@ -303,19 +359,21 @@ class NimrodG:
         remaining = self._remaining()
         for job, resource in zip(pend, slots):
             est = self.views[resource].est_job_seconds
-            cost = self._price(resource) * \
-                self.directory.spec(resource).chips * est / HOUR
+            price = self._dispatch_price(resource)
+            cost = price * self.directory.spec(resource).chips * est / HOUR
             if not self.advisor.may_commit(cost, remaining, self.ledger):
                 continue
-            self._dispatch(job, resource, cost)
+            self._dispatch(job, resource, cost, price=price)
 
-    def _dispatch(self, job: Job, resource: str, committed: float) -> None:
+    def _dispatch(self, job: Job, resource: str, committed: float,
+                  price: Optional[float] = None) -> None:
         self.ledger.commit(committed)
         job.committed_cost = committed
-        # lock the quote the broker committed against: settles use it, so
-        # demand swings between dispatch and completion can't re-price a
-        # job after the fact
-        job.quoted_price = self._price(resource)
+        # seal the quote the broker committed against: settlements honor
+        # it for the trade server's bid-validity window, after which
+        # they re-quote (see honored_price in _handle_done)
+        job.quoted_price = (price if price is not None
+                            else self._dispatch_price(resource))
         job.submitted_at = self._now()
         primary = job.duplicate_of or job.job_id
         self.attempts[primary].append(job)
@@ -370,11 +428,23 @@ class NimrodG:
         primary_id = job.duplicate_of or job.job_id
         primary = self.jobs.get(primary_id)
         t = self._now()
-        price = job.quoted_price or self.trade.effective_price(
-            job.resource, self.req.user, job.submitted_at)
+        # the price sealed at dispatch is only honored inside its
+        # validity window; a settlement arriving later re-quotes (an
+        # active reservation/contract still locks the negotiated price)
+        if job.quoted_price:
+            price = self.trade.honored_price(
+                job.resource, self.req.user, job.quoted_price,
+                job.submitted_at, t)
+        else:
+            price = self.trade.effective_price(
+                job.resource, self.req.user, job.submitted_at)
         actual = price * self.directory.spec(job.resource).chips * \
             exec_seconds / HOUR
         self.ledger.settle(job.committed_cost, actual)
+        if self.bank is not None:
+            self.bank.record(t=t, user=self.req.user,
+                             owner=self.directory.spec(job.resource).site,
+                             resource=job.resource, amount=actual)
         job.finished_at = t
         job.actual_cost = actual
         if job.resource in self.views:
@@ -401,11 +471,21 @@ class NimrodG:
                 # in the dispatch hop never acquired a slot and costs 0
                 elapsed = (max(t - other.acquired_at, 0.0)
                            if other.slot_held else 0.0)
-                kp = other.quoted_price or self.trade.effective_price(
-                    other.resource, self.req.user, other.submitted_at)
+                if other.quoted_price:
+                    kp = self.trade.honored_price(
+                        other.resource, self.req.user, other.quoted_price,
+                        other.submitted_at, t)
+                else:
+                    kp = self.trade.effective_price(
+                        other.resource, self.req.user, other.submitted_at)
                 kcost = kp * self.directory.spec(other.resource).chips * \
                     elapsed / HOUR
                 self.ledger.settle(other.committed_cost, kcost)
+                if self.bank is not None:
+                    self.bank.record(
+                        t=t, user=self.req.user,
+                        owner=self.directory.spec(other.resource).site,
+                        resource=other.resource, amount=kcost, kind="kill")
                 self._log("KILL_SETTLED", job_id=other.job_id, cost=kcost)
         if self._remaining() == 0:
             self._finish()
@@ -485,7 +565,8 @@ class NimrodG:
                 st = self.directory.status(r)
                 if st.free_slots(self.directory.spec(r)) <= 0:
                     continue
-                cost = self._price(r) * self.directory.spec(r).chips * \
+                dup_price = self._dispatch_price(r)
+                cost = dup_price * self.directory.spec(r).chips * \
                     self.views[r].est_job_seconds / HOUR
                 if not self.advisor.may_commit(cost, self._remaining(),
                                                self.ledger):
@@ -497,7 +578,7 @@ class NimrodG:
                 self._log("DUPLICATE", job_id=dspec.job_id,
                           original=primary_id, resource=r)
                 self.report.duplicates_launched += 1
-                self._dispatch(dup, r, cost)
+                self._dispatch(dup, r, cost, price=dup_price)
                 break
 
     # ------------------------------------------------------------------
@@ -515,6 +596,8 @@ class NimrodG:
             return
         self._finished = True
         t = self._now()
+        if self.auction is not None:
+            self.auction.withdraw(t)
         self.report.completion_time = t
         self.report.met_deadline = (self.report.n_done == self.report.n_jobs
                                     and t <= self.req.deadline + 1e-6)

@@ -106,14 +106,23 @@ class ScheduleAdvisor:
 
     def decide(self, t: float, views: Dict[str, ResourceView],
                prices: Dict[str, float], remaining_jobs: int,
-               ledger: BudgetLedger, current: Set[str]
+               ledger: BudgetLedger, current: Set[str],
+               contracted: Optional[Set[str]] = None
                ) -> AllocationDecision:
+        """Re-plan the allocation.  ``prices`` must already be
+        *effective* prices (a negotiated contract's locked price where
+        one is active, the spot quote otherwise) — the advisor ranks
+        contracts and spot offers in one ordering.  ``contracted``
+        resources win cost ties: capacity already paid for by a
+        negotiated contract should be drawn down first."""
         live = {n: v for n, v in views.items() if not v.suspected}
         time_left = max(self.req.deadline - t, 1e-6)
         needed = self.cfg.safety * remaining_jobs / time_left
 
+        held = contracted or set()
         ranked = sorted(
-            live, key=lambda n: (cost_per_job(live[n], prices[n]), n))
+            live, key=lambda n: (cost_per_job(live[n], prices[n]),
+                                 n not in held, n))
         if not ranked:   # transient: everything down/suspected — hold state
             return AllocationDecision(
                 allocate=[], release=[], projected_rate=0.0,
@@ -208,10 +217,16 @@ class ContractQuote:
 
 def negotiate_contract(t: float, req: UserRequirements, n_jobs: int,
                        trade: TradeServer, views: Dict[str, ResourceView],
-                       accept: bool = False) -> ContractQuote:
+                       accept: bool = False,
+                       accept_at: Optional[float] = None) -> ContractQuote:
     """Solicit bids, pick the cheapest feasible set, optionally lock it in
     with advance reservations.  The user can then proceed or renegotiate
-    with a different deadline/budget (exactly the paper's protocol)."""
+    with a different deadline/budget (exactly the paper's protocol).
+
+    ``accept_at`` is when the user actually signs (defaults to ``t``,
+    i.e. on the spot).  A user who deliberates past a sealed bid's
+    validity loses its price: the reservation locks at the live quote
+    instead — an expired bid is re-quoted, never silently honored."""
     bids = trade.solicit_bids(
         t, req.user, lambda spec: views[spec.name].est_job_seconds
         if spec.name in views else 3600.0)
@@ -241,7 +256,11 @@ def negotiate_contract(t: float, req: UserRequirements, n_jobs: int,
     feasible = feasible_time and cost <= req.budget
     rids: Tuple[int, ...] = ()
     if feasible and accept:
+        at = t if accept_at is None else accept_at
         rids = tuple(
-            trade.reserve(b.resource, req.user, t, req.deadline, t
-                          ).reservation_id for b in chosen)
+            trade.reserve(
+                b.resource, req.user, at, req.deadline, at,
+                locked_price=(b.chip_hour_price
+                              if at <= b.valid_until else None)
+            ).reservation_id for b in chosen)
     return ContractQuote(feasible, completion, cost, len(chosen), rids)

@@ -37,6 +37,25 @@ class Simulator:
     def after(self, delay: float, fn: Callable[[], None]) -> None:
         self.at(self._t + max(0.0, delay), fn)
 
+    def every(self, interval: float, fn: Callable[[], None], *,
+              start_delay: Optional[float] = None,
+              until: float = math.inf) -> None:
+        """Recurring event (e.g. an auction clearing round): run ``fn``
+        every ``interval`` seconds until ``until`` or until ``fn``
+        returns a truthy "stop" value.  The first firing is after
+        ``start_delay`` (defaults to ``interval``)."""
+        if interval <= 0:
+            raise ValueError(f"interval must be positive, got {interval}")
+
+        def fire():
+            if self._t > until or self.stopped:
+                return
+            stop = fn()
+            if not stop and self._t + interval <= until:
+                self.after(interval, fire)
+
+        self.after(interval if start_delay is None else start_delay, fire)
+
     def run(self, until: float = math.inf, max_events: int = 10_000_000
             ) -> None:
         n = 0

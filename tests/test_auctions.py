@@ -1,0 +1,398 @@
+"""GRACE auction house: double-auction clearing, contract-net tenders,
+cross-domain arbitrage, owner revenue accounting (paper §7 + cs/0111048).
+"""
+import math
+
+import pytest
+
+from repro.core import (AuctionBid, AuctionBroker, AuctionHouse,
+                        BudgetLedger, GridBank, Marketplace, MarketUser,
+                        NegotiationTimeout, PriceSchedule,
+                        ReconciliationError, ResourceDirectory,
+                        ResourceSpec, TradeFederation, TradeServer,
+                        mixed_auction_market)
+
+HOUR = 3600.0
+
+
+def _spec(name, site, price, slots=1, chips=1, perf=1.0):
+    return ResourceSpec(name=name, site=site, chips=chips, slots=slots,
+                        perf_factor=perf, base_price=price,
+                        peak_multiplier=1.0, mtbf_hours=float("inf"))
+
+
+def _grid(specs, **server_kw):
+    d = ResourceDirectory()
+    for s in specs:
+        d.register(s)
+    schedules = {n: PriceSchedule(d.spec(n)) for n in d.all_names()}
+    fed = TradeFederation.from_directory(d, schedules, **server_kw)
+    return d, fed
+
+
+# ---------------------------------------------------------------------------
+# double-auction clearing properties
+# ---------------------------------------------------------------------------
+
+def test_uniform_clearing_price_within_bid_ask_bounds():
+    """All matched units trade at ONE price that no matched bidder finds
+    too high and no matched owner finds too low."""
+    d, fed = _grid([_spec("m0", "X", 0.8), _spec("m1", "X", 1.2),
+                    _spec("m2", "X", 4.0)])
+    house = AuctionHouse(fed, idle_discount=0.25)
+    house.submit_bid("X", AuctionBid(user="alice", chip_hour_price=1.0,
+                                     slots=2, valid_until=10.0))
+    house.submit_bid("X", AuctionBid(user="bob", chip_hour_price=0.5,
+                                     slots=1, valid_until=10.0))
+    struck = house.clear_all(0.0)
+    # idle asks: 0.6 (m0), 0.9 (m1), 3.0 (m2); bid units 1.0,1.0,0.5 —
+    # exactly alice's two units cross, at the (1.0 + 0.9)/2 midpoint
+    assert len(struck) == 2
+    price = struck[0].chip_hour_price
+    assert price == pytest.approx(0.95)
+    assert all(c.chip_hour_price == price for c in struck)      # uniform
+    assert all(c.user == "alice" for c in struck)
+    assert {c.resource for c in struck} == {"m0", "m1"}
+    # within every matched party's limits
+    assert price <= 1.0 + 1e-12          # alice's limit
+    assert price >= 0.75 * 1.2 - 1e-12   # marginal ask (m1 idle)
+    # the lock is live on the owning trade server at the struck price
+    assert fed.reserved_price("m0", "alice", HOUR) == pytest.approx(price)
+    assert fed.effective_price("m1", "alice", HOUR) == pytest.approx(price)
+    # rivals still pay the posted quote
+    assert fed.effective_price("m0", "bob", HOUR) == pytest.approx(0.8)
+
+
+def test_no_cross_no_contract():
+    """Bids below every ask clear nothing (and price stays zero)."""
+    d, fed = _grid([_spec("m0", "X", 2.0)])
+    house = AuctionHouse(fed)
+    house.submit_bid("X", AuctionBid(user="cheapskate",
+                                     chip_hour_price=0.1, slots=3,
+                                     valid_until=10.0))
+    assert house.clear_all(0.0) == []
+    assert house.rounds[-1].matched_slots == 0
+
+
+def test_expired_bids_are_ignored_and_books_clear_each_round():
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    house = AuctionHouse(fed)
+    house.submit_bid("X", AuctionBid(user="late", chip_hour_price=9.0,
+                                     slots=1, valid_until=5.0))
+    assert house.clear_all(100.0) == []          # bid long dead
+    # book drained: nothing lingers into the next round either
+    assert house.clear_all(200.0) == []
+
+
+def test_contracted_commitments_never_exceed_budget():
+    """The broker caps its bid so worst-case contracted slot-hours stay
+    inside the remaining budget, round after round."""
+    d, fed = _grid([_spec(f"m{i}", "X", 1.0, chips=4) for i in range(6)])
+    house = AuctionHouse(fed, round_interval=HOUR, window=2 * HOUR)
+    ledger = BudgetLedger(budget=30.0)
+    broker = AuctionBroker(house, "alice")
+    est = {f"m{i}": 1800.0 for i in range(6)}
+    t = 0.0
+    for _ in range(5):
+        broker.step(t, est, remaining_jobs=100, ledger=ledger)
+        house.clear_all(t)
+        committed = house.outstanding_commitment("alice", t)
+        assert committed <= ledger.budget + 1e-9
+        assert committed <= ledger.remaining + 1e-9
+        t += HOUR
+    assert broker.contracts                      # it did trade
+
+
+def test_broke_broker_places_no_bid():
+    d, fed = _grid([_spec("m0", "X", 1.0, chips=8)])
+    house = AuctionHouse(fed)
+    broker = AuctionBroker(house, "poor")
+    bid = broker.step(0.0, {"m0": 1800.0}, remaining_jobs=10,
+                      ledger=BudgetLedger(budget=0.01))
+    assert bid is None
+    assert house.clear_all(0.0) == []
+
+
+# ---------------------------------------------------------------------------
+# contract-net / tender negotiation
+# ---------------------------------------------------------------------------
+
+def test_tender_counter_offers_sorted_across_domains():
+    d, fed = _grid([_spec("a0", "ANL", 3.0), _spec("i0", "ISI", 1.0),
+                    _spec("i1", "ISI", 2.0)])
+    house = AuctionHouse(fed, tender_discount=0.2)
+    offers = house.call_for_tenders(0.0, "u")
+    prices = [o.chip_hour_price for o in offers]
+    assert prices == sorted(prices)
+    assert offers[0].resource == "i0"            # cheap domain leads
+    assert offers[0].chip_hour_price == pytest.approx(0.8)   # 20% off idle
+
+
+def test_tender_accept_within_window_locks_offer_price():
+    d, fed = _grid([_spec("m0", "X", 2.0)])
+    house = AuctionHouse(fed, tender_discount=0.25,
+                         tender_validity=0.5 * HOUR)
+    offer = house.call_for_tenders(0.0, "u")[0]
+    c = house.accept(offer, "u", t=600.0)        # well inside validity
+    assert c.via == "tender"
+    assert c.chip_hour_price == pytest.approx(1.5)
+    assert fed.effective_price("m0", "u", HOUR) == pytest.approx(1.5)
+
+
+def test_tender_acceptance_after_timeout_forces_resolicit():
+    """The negotiation timeout path: a stale counter-offer cannot be
+    exercised; the broker must go back to the market."""
+    d, fed = _grid([_spec("m0", "X", 2.0)])
+    house = AuctionHouse(fed, tender_validity=0.5 * HOUR)
+    offer = house.call_for_tenders(0.0, "u")[0]
+    with pytest.raises(NegotiationTimeout):
+        house.accept(offer, "u", t=HOUR)         # validity long gone
+    assert house.contracts == []                 # nothing was struck
+    fresh = house.call_for_tenders(HOUR, "u")    # re-solicit works
+    assert fresh and fresh[0].valid_until == pytest.approx(1.5 * HOUR)
+    assert house.accept(fresh[0], "u", t=HOUR).slots >= 1
+
+
+# ---------------------------------------------------------------------------
+# cross-domain arbitrage
+# ---------------------------------------------------------------------------
+
+def _two_site_market(seed=0):
+    """CHEAP's machines undercut DEAR's five-fold, same hardware."""
+    specs = ([_spec(f"c{i}", "CHEAP", 0.5, chips=1) for i in range(3)]
+             + [_spec(f"d{i}", "DEAR", 2.5, chips=1) for i in range(3)])
+    market = Marketplace(specs=specs, seed=seed, demand_elasticity=0.5)
+    market.add_user(MarketUser(name="arb", deadline=30 * HOUR, budget=1e6,
+                               strategy="auction", n_jobs=8,
+                               est_seconds=1200.0))
+    return market
+
+
+def test_arbitrage_routes_jobs_and_contracts_to_cheap_domain():
+    market = _two_site_market()
+    rep = market.run()
+    assert rep.total_done == rep.total_jobs
+    # the auction broker steered its bids at the cheap domain only
+    assert all(c.site == "CHEAP" for c in market.auction_house.contracts)
+    # and the money followed: the dear domain earned nothing
+    assert market.bank.owner_revenue("CHEAP") > 0.0
+    assert market.bank.owner_revenue("DEAR") == 0.0
+    assert len(market.trade.servers) == 2        # genuinely two books
+
+
+def test_federation_reservation_ids_unique_across_sites():
+    d, fed = _grid([_spec("a0", "A", 1.0), _spec("b0", "B", 1.0)])
+    ra = fed.reserve("a0", "u", 0.0, HOUR, 0.0)
+    rb = fed.reserve("b0", "u", 0.0, HOUR, 0.0)
+    assert ra.reservation_id != rb.reservation_id
+    # cancelling one never touches the other domain's book
+    assert fed.cancel(ra.reservation_id)
+    assert fed.reserved_price("b0", "u", 10.0) is not None
+
+
+# ---------------------------------------------------------------------------
+# whole-market runs: determinism, settlement, accounting
+# ---------------------------------------------------------------------------
+
+def test_mixed_market_is_seed_deterministic():
+    r1 = mixed_auction_market(6, n_machines=10, seed=7, n_jobs=8).run()
+    r2 = mixed_auction_market(6, n_machines=10, seed=7, n_jobs=8).run()
+    assert r1.stable_repr() == r2.stable_repr()
+    assert any(o.strategy == "auction" for o in r1.outcomes)
+    r3 = mixed_auction_market(6, n_machines=10, seed=8, n_jobs=8).run()
+    assert r1.stable_repr() != r3.stable_repr()
+
+
+def test_bank_reconciles_owner_revenue_with_broker_spend():
+    market = mixed_auction_market(6, n_machines=10, seed=5, n_jobs=8)
+    rep = market.run()
+    ledgers = {u.name: e.ledger for u, e in zip(market.users,
+                                                market.engines)}
+    total = market.bank.reconcile(ledgers)
+    assert total == pytest.approx(
+        math.fsum(market.bank.owner_revenue(o)
+                  for o in market.bank.owners()))
+    assert total == pytest.approx(
+        math.fsum(l.settled for l in ledgers.values()))
+    assert rep.owner_revenue                     # surfaced in the report
+
+
+def test_bank_reconcile_catches_tampering():
+    bank = GridBank()
+    bank.record(t=0.0, user="u", owner="X", resource="m0", amount=5.0)
+    led = BudgetLedger(budget=10.0)
+    led.settle(0.0, 5.0)
+    bank.reconcile({"u": led})                   # balanced: fine
+    led.settle(0.0, 1.0)                         # spend the bank never saw
+    with pytest.raises(ReconciliationError):
+        bank.reconcile({"u": led})
+
+
+def test_finished_brokers_withdraw_their_bids():
+    market = _two_site_market(seed=1)
+    market.run()
+    assert all(not book.bids for book in market.auction_house.books.values())
+
+
+def test_contract_discount_covers_only_reserved_slots():
+    """One contracted slot must not discount the whole queue: dispatches
+    beyond the contracted draw-down pay spot."""
+    from repro.core import (Dispatcher, JobSpec, NimrodG, SchedulerConfig,
+                            SimulatedExecutor, Simulator, TradeServer,
+                            UserRequirements)
+    d = ResourceDirectory()
+    d.register(_spec("big", "X", 1.0, slots=4))
+    trade = TradeServer(d, {"big": PriceSchedule(d.spec("big"))})
+    # negotiated contract: ONE slot at a quarter of the posted price
+    trade.reserve("big", "u", start=0.0, end=10 * HOUR, t=0.0,
+                  locked_price=0.25)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, d, noise_sigma=0.0)
+    jobs = [JobSpec(job_id=f"j{i}", experiment="e", point={}, steps=(),
+                    est_seconds_base=1800.0, stage_in_bytes=0,
+                    stage_out_bytes=0) for i in range(4)]
+    req = UserRequirements(deadline=20 * HOUR, budget=1e6, user="u")
+    eng = NimrodG("e", jobs, req, d, trade, Dispatcher(ex, d), sim=sim,
+                  sched_cfg=SchedulerConfig())
+    rep = eng.run_simulated(failures=False)
+    assert rep.n_done == 4
+    # 4 concurrent half-hour jobs on 1 chip: 1 at the contracted 0.25,
+    # the other 3 at the posted 1.0 — not 4 x 0.25
+    assert rep.total_cost == pytest.approx(0.5 * (0.25 + 3 * 1.0))
+
+
+def test_withdraw_releases_unexpired_contract_capacity():
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    house = AuctionHouse(fed)
+    broker = AuctionBroker(house, "quitter")
+    house.submit_bid("X", AuctionBid(user="quitter", chip_hour_price=2.0,
+                                     slots=1, valid_until=10.0))
+    house.clear_all(0.0)
+    assert broker.contracts
+    server = fed.servers["X"]
+    assert server.reservable_slots("m0", 0.0, HOUR) == 0   # capacity held
+    broker.withdraw(t=0.0)                                 # leaves early
+    assert server.reservable_slots("m0", 0.0, HOUR) == 1   # freed for rivals
+
+
+def test_negotiate_contract_requotes_expired_sealed_bids():
+    """A user who deliberates past the sealed bids' validity signs at
+    the live price, not the stale one."""
+    from repro.core import (ResourceView, TradeServer, UserRequirements,
+                            negotiate_contract)
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r0", site="s", chips=1, base_price=1.0,
+                            peak_multiplier=4.0, mtbf_hours=float("inf")))
+    trade = TradeServer(d, {"r0": PriceSchedule(d.spec("r0"))},
+                        bid_validity=HOUR)
+    views = {"r0": ResourceView(spec=d.spec("r0"), est_job_seconds=600.0)}
+    req = UserRequirements(deadline=30 * HOUR, budget=1e6, user="u")
+    t = 2 * HOUR                                 # 02:00: off-peak, quote 1.0
+    prompt = negotiate_contract(t, req, 10, trade, views, accept=True,
+                                accept_at=t + 0.5 * HOUR)   # inside validity
+    assert trade.reservations[0].locked_price == pytest.approx(1.0)
+    for rid in prompt.reserved:
+        trade.cancel(rid)
+    lazy = negotiate_contract(t, req, 10, trade, views, accept=True,
+                              accept_at=9 * HOUR)   # expired; 09:00 is peak
+    assert trade.reservations[0].locked_price == pytest.approx(4.0)
+
+
+def test_overlapping_contracts_each_bill_their_own_price():
+    """Two live contracts at different prices on one resource: each
+    reserved slot prices exactly one concurrent job; the rest pay spot."""
+    from repro.core import (Dispatcher, JobSpec, NimrodG, SchedulerConfig,
+                            SimulatedExecutor, Simulator, TradeServer,
+                            UserRequirements)
+    d = ResourceDirectory()
+    d.register(_spec("big", "X", 1.0, slots=4))
+    trade = TradeServer(d, {"big": PriceSchedule(d.spec("big"))})
+    trade.reserve("big", "u", 0.0, 10 * HOUR, 0.0, locked_price=0.25)
+    trade.reserve("big", "u", 0.0, 10 * HOUR, 0.0, locked_price=0.5)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, d, noise_sigma=0.0)
+    jobs = [JobSpec(job_id=f"j{i}", experiment="e", point={}, steps=(),
+                    est_seconds_base=1800.0, stage_in_bytes=0,
+                    stage_out_bytes=0) for i in range(4)]
+    req = UserRequirements(deadline=20 * HOUR, budget=1e6, user="u")
+    eng = NimrodG("e", jobs, req, d, trade, Dispatcher(ex, d), sim=sim,
+                  sched_cfg=SchedulerConfig())
+    rep = eng.run_simulated(failures=False)
+    assert rep.n_done == 4
+    # half-hour jobs on 1 chip: one at 0.25, one at 0.5, two at spot 1.0
+    assert rep.total_cost == pytest.approx(0.5 * (0.25 + 0.5 + 2 * 1.0))
+
+
+def test_auction_never_contracts_unauthorized_resources():
+    """Asks are user-agnostic, so authorization is enforced at signing:
+    a stranger's matched bid dies instead of locking a restricted
+    machine, and tenders never offer it in the first place."""
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="vip", site="X", chips=1, base_price=1.0,
+                            peak_multiplier=1.0, mtbf_hours=float("inf"),
+                            authorized_users=("alice",)))
+    schedules = {"vip": PriceSchedule(d.spec("vip"))}
+    fed = TradeFederation.from_directory(d, schedules)
+    house = AuctionHouse(fed)
+    house.submit_bid("X", AuctionBid(user="mallory", chip_hour_price=9.0,
+                                     slots=1, valid_until=10.0))
+    assert house.clear_all(0.0) == []            # matched, refused at sign
+    assert fed.servers["X"].reservable_slots("vip", 0.0, HOUR) == 1
+    assert house.call_for_tenders(0.0, "mallory") == []
+    offers = house.call_for_tenders(0.0, "alice")
+    assert [o.resource for o in offers] == ["vip"]
+
+
+def test_federating_used_servers_never_rewinds_reservation_ids():
+    """Wrapping servers that already issued reservations must not
+    recycle their ids (cancel would hit the wrong domain's book)."""
+    d = ResourceDirectory()
+    for name, site in (("a0", "A"), ("b0", "B")):
+        d.register(_spec(name, site, 1.0))
+    sa = TradeServer(d, {"a0": PriceSchedule(d.spec("a0"))}, site="A")
+    sb = TradeServer(d, {"b0": PriceSchedule(d.spec("b0"))}, site="B")
+    pre = sa.reserve("a0", "u", 0.0, HOUR, 0.0)   # rid 1, pre-federation
+    fed = TradeFederation({"A": sa, "B": sb})
+    post_a = fed.reserve("a0", "v", 2 * HOUR, 3 * HOUR, 0.0)
+    post_b = fed.reserve("b0", "w", 0.0, HOUR, 0.0)
+    rids = {pre.reservation_id, post_a.reservation_id,
+            post_b.reservation_id}
+    assert len(rids) == 3                         # all distinct
+    assert fed.cancel(post_b.reservation_id)
+    assert fed.reserved_price("a0", "u", 0.5 * HOUR) is not None  # untouched
+
+
+def test_realized_revenue_extends_patron_reservation_quota():
+    """Admission driven by realized revenue: an owner grants proven
+    patrons extra reservation quota that strangers don't get."""
+    bank = GridBank()
+    d, fed = _grid([_spec(f"m{i}", "X", 1.0) for i in range(4)],
+                   max_reservations_per_user=1, bank=bank,
+                   patron_spend_threshold=10.0, patron_quota_bonus=2)
+    from repro.core import AdmissionError
+    fed.reserve("m0", "stranger", 0.0, HOUR, 0.0)
+    with pytest.raises(AdmissionError):
+        fed.reserve("m1", "stranger", 0.0, HOUR, 0.0)   # base quota: 1
+    bank.record(t=0.0, user="patron", owner="X", resource="m0", amount=25.0)
+    fed.reserve("m1", "patron", 0.0, HOUR, 0.0)
+    fed.reserve("m2", "patron", 0.0, HOUR, 0.0)
+    fed.reserve("m3", "patron", 0.0, HOUR, 0.0)         # 1 + bonus 2
+    with pytest.raises(AdmissionError):
+        fed.reserve("m0", "patron", 2 * HOUR, 3 * HOUR, 0.0)
+
+
+def test_auction_broker_in_contention_still_finishes():
+    """Auction users mixed with posted-price rivals on a scarce grid:
+    everyone completes, contracts only ever cover reservable capacity."""
+    specs = [_spec(f"m{i}", "X" if i % 2 else "Y", 1.0 + 0.5 * i)
+             for i in range(4)]
+    market = Marketplace(specs=specs, seed=3, demand_elasticity=1.0)
+    for i in range(5):
+        market.add_user(MarketUser(
+            name=f"u{i}", deadline=40 * HOUR, budget=1e5,
+            strategy=("auction", "cost")[i % 2], n_jobs=6,
+            est_seconds=1500.0))
+    rep = market.run()
+    assert rep.total_done == rep.total_jobs, rep.summary()
+    for c in market.auction_house.contracts:
+        assert c.slots <= market.directory.spec(c.resource).slots

@@ -65,10 +65,10 @@ def test_reservation_locks_price():
     trade, d = _trade()
     r = trade.reserve("r0", "u", start=0.0, end=10 * HOUR, t=0.0)
     # owner hikes the price later (peak hours) — reserved user keeps it
-    locked = trade.effective_price("r0", "u", 12 * HOUR)
+    locked = trade.effective_price("r0", "u", 9 * HOUR)
     assert locked == pytest.approx(r.locked_price)
     # other users pay the live price
-    assert trade.effective_price("r0", "other", 12 * HOUR) >= locked
+    assert trade.effective_price("r0", "other", 9 * HOUR) >= locked
     assert trade.cancel(r.reservation_id)
     assert trade.reserved_price("r0", "u", 5 * HOUR) is None
 
@@ -209,6 +209,84 @@ def test_reservation_per_user_quota():
     r = trade.reserve("r2", "hog", start=2 * HOUR, end=3 * HOUR,
                       t=1.5 * HOUR)   # t past the first two windows' end
     assert r.reservation_id > 0
+
+
+def test_reservation_book_pruned_on_access():
+    """Long market runs must not degrade into scans over every
+    reservation ever made: expired windows are dropped on access, while
+    live ones keep their cancel semantics."""
+    trade, d = _trade(n=1)
+    for i in range(50):
+        trade.reserve("r0", f"u{i % 5}", start=float(i), end=float(i) + 1.0,
+                      t=float(i))
+    assert len(trade.reservations) <= 2           # pruned as we went
+    live = trade.reserve("r0", "keeper", start=100.0, end=200.0, t=60.0)
+    assert trade.reserved_price("r0", "keeper", 150.0) == pytest.approx(
+        live.locked_price)
+    # access far past every expiry: the book empties, cancel says so
+    assert trade.reserved_price("r0", "keeper", 500.0) is None
+    assert len(trade.reservations) == 0
+    assert not trade.cancel(live.reservation_id)
+    # pruning freed capacity and quota: a full history never blocks
+    trade.reserve("r0", "keeper", start=600.0, end=700.0, t=600.0)
+
+
+def test_sealed_bid_price_expires_and_requotes():
+    """A sealed bid's price is honored only inside its validity window;
+    settlements arriving later get the live price (satellite: the dead
+    ``Bid.valid_until`` is now enforced)."""
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r0", site="s", chips=1, base_price=1.0,
+                            peak_multiplier=4.0))
+    trade = TradeServer(d, {"r0": PriceSchedule(d.spec("r0"))},
+                        bid_validity=HOUR)
+    sealed = trade.quote("r0", 0.0)               # 00:00, off-peak: 1.0
+    assert sealed == pytest.approx(1.0)
+    # within validity the sealed price holds, whatever the clock says
+    assert trade.honored_price("r0", "u", sealed, 0.0, 0.5 * HOUR) \
+        == pytest.approx(1.0)
+    # past validity the settlement re-quotes: 09:00 is peak, 4x
+    assert trade.honored_price("r0", "u", sealed, 0.0, 9 * HOUR) \
+        == pytest.approx(4.0)
+    # unless a reservation locks it — contracts survive bid expiry
+    trade.reserve("r0", "u", start=0.0, end=12 * HOUR, t=0.0)
+    assert trade.honored_price("r0", "u", sealed, 0.0, 9 * HOUR) \
+        == pytest.approx(1.0)
+
+
+def test_solicited_bids_carry_configured_validity():
+    trade, d = _trade(n=2)
+    trade.bid_validity = 2 * HOUR
+    bids = trade.solicit_bids(10.0, "u", lambda s: 600.0)
+    assert all(b.valid_until == pytest.approx(10.0 + 2 * HOUR)
+               for b in bids)
+
+
+def test_dispatch_settling_after_bid_expiry_pays_requoted_price():
+    """Engine-level regression for the dead ``valid_until``: a job whose
+    run outlives the sealed quote settles at the live (peak) price, not
+    the stale off-peak one it was dispatched under."""
+    from repro.core import (Dispatcher, JobSpec, NimrodG, SchedulerConfig,
+                            SimulatedExecutor, Simulator, UserRequirements)
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="slow", site="s", chips=1, slots=1,
+                            base_price=1.0, peak_multiplier=4.0,
+                            perf_factor=1.0, mtbf_hours=float("inf")))
+    trade = TradeServer(d, {"slow": PriceSchedule(d.spec("slow"))},
+                        bid_validity=HOUR)
+    sim = Simulator()
+    ex = SimulatedExecutor(sim, d, noise_sigma=0.0)
+    jobs = [JobSpec(job_id="j0", experiment="e", point={}, steps=(),
+                    est_seconds_base=9 * HOUR,      # outlives the quote
+                    stage_in_bytes=0, stage_out_bytes=0)]
+    req = UserRequirements(deadline=24 * HOUR, budget=1e6, user="u")
+    eng = NimrodG("e", jobs, req, d, trade, Dispatcher(ex, d), sim=sim,
+                  sched_cfg=SchedulerConfig())
+    rep = eng.run_simulated(failures=False)
+    assert rep.n_done == 1
+    # dispatched ~00:00 (off-peak, sealed 1.0) but settled ~09:00 (peak):
+    # 9 chip-hours at the re-quoted 4.0, not at the stale 1.0
+    assert rep.total_cost == pytest.approx(9.0 * 4.0, rel=1e-6)
 
 
 def test_quote_reflects_live_utilization():

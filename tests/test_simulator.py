@@ -115,3 +115,28 @@ def test_stop_halts_immediately():
     sim.at(2.0, lambda: seen.append(2))
     sim.run(until=math.inf)
     assert seen == [1]
+
+
+def test_every_fires_on_interval_until_bound():
+    """Recurring events (auction clearing rounds) fire at exact interval
+    multiples and respect the ``until`` bound."""
+    sim = Simulator()
+    ticks = []
+    sim.every(10.0, lambda: ticks.append(sim.now), until=45.0)
+    sim.run(until=100.0)
+    assert ticks == [10.0, 20.0, 30.0, 40.0]
+
+
+def test_every_start_delay_and_stop_value():
+    sim = Simulator()
+    ticks = []
+
+    def fire():
+        ticks.append(sim.now)
+        return len(ticks) >= 3          # truthy return ends the series
+
+    sim.every(5.0, fire, start_delay=0.0)
+    sim.run(until=1000.0)
+    assert ticks == [0.0, 5.0, 10.0]
+    with pytest.raises(ValueError):
+        sim.every(0.0, lambda: None)
