@@ -1,0 +1,138 @@
+"""The cost of stale information: GIS TTL × churn-rate sweep.
+
+Brokers discover through the Grid Information Service, so what they
+know lags the world by (heartbeat detection latency + view TTL).  This
+bench quantifies what that staleness costs: for each (view TTL, site
+churn rate) cell it runs the same seeded six-broker market and records
+dispatches burned on dead resources, in-flight evictions, deadlines
+met and G$ spent.  Longer TTLs on a churning grid mean more scheduling
+against corpses — the ``burned`` column is the price of not asking.
+
+Re-runs the churniest cell with the same seed and asserts byte-identical
+results, then writes the whole table to ``BENCH_gis.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_gis            # full
+    PYTHONPATH=src python -m benchmarks.bench_gis --smoke    # CI
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import standard_market
+
+HOUR = 3600.0
+
+TTLS = (120.0, 900.0, 3600.0)
+CHURN = (("none", None), ("slow", 6.0), ("fast", 2.5))   # mean uptime h
+SMOKE_TTLS = (120.0, 3600.0)
+SMOKE_CHURN = (("fast", 2.5),)
+SEED = 31
+N_USERS = 6
+N_MACHINES = 12
+N_JOBS = 12
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_gis.json")
+
+
+def _run(ttl: float, uptime_h):
+    market = standard_market(
+        N_USERS, n_machines=N_MACHINES, seed=SEED, n_jobs=N_JOBS,
+        demand_elasticity=1.0, gis_ttl=ttl,
+        churn_mean_uptime_h=uptime_h if uptime_h else 6.0,
+        churn_mean_downtime_h=2.0)
+    t0 = time.time()
+    rep = market.run(churn=uptime_h is not None)
+    wall = time.time() - t0
+    market.bank.reconcile({u.name: e.ledger for u, e in
+                           zip(market.users, market.engines)})
+    return market, rep, wall
+
+
+def _row(ttl: float, churn_name: str, rep, wall: float) -> dict:
+    return {
+        "ttl_s": ttl,
+        "churn": churn_name,
+        "done": rep.total_done,
+        "jobs": rep.total_jobs,
+        "deadline_met_frac": rep.deadline_met_frac,
+        "total_spent_gd": rep.total_spent,
+        "burned_dispatches": rep.resource_losses,
+        "evictions": rep.evictions,
+        "refunds_gd": rep.refunds,
+        "churn_events": len(rep.churn_trace),
+        "gis_refreshes": rep.gis_refreshes,
+        "wall_s": wall,
+    }
+
+
+def sweep_table(csv: bool = False, ttls=TTLS, churn=CHURN):
+    rows = []
+    for churn_name, uptime in churn:
+        for ttl in ttls:
+            _, rep, wall = _run(ttl, uptime)
+            rows.append(_row(ttl, churn_name, rep, wall))
+    if not csv:
+        print("churn  ttl_s   done/jobs  met%   burned  evict  "
+              "refresh  spend_G$  wall_s")
+        for r in rows:
+            print(f"{r['churn']:5s} {r['ttl_s']:6.0f} "
+                  f"{r['done']:5d}/{r['jobs']:<5d} "
+                  f"{r['deadline_met_frac']:5.0%} {r['burned_dispatches']:6d} "
+                  f"{r['evictions']:6d} {r['gis_refreshes']:8d} "
+                  f"{r['total_spent_gd']:9.1f} {r['wall_s']:7.2f}")
+        churny = [r for r in rows if r["churn"] == churn[-1][0]
+                  and r["churn"] != "none"]
+        if churny:
+            freshest = min(churny, key=lambda r: r["ttl_s"])
+            stalest = max(churny, key=lambda r: r["ttl_s"])
+            print(f"\nstale-view penalty at churn={stalest['churn']}: "
+                  f"TTL {freshest['ttl_s']:.0f}s -> "
+                  f"{stalest['ttl_s']:.0f}s burns "
+                  f"{freshest['burned_dispatches']} -> "
+                  f"{stalest['burned_dispatches']} dispatches on corpses")
+    return rows
+
+
+def determinism_check(csv: bool, ttl: float, uptime_h):
+    t0 = time.time()
+    _, r1, _ = _run(ttl, uptime_h)
+    _, r2, _ = _run(ttl, uptime_h)
+    wall = time.time() - t0
+    identical = r1.stable_repr() == r2.stable_repr()
+    if not csv:
+        print(f"same-seed churn-market re-run byte-identical: {identical}")
+    if not identical:
+        raise AssertionError("GIS/churn market run is not seed-deterministic")
+    return [("gis_determinism", wall * 1e6, int(identical))]
+
+
+def main(csv: bool = False, smoke: bool = False):
+    ttls = SMOKE_TTLS if smoke else TTLS
+    churn = SMOKE_CHURN if smoke else CHURN
+    rows = sweep_table(csv, ttls=ttls, churn=churn)
+    out = {
+        "bench": "gis",
+        "seed": SEED,
+        "n_users": N_USERS,
+        "n_machines": N_MACHINES,
+        "n_jobs_per_user": N_JOBS,
+        "sweep": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    if not csv:
+        print(f"wrote {OUT_PATH}")
+    results = []
+    for r in rows:
+        results.append((f"gis_{r['churn']}_ttl{r['ttl_s']:.0f}",
+                        r["wall_s"] * 1e6, r["burned_dispatches"]))
+    churniest = churn[-1][1]
+    return results + determinism_check(csv, ttls[-1], churniest)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

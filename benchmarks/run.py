@@ -14,9 +14,9 @@ import traceback
 def main() -> None:
     results = []
     failures = []
-    from benchmarks import (bench_auctions, bench_figure3, bench_kernels,
-                            bench_marketplace, bench_roofline,
-                            bench_scheduler)
+    from benchmarks import (bench_auctions, bench_figure3, bench_gis,
+                            bench_kernels, bench_marketplace,
+                            bench_roofline, bench_scheduler)
     mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
             ("scheduler tables (strategies / scale / faults)",
              bench_scheduler),
@@ -24,6 +24,7 @@ def main() -> None:
              bench_marketplace),
             ("auctions (negotiated contracts vs posted prices)",
              bench_auctions),
+            ("GIS staleness (view TTL x site churn)", bench_gis),
             ("kernels (pallas vs oracle)", bench_kernels),
             ("roofline (dry-run 3-term table)", bench_roofline)]
     # moe crossover needs 512 placeholder devices; include only when the

@@ -14,6 +14,9 @@ from repro.core.auctions import (Ask, AuctionBid, AuctionBroker,
 from repro.core.economy import (AdmissionError, Bid, BudgetLedger,
                                 PriceSchedule, Reservation, TradeFederation,
                                 TradeServer, UserRequirements)
+from repro.core.gis import (GISClient, GISEntry, GISRecord, GISRegistry,
+                            GISSnapshot, GridInformationService,
+                            department_of)
 from repro.core.jobs import Job, JobSpec, JobStatus
 from repro.core.marketplace import (Marketplace, MarketReport, MarketUser,
                                     UserOutcome, mixed_auction_market,
@@ -26,25 +29,29 @@ from repro.core.resources import (ResourceDirectory, ResourceSpec,
 from repro.core.scheduler import (AllocationDecision, ContractQuote,
                                   ResourceView, ScheduleAdvisor,
                                   SchedulerConfig, negotiate_contract)
-from repro.core.simulator import FailureProcess, Simulator, duration_model
-from repro.core.dispatcher import (SLOT_LOST, DispatchCallbacks, Dispatcher,
+from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
+                                  duration_model)
+from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
+                                   DispatchCallbacks, Dispatcher,
                                    LocalExecutor, SimulatedExecutor,
-                                   StagingProxy)
+                                   StagingProxy, is_resource_fault)
 
 __all__ = [
     "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
     "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
-    "ClearingRound", "Contract", "ContractQuote", "CounterOffer",
-    "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
-    "ExperimentReport", "FailureProcess", "GridBank", "Job", "JobSpec",
+    "ChurnProcess", "ClearingRound", "Contract", "ContractQuote",
+    "CounterOffer", "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
+    "ExperimentReport", "FailureProcess", "GISClient", "GISEntry",
+    "GISRecord", "GISRegistry", "GISSnapshot", "GridBank",
+    "GridInformationService", "Job", "JobSpec",
     "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
     "Marketplace", "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
     "PriceSchedule", "ReconciliationError", "Reservation",
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
-    "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig", "SimulatedExecutor",
-    "Simulator", "StagingProxy", "TradeFederation", "TradeServer",
-    "UserOutcome", "UserRequirements", "duration_model",
-    "gusto_like_testbed", "load_events", "mixed_auction_market",
-    "negotiate_contract", "parse_plan", "replay", "standard_market",
-    "substitute",
+    "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
+    "SimulatedExecutor", "Simulator", "StagingProxy", "TradeFederation",
+    "TradeServer", "UserOutcome", "UserRequirements", "department_of",
+    "duration_model", "gusto_like_testbed", "is_resource_fault",
+    "load_events", "mixed_auction_market", "negotiate_contract",
+    "parse_plan", "replay", "standard_market", "substitute",
 ]

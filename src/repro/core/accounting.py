@@ -28,13 +28,15 @@ HOUR = 3600.0
 @dataclasses.dataclass(frozen=True)
 class BankEntry:
     """One settlement: ``user`` paid ``owner`` ``amount`` G$ for chip
-    time on ``resource`` at virtual time ``t``."""
+    time on ``resource`` at virtual time ``t``.  ``amount`` is negative
+    for ``kind="refund"`` — an owner paying a user back (e.g. the
+    breach rebate when a departing site voids a live contract)."""
     t: float
     user: str
     owner: str                      # administrative domain (spec.site)
     resource: str
     amount: float
-    kind: str = "settle"            # settle | kill | contract
+    kind: str = "settle"            # settle | kill | contract | refund
 
 
 class ReconciliationError(Exception):
@@ -90,6 +92,13 @@ class GridBank:
         independently accumulated, so comparing it against
         ``total_revenue`` is a genuine two-sided audit."""
         return math.fsum(self._spend.values())
+
+    def total_refunds(self) -> float:
+        """G$ owners have paid BACK to users (contract-breach rebates
+        from departing sites).  Positive number; the signed entries are
+        already netted into spend/revenue."""
+        return -math.fsum(e.amount for e in self.entries
+                          if e.kind == "refund")
 
     def top_patrons(self, owner: str, n: int = 3) -> List[Tuple[str, float]]:
         pairs = [(u, amt) for (u, o), amt in self._pair.items()

@@ -94,9 +94,10 @@ class Contract:
     end: float
     via: str                        # "auction" | "tender"
     reservation_ids: Tuple[int, ...] = ()
+    voided_at: Optional[float] = None   # owner broke it (site departed)
 
     def active_at(self, t: float) -> bool:
-        return self.start <= t < self.end
+        return self.start <= t < self.end and self.voided_at is None
 
     def max_commitment(self, directory: ResourceDirectory,
                        t: Optional[float] = None) -> float:
@@ -230,6 +231,7 @@ class AuctionHouse:
         self.federation = federation
         self.round_interval = round_interval
         self.window = window
+        self.idle_discount = idle_discount
         self.tender_discount = tender_discount
         self.tender_validity = tender_validity
         self.books: Dict[str, DoubleAuctionBook] = {
@@ -330,7 +332,9 @@ class AuctionHouse:
         spec = self.federation.directory.spec(resource)
         if spec.authorized_users and user not in spec.authorized_users:
             return None
-        server = self.federation.servers[site]
+        server = self.federation.servers.get(site)
+        if server is None:
+            return None         # domain departed mid-negotiation
         rids = []
         for _ in range(slots):
             try:
@@ -352,6 +356,36 @@ class AuctionHouse:
         if sub is not None:
             sub(c)
         return c
+
+    # -- membership churn ----------------------------------------------
+    def add_site(self, site: str, server: TradeServer) -> None:
+        """A (re)joined domain opens a fresh order book."""
+        self.books[site] = DoubleAuctionBook(server,
+                                             idle_discount=self.idle_discount)
+
+    def remove_site(self, site: str, t: float
+                    ) -> List[Tuple[str, Contract, float]]:
+        """The domain left: close its book and VOID every live contract
+        on it — the owner can no longer deliver the promised slot-hours.
+        Backing reservations are cancelled and each voided contract's
+        still-undelivered value is returned as ``(user, contract,
+        remaining_value)`` so the driver can route breach refunds
+        through the bank.  Iterates users sorted — deterministic."""
+        self.books.pop(site, None)
+        voided: List[Tuple[str, Contract, float]] = []
+        for user in sorted(self._live):
+            keep = []
+            for c in self._live[user]:
+                if c.site == site and c.end > t and c.voided_at is None:
+                    remaining = c.max_commitment(self.federation.directory, t)
+                    for rid in c.reservation_ids:
+                        self.federation.cancel(rid)
+                    c.voided_at = t
+                    voided.append((user, c, remaining))
+                else:
+                    keep.append(c)
+            self._live[user] = keep
+        return voided
 
     def contracts_for(self, user: str) -> List[Contract]:
         return [c for c in self.contracts if c.user == user]
@@ -408,7 +442,10 @@ class AuctionBroker:
         for book in self.house.books.values():
             book.bids.pop(self.user, None)
         for c in self._live:
-            if c.end > t:
+            # a contract voided by a departing site already had its
+            # reservations cancelled — after the site rejoins its old
+            # ids are retired, never ours to cancel again
+            if c.end > t and c.voided_at is None:
                 for rid in c.reservation_ids:
                     self.house.federation.cancel(rid)
         self._live = []

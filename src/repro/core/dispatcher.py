@@ -54,6 +54,20 @@ class StagingProxy:
 # no suspicion cast on the resource).
 SLOT_LOST = "slot contention: lost race for free slot"
 
+# Reason reported when a whole site departs mid-run (churn) and takes its
+# in-flight jobs with it.  Like every "resource ..." reason it is the
+# machine's fault, not the job's: requeue without burning an attempt.
+RESOURCE_DEPARTED = "resource departed: site left the grid"
+
+
+def is_resource_fault(reason: str) -> bool:
+    """True for failures caused by the resource dying or leaving (as
+    opposed to the job's own payload failing).  A broker scheduling
+    against a stale information-service view *will* dispatch to corpses;
+    those burned dispatches requeue like ``SLOT_LOST`` — suspicion is
+    cast on the resource, never an attempt charged to the job."""
+    return reason.startswith("resource ")
+
 
 @dataclasses.dataclass
 class DispatchCallbacks:
@@ -89,7 +103,8 @@ class SimulatedExecutor:
     def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
         # register the cancel token BEFORE the latency hop: a duplicate
         # killed while still in flight must never acquire a slot and run
-        token = {"cancelled": False}
+        token = {"cancelled": False, "job": job, "cb": cb,
+                 "resource": resource}
         self._running[job.job_id] = token
         if self.dispatch_latency > 0.0:
             self.sim.after(
@@ -111,7 +126,8 @@ class SimulatedExecutor:
         st = self.directory.status(resource)
         if not st.up:
             self._drop_token(job, token)
-            cb.on_failed(job, "resource unavailable at submit")
+            cb.on_failed(job, RESOURCE_DEPARTED if st.departed
+                         else "resource unavailable at submit")
             return
         if not st.acquire(spec):
             self._drop_token(job, token)
@@ -131,10 +147,10 @@ class SimulatedExecutor:
         def _fail_if_down(phase_next: Callable[[], None], reason: str):
             def wrapped():
                 if token["cancelled"]:
-                    self._finish(job, spec.name)
+                    self._finish(job, spec.name, token)
                     return
                 if not self.directory.status(resource).up:
-                    self._finish(job, spec.name)
+                    self._finish(job, spec.name, token)
                     cb.on_failed(job, reason)
                     return
                 phase_next()
@@ -152,21 +168,45 @@ class SimulatedExecutor:
                                                 "resource failed staging out"))
 
         def finish():
-            self._finish(job, spec.name)
+            self._finish(job, spec.name, token)
             cb.on_done(job, ex)
 
         self.sim.after(s_in, _fail_if_down(start_exec,
                                            "resource failed staging in"))
 
-    def _finish(self, job: Job, resource: str) -> None:
-        self._running.pop(job.job_id, None)
-        job.slot_held = False
-        self.directory.status(resource).release()
+    def _finish(self, job: Job, resource: str, token: dict) -> None:
+        # idempotent AND token-gated: interrupt() may finish a job whose
+        # phase timers are still in the heap, and the engine may have
+        # redispatched the same job since — a late closure holding the
+        # old token must neither pop the new token nor release the slot
+        # the new dispatch acquired
+        if self._running.get(job.job_id) is not token:
+            return
+        del self._running[job.job_id]
+        if job.slot_held:
+            job.slot_held = False
+            self.directory.status(resource).release()
 
     def cancel(self, job: Job) -> None:
         tok = self._running.get(job.job_id)
         if tok:
             tok["cancelled"] = True
+
+    def interrupt(self, resource: str,
+                  reason: str = RESOURCE_DEPARTED) -> int:
+        """Fail over everything in flight on ``resource`` RIGHT NOW —
+        a departing site does not wait for phase boundaries.  Slots are
+        released, callbacks fire immediately (jobs still in the WAN hop
+        included: their dispatch was racing toward a corpse), and the
+        phase timers already in the heap become no-ops.  Returns the
+        number of dispatches failed over."""
+        victims = [tok for jid, tok in sorted(self._running.items())
+                   if tok["resource"] == resource and not tok["cancelled"]]
+        for tok in victims:
+            tok["cancelled"] = True
+            self._finish(tok["job"], resource, tok)
+            tok["cb"].on_failed(tok["job"], reason)
+        return len(victims)
 
     def estimate(self, job: Job, resource: str) -> float:
         spec = self.directory.spec(resource)

@@ -292,16 +292,60 @@ class TradeFederation:
         self.servers = dict(sorted(servers.items()))
         self.directory = next(iter(self.servers.values())).directory
         self.bid_validity = max(s.bid_validity for s in self.servers.values())
+        # domains that left the grid (churn): their servers stay behind
+        # as read-only price boards — a broker holding a stale view can
+        # still COMPUTE against the departed domain's posted schedule,
+        # it just can't trade there anymore
+        self._departed: Dict[str, TradeServer] = {}
+        # high-water mark over every reservation id EVER issued under
+        # this federation, surviving server replacement: a site that
+        # rejoins with a fresh server must never reissue an id that
+        # lives on in voided contracts or audit trails
+        self._rid_floor = 1
+        self._restride()
+
+    def _restride(self) -> None:
         # stride the per-server reservation counters so ids are unique
         # federation-wide (cancel() must never hit a rival domain's
         # book).  Counters only move FORWARD into distinct residue
         # classes: a server that already issued ids before federation
-        # keeps them below every id issued afterwards.
+        # (or before a membership change) keeps them below every id
+        # issued afterwards — departed/replaced servers' history counts
+        # too, via the floor.
         n = len(self.servers)
-        start = max(s._next_rid for s in self.servers.values())
+        if n == 0:
+            return
+        start = max([self._rid_floor]
+                    + [s._next_rid for s in self.servers.values()]
+                    + [s._next_rid for s in self._departed.values()])
+        self._rid_floor = start
         for i, server in enumerate(self.servers.values()):
             server._rid_step = n
             server._next_rid = start + (i + 1 - start) % n
+
+    # -- membership churn ----------------------------------------------
+    def remove_server(self, site: str) -> TradeServer:
+        """The domain left the grid.  Its server is demoted to a
+        read-only price board (quotes on stale views keep working);
+        reserving or bidding there is over."""
+        server = self.servers.pop(site)
+        self._departed[site] = server
+        return server
+
+    def add_server(self, site: str, server: TradeServer) -> None:
+        """A domain joined (or rejoined, with a FRESH server — its old
+        book died with it).  Counters re-stride forward so the new
+        membership keeps issuing federation-unique reservation ids."""
+        if site in self.servers:
+            raise ValueError(f"trade server for {site!r} already federated")
+        old = self._departed.pop(site, None)
+        if old is not None:
+            # the replaced server's issued ids must stay retired forever
+            self._rid_floor = max(self._rid_floor, old._next_rid)
+        self.servers[site] = server
+        self.servers = dict(sorted(self.servers.items()))
+        self.bid_validity = max(s.bid_validity for s in self.servers.values())
+        self._restride()
 
     @classmethod
     def from_directory(cls, directory: ResourceDirectory,
@@ -319,8 +363,14 @@ class TradeFederation:
     def sites(self) -> List[str]:
         return list(self.servers)
 
+    def departed_sites(self) -> List[str]:
+        return sorted(self._departed)
+
     def server_for(self, resource: str) -> TradeServer:
-        return self.servers[self.directory.spec(resource).site]
+        site = self.directory.spec(resource).site
+        if site in self.servers:
+            return self.servers[site]
+        return self._departed[site]
 
     # -- single-server interface (delegated) ---------------------------
     def utilization(self, resource: str) -> float:
@@ -343,12 +393,20 @@ class TradeFederation:
     def reserve(self, resource: str, user: str, start: float, end: float,
                 t: float, locked_price: Optional[float] = None
                 ) -> Reservation:
-        return self.server_for(resource).reserve(
+        site = self.directory.spec(resource).site
+        if site not in self.servers:
+            raise AdmissionError(
+                f"{resource}: domain {site!r} has left the grid — "
+                f"no reservations until it rejoins")
+        return self.servers[site].reserve(
             resource, user, start, end, t, locked_price=locked_price)
 
     def cancel(self, reservation_id: int) -> bool:
+        # departed servers included: voiding a dying domain's contracts
+        # must find the reservations wherever the book went
         return any(s.cancel(reservation_id)
-                   for s in self.servers.values())
+                   for s in list(self.servers.values())
+                   + list(self._departed.values()))
 
     def reserved_price(self, resource: str, user: str, t: float
                        ) -> Optional[float]:

@@ -1,0 +1,366 @@
+"""Grid Information Service (the paper's Globus MDS, taken seriously).
+
+Nimrod/G discovers resources "scattered geographically at various levels
+(department, enterprise, or worldwide)" through a directory service — it
+never enjoys perfect global knowledge.  This module replaces the
+omniscient ``ResourceDirectory.discover`` path with that information
+layer, modeled after GridSim's GIS (cs/0203019):
+
+* a **hierarchical registry** — one department registry per
+  ``site/department``, rolled up into one enterprise registry per
+  administrative domain, rolled up into the global registry (the
+  abstract's three levels).  Resources and per-domain trade servers
+  *register with and deregister from* it on the virtual clock; queries
+  can be scoped to any level;
+* **heartbeat liveness** — registered resources beat every
+  ``heartbeat_interval`` seconds while they are actually up; the GIS
+  only *suspects* a silent resource after ``suspect_after`` missed
+  beats.  Death is detected, never observed: between the failure and
+  the suspicion the GIS happily advertises a corpse;
+* **attribute queries** — ``query(t, user=..., min_chips=...,
+  max_price=..., level=..., within=...)`` filters on the *advertised*
+  (heartbeat-stale) attributes, exactly the MDS search a broker's
+  discovery phase runs;
+* **cached broker views** — ``GISClient`` gives each broker a snapshot
+  with a TTL.  Between refreshes the broker schedules against stale
+  membership: it will dispatch to a machine that died or left since the
+  snapshot and must survive the fast-fail (requeue without burning an
+  attempt, suspect locally, retry elsewhere);
+* **repair ETAs** — ``eta_back_up`` surfaces the
+  ``ResourceStatus.next_transition`` that ``FailureProcess`` and
+  ``ChurnProcess`` publish, so a scheduler can ask "when is it back?"
+  instead of polling a corpse.
+
+Everything is driven by the shared virtual clock and iterates in sorted
+order — GIS runs are exactly as deterministic as the simulator under
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.resources import ResourceDirectory, ResourceSpec
+from repro.core.simulator import Simulator
+
+HOUR = 3600.0
+
+LEVELS = ("department", "enterprise", "global")
+
+
+@dataclasses.dataclass
+class GISRecord:
+    """One resource's registration: the attributes the GIS *advertises*,
+    which lag the ground truth by up to a heartbeat."""
+    spec: ResourceSpec
+    department: str                  # "<site>/<dept>" (level-1 registry)
+    enterprise: str                  # "<site>"        (level-2 registry)
+    registered_at: float
+    last_heartbeat: float
+    advertised_price: float          # chip-hour price at the last beat
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+@dataclasses.dataclass(frozen=True)
+class GISEntry:
+    """What a query returns: the record's attributes frozen at query
+    time, plus the GIS's *suspicion* (not knowledge) of liveness."""
+    spec: ResourceSpec
+    department: str
+    enterprise: str
+    advertised_price: float
+    last_heartbeat: float
+    suspected: bool
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+class GISRegistry:
+    """One node of the hierarchy.  Department registries hold the
+    records; enterprise and global registries hold *references* to the
+    same records (registration propagates upward), so a heartbeat at the
+    leaf is instantly visible at every level — the hierarchy partitions
+    the namespace, it does not add propagation delay."""
+
+    def __init__(self, name: str, level: str,
+                 parent: Optional["GISRegistry"] = None):
+        assert level in LEVELS
+        self.name = name
+        self.level = level
+        self.parent = parent
+        self.children: Dict[str, "GISRegistry"] = {}
+        self.members: Dict[str, GISRecord] = {}
+
+    def child(self, name: str, level: str) -> "GISRegistry":
+        if name not in self.children:
+            self.children[name] = GISRegistry(name, level, parent=self)
+        return self.children[name]
+
+    def _add(self, rec: GISRecord) -> None:
+        node: Optional[GISRegistry] = self
+        while node is not None:
+            node.members[rec.name] = rec
+            node = node.parent
+
+    def _remove(self, name: str) -> None:
+        node: Optional[GISRegistry] = self
+        while node is not None:
+            node.members.pop(name, None)
+            node = node.parent
+
+
+def department_of(spec: ResourceSpec) -> str:
+    """Level-1 registry key: ``site/department`` (a spec with no
+    department lands in its site's ``main`` department)."""
+    return f"{spec.site}/{spec.department or 'main'}"
+
+
+class GridInformationService:
+    """The discovery substrate: register, beat, query — never peek.
+
+    ``price_fn(name, t)`` supplies the chip-hour price a resource
+    advertises at each heartbeat (the marketplace passes the trade
+    federation's posted forward quote); queries filter on this
+    *advertised* price, which can be a full heartbeat stale.
+    """
+
+    def __init__(self, directory: ResourceDirectory, *,
+                 heartbeat_interval: float = 300.0,
+                 suspect_after: int = 2,
+                 price_fn: Optional[Callable[[str, float], float]] = None):
+        if heartbeat_interval <= 0:
+            raise ValueError("heartbeat_interval must be positive")
+        if suspect_after < 1:
+            raise ValueError("suspect_after must be >= 1 missed beats")
+        self.directory = directory
+        self.heartbeat_interval = heartbeat_interval
+        self.suspect_after = suspect_after
+        self.price_fn = price_fn
+        self.root = GISRegistry("grid", "global")
+        self._records: Dict[str, GISRecord] = {}
+        self._trade_servers: Dict[str, object] = {}
+        self.registrations = 0
+        self.deregistrations = 0
+        self.heartbeats = 0
+
+    # -- registration (resources / owners) -----------------------------
+    def register(self, spec: ResourceSpec, t: float) -> GISRecord:
+        if spec.name in self._records:
+            raise ValueError(f"{spec.name!r} already registered with GIS")
+        dept = department_of(spec)
+        node = (self.root.child(spec.site, "enterprise")
+                .child(dept, "department"))
+        price = (self.price_fn(spec.name, t) if self.price_fn is not None
+                 else spec.base_price)
+        rec = GISRecord(spec=spec, department=dept, enterprise=spec.site,
+                        registered_at=t, last_heartbeat=t,
+                        advertised_price=price)
+        node._add(rec)
+        self._records[spec.name] = rec
+        self.registrations += 1
+        return rec
+
+    def deregister(self, name: str, t: float) -> bool:
+        rec = self._records.pop(name, None)
+        if rec is None:
+            return False
+        node = (self.root.child(rec.enterprise, "enterprise")
+                .child(rec.department, "department"))
+        node._remove(name)
+        self.deregistrations += 1
+        return True
+
+    def is_registered(self, name: str) -> bool:
+        return name in self._records
+
+    # -- trade-server membership (per-domain GRACE servers) ------------
+    def register_trade_server(self, site: str, server: object) -> None:
+        self._trade_servers[site] = server
+
+    def deregister_trade_server(self, site: str) -> bool:
+        return self._trade_servers.pop(site, None) is not None
+
+    def trade_servers(self) -> Dict[str, object]:
+        """Live per-domain trade servers, sorted by site — the
+        federation membership is *this* map, not a hardcoded list."""
+        return dict(sorted(self._trade_servers.items()))
+
+    # -- heartbeats ----------------------------------------------------
+    def start(self, sim: Simulator, until: float = math.inf) -> None:
+        """Pump heartbeats on the virtual clock: every interval, each
+        registered resource that is genuinely up refreshes its record
+        (liveness + advertised price).  Down or departed resources go
+        silent — the only way the GIS ever finds out."""
+        def _pump() -> None:
+            # NB: sim.every stops on a truthy return — swallow the count
+            self.pump_heartbeats(sim.now)
+
+        sim.every(self.heartbeat_interval, _pump, until=until)
+
+    def pump_heartbeats(self, t: float) -> int:
+        beat = 0
+        for name in sorted(self._records):
+            if name not in self.directory:
+                continue
+            st = self.directory.status(name)
+            if st.up and not st.departed:
+                self.heartbeat(name, t)
+                beat += 1
+        return beat
+
+    def heartbeat(self, name: str, t: float) -> None:
+        rec = self._records[name]
+        rec.last_heartbeat = t
+        if self.price_fn is not None:
+            rec.advertised_price = self.price_fn(name, t)
+        self.heartbeats += 1
+
+    def suspected(self, name: str, t: float) -> bool:
+        """True once ``suspect_after`` heartbeats have gone missing.
+        Between the actual death and this flipping, the GIS advertises
+        the resource as alive — that window is the detection latency
+        every consumer of this service must survive."""
+        rec = self._records.get(name)
+        if rec is None:
+            return True              # deregistered = certainly gone
+        grace = self.suspect_after * self.heartbeat_interval
+        return t - rec.last_heartbeat > grace + 1e-9
+
+    def eta_back_up(self, name: str, t: float) -> Optional[float]:
+        """The published repair/rejoin time for a suspected resource
+        (``FailureProcess``/``ChurnProcess`` write it), or None if the
+        resource is not suspected or no ETA was published."""
+        if not self.suspected(name, t):
+            return None
+        if name not in self.directory:
+            return None
+        eta = self.directory.status(name).next_transition
+        return eta if math.isfinite(eta) else None
+
+    # -- queries (schedulers) ------------------------------------------
+    def _scope(self, level: str, within: Optional[str]) -> GISRegistry:
+        if level == "global":
+            return self.root
+        if within is None:
+            raise ValueError(f"level={level!r} needs within=<registry name>")
+        if level == "enterprise":
+            return self.root.child(within, "enterprise")
+        if level == "department":
+            site = within.split("/", 1)[0]
+            return self.root.child(site, "enterprise").child(within,
+                                                             "department")
+        raise ValueError(f"unknown level {level!r}; pick one of {LEVELS}")
+
+    def query(self, t: float, *, user: str = "",
+              level: str = "global", within: Optional[str] = None,
+              min_chips: int = 0, max_price: float = math.inf,
+              include_suspected: bool = False) -> List[GISEntry]:
+        """MDS-style attribute search over the chosen registry.  Filters
+        run on *advertised* attributes (price as of the last heartbeat),
+        and — unlike ``ResourceDirectory.discover`` — liveness means "no
+        missed heartbeats", not ground truth."""
+        node = self._scope(level, within)
+        out = []
+        for name in sorted(node.members):
+            rec = node.members[name]
+            spec = rec.spec
+            if (spec.authorized_users and user
+                    and user not in spec.authorized_users):
+                continue
+            if spec.chips < min_chips:
+                continue
+            if rec.advertised_price > max_price:
+                continue
+            sus = self.suspected(name, t)
+            if sus and not include_suspected:
+                continue
+            out.append(GISEntry(
+                spec=spec, department=rec.department,
+                enterprise=rec.enterprise,
+                advertised_price=rec.advertised_price,
+                last_heartbeat=rec.last_heartbeat, suspected=sus))
+        return out
+
+    def levels(self) -> Dict[str, List[str]]:
+        """The registry tree, for reports: enterprise -> departments."""
+        return {site: sorted(node.children)
+                for site, node in sorted(self.root.children.items())}
+
+
+# ---------------------------------------------------------------------------
+# broker-side cached views
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GISSnapshot:
+    """One broker's frozen picture of the grid: everything it believes
+    until the next refresh, however wrong the world has become."""
+    taken_at: float
+    entries: Dict[str, GISEntry]
+
+    def alive(self) -> List[GISEntry]:
+        return [e for _, e in sorted(self.entries.items())
+                if not e.suspected]
+
+
+class GISClient:
+    """Per-broker cached view with a TTL (the paper's scheduler caches
+    MDS answers between discovery phases).
+
+    Between refreshes the broker plans against the snapshot; a resource
+    that died or left since ``taken_at`` still looks healthy, and the
+    broker only learns otherwise by burning a dispatch against it.
+    ``suspect()`` is that feedback path: a fast-failed dispatch marks
+    the resource suspect *locally* until the next refresh — the client
+    never writes to the GIS (suspicion is an opinion, not a fact).
+    """
+
+    def __init__(self, gis: GridInformationService, user: str,
+                 ttl: float = 600.0):
+        if ttl < 0:
+            raise ValueError("ttl must be >= 0")
+        self.gis = gis
+        self.user = user
+        self.ttl = ttl
+        self.refreshes = 0
+        self._snapshot: Optional[GISSnapshot] = None
+        self._local_suspects: set = set()
+
+    def view(self, t: float) -> GISSnapshot:
+        if (self._snapshot is None
+                or t - self._snapshot.taken_at > self.ttl + 1e-9):
+            entries = {e.name: e for e in self.gis.query(
+                t, user=self.user, include_suspected=True)}
+            self._snapshot = GISSnapshot(taken_at=t, entries=entries)
+            # a fresh snapshot supersedes dispatch-time suspicions: the
+            # GIS's (possibly still wrong) answer gets another chance
+            self._local_suspects.clear()
+            self.refreshes += 1
+        return self._snapshot
+
+    def suspect(self, name: str) -> None:
+        self._local_suspects.add(name)
+
+    def is_suspected(self, name: str) -> bool:
+        """The broker's *belief* about ``name``: absent from the last
+        snapshot (departed), advertised-suspected in it, or burned by a
+        dispatch since."""
+        if self._snapshot is None:
+            return False
+        if name in self._local_suspects:
+            return True
+        entry = self._snapshot.entries.get(name)
+        return entry is None or entry.suspected
+
+    def snapshot_age(self, t: float) -> Optional[float]:
+        """Seconds the current snapshot has been stale at ``t`` (None
+        before the first fetch)."""
+        if self._snapshot is None:
+            return None
+        return max(0.0, t - self._snapshot.taken_at)

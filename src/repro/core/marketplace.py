@@ -21,7 +21,12 @@ What the shared grid changes versus the single-user engine:
   the GRACE supply-and-demand knob), so a crowded grid gets expensive
   and cost-minimizing brokers back off to off-peak/cheap machines;
 * each broker reads *free* capacity (slots not held by rivals), not the
-  resource's full rate.
+  resource's full rate;
+* discovery runs through the hierarchical ``GridInformationService``:
+  brokers plan against TTL-cached, heartbeat-stale snapshots, and with
+  ``run(churn=True)`` whole sites leave and rejoin mid-run (in-flight
+  jobs fail over, contracts are voided with breach rebates through the
+  bank, the trade federation's membership tracks the GIS).
 
 Everything unfolds in virtual time from seeded RNG streams: the entire
 market run is exactly reproducible per seed.
@@ -29,19 +34,21 @@ market run is exactly reproducible per seed.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import GridBank
 from repro.core.auctions import AuctionBroker, AuctionHouse
 from repro.core.dispatcher import Dispatcher, SimulatedExecutor
-from repro.core.economy import (PriceSchedule, TradeFederation,
+from repro.core.economy import (PriceSchedule, TradeFederation, TradeServer,
                                 UserRequirements)
+from repro.core.gis import GridInformationService
 from repro.core.jobs import JobSpec
 from repro.core.parametric import NimrodG
 from repro.core.resources import (ResourceDirectory, ResourceSpec,
                                   gusto_like_testbed)
 from repro.core.scheduler import SchedulerConfig
-from repro.core.simulator import FailureProcess, Simulator
+from repro.core.simulator import ChurnProcess, FailureProcess, Simulator
 
 HOUR = 3600.0
 
@@ -74,6 +81,7 @@ class UserOutcome:
     peak_allocation: int
     stall_reason: Optional[str]
     contracts_won: int = 0
+    resource_losses: int = 0         # dispatches burned on dead resources
 
     def row(self) -> str:
         return (f"{self.user:12s} {self.strategy:12s} "
@@ -83,6 +91,7 @@ class UserOutcome:
                 f"met={str(self.met_deadline):5s} "
                 f"races_lost={self.slot_races_lost:3d} "
                 f"requeues={self.requeues:3d} "
+                f"burned={self.resource_losses:3d} "
                 f"contracts={self.contracts_won:3d}")
 
 
@@ -100,6 +109,13 @@ class MarketReport:
     price_trace: List[Tuple[float, float]]   # (t, mean grid quote)
     contracts_struck: int = 0
     owner_revenue: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # information-layer / churn telemetry
+    resource_losses: int = 0                 # dispatches burned on corpses
+    evictions: int = 0                       # in-flight jobs failed over
+    refunds: float = 0.0                     # G$ of contract-breach rebates
+    churn_trace: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)                # (t, leave|join, site)
+    gis_refreshes: int = 0                   # broker snapshot fetches
 
     def summary(self) -> str:
         lines = [f"marketplace seed={self.seed}: {self.n_users} users on "
@@ -113,6 +129,12 @@ class MarketReport:
         if self.owner_revenue:
             lines.append("  owner revenue: " + ", ".join(
                 f"{o}={v:.1f}" for o, v in sorted(self.owner_revenue.items())))
+        if self.churn_trace or self.resource_losses:
+            lines.append(
+                f"  churn: {len(self.churn_trace)} membership events, "
+                f"{self.evictions} in-flight evictions, "
+                f"{self.resource_losses} dispatches burned on stale views, "
+                f"refunds={self.refunds:.1f}G$")
         return "\n".join(lines)
 
     def stable_repr(self) -> str:
@@ -125,10 +147,13 @@ class MarketReport:
                 f"{o.user}|{o.strategy}|{o.n_done}/{o.n_jobs}"
                 f"|t={o.completion_time!r}|spent={o.spent!r}"
                 f"|met={o.met_deadline}|races={o.slot_races_lost}"
-                f"|rq={o.requeues}|peak={o.peak_allocation}"
+                f"|rq={o.requeues}|rl={o.resource_losses}"
+                f"|peak={o.peak_allocation}"
                 f"|stall={o.stall_reason}|contracts={o.contracts_won}")
         parts.append("revenue=" + ",".join(
             f"{o}:{v!r}" for o, v in sorted(self.owner_revenue.items())))
+        parts.append(f"churn={self.churn_trace!r};ev={self.evictions}"
+                     f";refunds={self.refunds!r}")
         parts.append("trace=" + ",".join(
             f"({t!r},{p!r})" for t, p in self.price_trace))
         return "\n".join(parts)
@@ -151,7 +176,14 @@ class Marketplace:
                  max_reservations_per_user: Optional[int] = None,
                  auction_round: float = HOUR,
                  auction_window: float = 2 * HOUR,
-                 idle_discount: float = 0.25):
+                 idle_discount: float = 0.25,
+                 gis_ttl: float = 600.0,
+                 heartbeat_interval: float = 300.0,
+                 gis_suspect_after: int = 2,
+                 churn_mean_uptime_h: float = 8.0,
+                 churn_mean_downtime_h: float = 2.0,
+                 churn_min_sites: int = 1,
+                 churn_rebate: float = 0.25):
         self.seed = seed
         self.sim = Simulator()
         self.directory = ResourceDirectory()
@@ -167,14 +199,36 @@ class Marketplace:
         # the bank as the owning domain's revenue
         self.bank = GridBank()
         # one trade server per administrative domain, federated — the
-        # cross-domain price board brokers arbitrage over
-        self.trade = TradeFederation.from_directory(
-            self.directory, self.schedules,
+        # cross-domain price board brokers arbitrage over.  Kwargs kept
+        # so a site rejoining after churn gets an identical fresh server.
+        self._server_kw = dict(
             max_reservations_per_user=max_reservations_per_user,
             bank=self.bank)
+        self.trade = TradeFederation.from_directory(
+            self.directory, self.schedules, **self._server_kw)
         self.auction_house = AuctionHouse(
             self.trade, round_interval=auction_round,
             window=auction_window, idle_discount=idle_discount)
+        # the information layer: brokers discover through this, never by
+        # reading the directory — so what they know is heartbeat-stale
+        # and TTL-cached, and membership can churn under them
+        self.gis_ttl = gis_ttl
+        self.gis = GridInformationService(
+            self.directory, heartbeat_interval=heartbeat_interval,
+            suspect_after=gis_suspect_after,
+            price_fn=lambda name, t: self.trade.forward_quote(name, t))
+        for name in self.directory.all_names():
+            self.gis.register(self.directory.spec(name), 0.0)
+        for site, server in self.trade.servers.items():
+            self.gis.register_trade_server(site, server)
+        self.churn_mean_uptime_h = churn_mean_uptime_h
+        self.churn_mean_downtime_h = churn_mean_downtime_h
+        self.churn_min_sites = churn_min_sites
+        self.churn_rebate = churn_rebate
+        self.churn: Optional[ChurnProcess] = None
+        self.churn_trace: List[Tuple[float, str, str]] = []
+        self.evictions = 0
+        self.refunds = 0.0
         self.dispatch_latency = dispatch_latency
         self.noise_sigma = noise_sigma
         self.users: List[MarketUser] = []
@@ -206,10 +260,79 @@ class Marketplace:
                          dispatcher, sim=self.sim,
                          sched_cfg=sched_cfg or SchedulerConfig(),
                          seed=self.seed, stop_sim_when_done=False,
-                         auction=broker, bank=self.bank)
+                         auction=broker, bank=self.bank,
+                         gis=self.gis, gis_ttl=self.gis_ttl)
         self.users.append(user)
         self.engines.append(engine)
         return engine
+
+    def _engine_for(self, user: str) -> Optional[NimrodG]:
+        for u, e in zip(self.users, self.engines):
+            if u.name == user:
+                return e
+        return None
+
+    # ------------------------------------------------------------------
+    # membership churn: whole sites leave and rejoin mid-run
+    # ------------------------------------------------------------------
+    def _site_leaves(self, site: str, rejoin_at: float) -> bool:
+        if site not in self.trade.servers:
+            return False             # already gone (shouldn't happen)
+        if len(self.trade.servers) - 1 < self.churn_min_sites:
+            return False             # veto: never empty the grid
+        t = self.sim.now
+        # 1. the machines vanish: down + departed, ETA published, and
+        #    the GIS registration is withdrawn (brokers' cached views
+        #    keep advertising them until their TTL lapses)
+        names = self.directory.site_resources(site)
+        for name in names:
+            st = self.directory.status(name)
+            st.departed = True
+            st.up = False
+            st.next_transition = rejoin_at
+            self.gis.deregister(name, t)
+        # 2. in-flight work fails over NOW — requeued without burning
+        #    an attempt, commitments refunded by each engine's handler
+        for name in names:
+            for engine in self.engines:
+                self.evictions += engine.dispatcher.executor.interrupt(name)
+        # 3. live contracts on the dying domain are voided; the owner
+        #    pays each holder a breach rebate through the bank (the
+        #    consumer's ledger is credited the same amount: the books
+        #    still reconcile to the cent)
+        for user, c, remaining in self.auction_house.remove_site(site, t):
+            amt = self.churn_rebate * remaining
+            engine = self._engine_for(user)
+            if amt > 0.0 and engine is not None:
+                engine.ledger.settle(0.0, -amt)
+                self.bank.record(t=t, user=user, owner=site,
+                                 resource=c.resource, amount=-amt,
+                                 kind="refund")
+                self.refunds += amt
+        # 4. the domain's trade server leaves the federation (it stays
+        #    behind as a read-only price board for stale views)
+        self.trade.remove_server(site)
+        self.gis.deregister_trade_server(site)
+        self.churn_trace.append((t, "leave", site))
+        return True
+
+    def _site_joins(self, site: str) -> None:
+        t = self.sim.now
+        # fresh trade server — the old book died with the old site
+        names = self.directory.site_resources(site)
+        server = TradeServer(self.directory,
+                             {n: self.schedules[n] for n in names},
+                             site=site, **self._server_kw)
+        self.trade.add_server(site, server)
+        self.auction_house.add_site(site, server)
+        self.gis.register_trade_server(site, server)
+        for name in names:
+            st = self.directory.status(name)
+            st.departed = False
+            st.up = True
+            st.next_transition = math.inf
+            self.gis.register(self.directory.spec(name), t)
+        self.churn_trace.append((t, "join", site))
 
     # ------------------------------------------------------------------
     def mean_quote(self, t: float) -> float:
@@ -228,16 +351,26 @@ class Marketplace:
             self.sim.after(sample_interval,
                            lambda: self._watch(sample_interval, horizon))
 
-    def run(self, *, failures: bool = False, horizon: Optional[float] = None,
+    def run(self, *, failures: bool = False, churn: bool = False,
+            horizon: Optional[float] = None,
             sample_interval: float = 600.0) -> MarketReport:
         if not self.engines:
             raise ValueError("no users in the market — add_user() first")
         if horizon is None:
             horizon = max(u.deadline for u in self.users) * 1.5 + 8 * HOUR
+        self.gis.start(self.sim, until=horizon)
         if failures:
             fp = FailureProcess(self.sim, self.directory, seed=self.seed)
             for name in self.directory.all_names():
                 fp.install(name)
+        if churn:
+            self.churn = ChurnProcess(
+                self.sim, self.directory, seed=self.seed,
+                mean_uptime_hours=self.churn_mean_uptime_h,
+                mean_downtime_hours=self.churn_mean_downtime_h,
+                on_leave=self._site_leaves, on_join=self._site_joins)
+            for site in self.directory.sites():
+                self.churn.install(site)
         if any(e.auction is not None for e in self.engines):
             self.auction_house.start(self.sim)
         for engine in self.engines:
@@ -265,7 +398,8 @@ class Marketplace:
                 slot_races_lost=rep.slot_races_lost,
                 peak_allocation=rep.peak_allocation,
                 stall_reason=rep.stall_reason,
-                contracts_won=rep.contracts_won))
+                contracts_won=rep.contracts_won,
+                resource_losses=rep.resource_losses))
         total_jobs = sum(o.n_jobs for o in outcomes)
         total_done = sum(o.n_done for o in outcomes)
         met = sum(1 for o in outcomes if o.met_deadline)
@@ -279,7 +413,13 @@ class Marketplace:
             price_trace=list(self.price_trace),
             contracts_struck=len(self.auction_house.contracts),
             owner_revenue={o: self.bank.owner_revenue(o)
-                           for o in self.bank.owners()})
+                           for o in self.bank.owners()},
+            resource_losses=sum(o.resource_losses for o in outcomes),
+            evictions=self.evictions,
+            refunds=self.refunds,
+            churn_trace=list(self.churn_trace),
+            gis_refreshes=sum(e.gis_client.refreshes for e in self.engines
+                              if e.gis_client is not None))
 
 
 # ---------------------------------------------------------------------------
@@ -289,13 +429,17 @@ def standard_market(n_users: int, *, n_machines: int = 20, seed: int = 0,
                     strategies: Sequence[str] = ("cost", "time",
                                                  "conservative"),
                     demand_elasticity: float = 0.5,
-                    dispatch_latency: float = 1.0) -> Marketplace:
+                    dispatch_latency: float = 1.0,
+                    **market_kw) -> Marketplace:
     """Canonical N-user market: strategies round-robin over the mix,
     deadlines/budgets slightly staggered so brokers are heterogeneous but
-    everything stays deterministic in (n_users, seed)."""
+    everything stays deterministic in (n_users, seed).  Extra keywords
+    (``gis_ttl=``, ``churn_mean_uptime_h=``, ...) pass through to
+    ``Marketplace``."""
     market = Marketplace(n_machines=n_machines, seed=seed,
                          demand_elasticity=demand_elasticity,
-                         dispatch_latency=dispatch_latency)
+                         dispatch_latency=dispatch_latency,
+                         **market_kw)
     for i in range(n_users):
         market.add_user(MarketUser(
             name=f"user{i:02d}",

@@ -18,8 +18,10 @@ import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import plan as plan_mod
-from repro.core.dispatcher import DispatchCallbacks, Dispatcher
+from repro.core.dispatcher import (DispatchCallbacks, Dispatcher,
+                                   is_resource_fault)
 from repro.core.economy import BudgetLedger, TradeServer, UserRequirements
+from repro.core.gis import GISClient, GridInformationService
 from repro.core.jobs import Job, JobSpec, JobStatus
 from repro.core.persistence import Journal, load_events
 from repro.core.resources import ResourceDirectory
@@ -48,6 +50,7 @@ class ExperimentReport:
     duplicates_launched: int = 0
     requeues: int = 0
     slot_races_lost: int = 0         # dispatches that lost a slot race
+    resource_losses: int = 0         # dispatches burned on dead/departed
     contracts_won: int = 0           # negotiated (auction/tender) contracts
     timeline: List[Tuple[float, int, int, float]] = dataclasses.field(
         default_factory=list)        # (t, allocated, done, spent)
@@ -76,7 +79,9 @@ class NimrodG:
                  journal: Optional[Journal] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
                  seed: int = 0, stop_sim_when_done: bool = True,
-                 auction=None, bank=None):
+                 auction=None, bank=None,
+                 gis: Optional[GridInformationService] = None,
+                 gis_ttl: float = 600.0):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -90,6 +95,12 @@ class NimrodG:
         # engine (strategy="auction") and the grid-wide revenue bank
         self.auction = auction
         self.bank = bank
+        # discovery layer: with a GIS the broker plans against a cached,
+        # TTL-stale snapshot (and pays for its staleness in burned
+        # dispatches); without one it reads the directory — the legacy
+        # omniscient single-user path
+        self.gis_client = (GISClient(gis, requirements.user, ttl=gis_ttl)
+                          if gis is not None else None)
         # a marketplace run shares one clock among many engines: only the
         # driver may stop it, not the first engine to finish
         self.stop_sim_when_done = stop_sim_when_done
@@ -253,20 +264,41 @@ class NimrodG:
                     mine[j.resource] = mine.get(j.resource, 0) + 1
         return mine
 
+    def _new_view(self, spec) -> ResourceView:
+        probe = Job(spec=next(iter(self.jobs.values())).spec)
+        est = self.dispatcher.estimate(probe, spec.name)
+        return ResourceView(spec=spec, est_job_seconds=max(est, 1e-6))
+
     def _refresh_views(self) -> None:
-        for spec in self.directory.discover(self.req.user):
-            if spec.name not in self.views:
-                probe = Job(spec=next(iter(self.jobs.values())).spec)
-                est = self.dispatcher.estimate(probe, spec.name)
-                self.views[spec.name] = ResourceView(
-                    spec=spec, est_job_seconds=max(est, 1e-6))
+        snap = None
+        if self.gis_client is not None:
+            # discovery phase through the information service: the
+            # snapshot refreshes only when its TTL lapses, so membership
+            # and liveness here can lag the world by ttl + heartbeats
+            snap = self.gis_client.view(self._now())
+            for name in sorted(snap.entries):
+                entry = snap.entries[name]
+                if (not entry.suspected and name not in self.views
+                        and name in self.directory):
+                    self.views[name] = self._new_view(entry.spec)
+        else:
+            for spec in self.directory.discover(self.req.user):
+                if spec.name not in self.views:
+                    self.views[spec.name] = self._new_view(spec)
         mine = self._my_running()
         for name, v in self.views.items():
-            st = self.directory.status(name)
-            v.suspected = not st.up
-            # free capacity = slots not held by OTHER users' jobs
-            others = max(0, st.running - mine.get(name, 0))
-            v.avail_slots = max(0, v.spec.slots - others)
+            if snap is not None:
+                # believed liveness: the snapshot's word plus dispatch
+                # burns since — NOT the directory's ground truth
+                v.suspected = self.gis_client.is_suspected(name)
+                v.last_seen = snap.taken_at
+            else:
+                v.suspected = not self.directory.status(name).up
+            if name in self.directory:
+                st = self.directory.status(name)
+                # free capacity = slots not held by OTHER users' jobs
+                others = max(0, st.running - mine.get(name, 0))
+                v.avail_slots = max(0, v.spec.slots - others)
 
     # ------------------------------------------------------------------
     # scheduling tick
@@ -344,18 +376,31 @@ class NimrodG:
     # ------------------------------------------------------------------
     # dispatch machinery
     # ------------------------------------------------------------------
+    def _believed_free_slots(self, r: str, mine: Dict[str, int]) -> int:
+        """Slots the broker THINKS are free on ``r``.  Live resources
+        answer a queue probe truthfully (the PR-1 slot-race mechanic);
+        a dead or departed one can't answer — a GIS broker whose stale
+        snapshot still lists it alive believes everything beyond its own
+        holdings is free, dispatches, and fast-fails."""
+        st = self.directory.status(r)
+        spec = self.directory.spec(r)
+        if self.gis_client is None or st.up:
+            return st.free_slots(spec)
+        if self.views[r].suspected:
+            return 0
+        return max(0, spec.slots - mine.get(r, 0))
+
     def _fill_slots(self) -> None:
         t = self._now()
         pend = self._pending_jobs()
         if not pend:
             return
+        mine = self._my_running()
         slots: List[str] = []
         for r in sorted(self.allocated,
                         key=lambda n: (cost_per_job(
                             self.views[n], self._price(n)), n)):
-            st = self.directory.status(r)
-            spec = self.directory.spec(r)
-            slots.extend([r] * st.free_slots(spec))
+            slots.extend([r] * self._believed_free_slots(r, mine))
         remaining = self._remaining()
         for job, resource in zip(pend, slots):
             est = self.views[resource].est_job_seconds
@@ -518,19 +563,33 @@ class NimrodG:
     def _handle_failed(self, job: Job, reason: str) -> None:
         primary_id = job.duplicate_of or job.job_id
         self.ledger.settle(job.committed_cost, 0.0)
+        job.committed_cost = 0.0
+        fault = is_resource_fault(reason)
         if job.resource in self.views:
             self.views[job.resource].failures += 1
             self.views[job.resource].suspected = True
+        if fault and self.gis_client is not None and job.resource:
+            # feed the burn back into the broker's cached view: suspect
+            # locally until the next snapshot says otherwise
+            self.gis_client.suspect(job.resource)
         self._log("FAIL", job_id=job.job_id, resource=job.resource,
                   reason=reason, attempt=job.attempt)
         primary = self.jobs.get(primary_id)
         if primary is None or primary.status == JobStatus.DONE:
             return
         if job.duplicate_of is None:
-            job.status = JobStatus.FAILED
             self.report.requeues += 1
-            if job.attempt >= self.cfg.max_attempts:
-                self.report.n_failed_final += 1
+            if fault:
+                # the machine died or left, not the job: its price-locked
+                # commitment was refunded above, the attempt is handed
+                # back (SLOT_LOST-style), and the job requeues cleanly
+                job.attempt = max(0, job.attempt - 1)
+                job.status = JobStatus.PENDING
+                self.report.resource_losses += 1
+            else:
+                job.status = JobStatus.FAILED
+                if job.attempt >= self.cfg.max_attempts:
+                    self.report.n_failed_final += 1
         self._fill_slots()
 
     # ------------------------------------------------------------------

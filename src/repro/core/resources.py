@@ -25,6 +25,7 @@ ICI_BW = 50e9                # bytes/s/link
 class ResourceSpec:
     name: str
     site: str
+    department: str = ""              # sub-site registry ("" = site/main)
     chips: int = 8
     peak_flops_per_chip: float = PEAK_FLOPS
     perf_factor: float = 1.0          # relative efficiency of this slice
@@ -47,7 +48,12 @@ class ResourceStatus:
     running: int = 0
     queued: int = 0
     load: float = 0.0                 # exogenous competing load [0,1)
+    # published repair/rejoin ETA: FailureProcess writes the scheduled
+    # repair time when it takes the resource down (ChurnProcess the
+    # rejoin time), and clears it on recovery — the GIS answers "when
+    # is it back up?" from this, never from the event queue
     next_transition: float = math.inf
+    departed: bool = False            # site left the grid (churn)
 
     def free_slots(self, spec: ResourceSpec) -> int:
         return max(0, spec.slots - self.running) if self.up else 0
@@ -117,6 +123,15 @@ class ResourceDirectory:
     def all_names(self) -> List[str]:
         return sorted(self._specs)
 
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def sites(self) -> List[str]:
+        return sorted({s.site for s in self._specs.values()})
+
+    def site_resources(self, site: str) -> List[str]:
+        return sorted(n for n, s in self._specs.items() if s.site == site)
+
 
 def gusto_like_testbed(n_machines: int = 70, seed: int = 0,
                        sites: Sequence[str] = ("ANL", "ISI", "Monash", "UVA",
@@ -133,6 +148,7 @@ def gusto_like_testbed(n_machines: int = 70, seed: int = 0,
         price = rng.choice([0.5, 1.0, 1.0, 2.0, 3.0]) * (0.8 + 0.4 * rng.random())
         specs.append(ResourceSpec(
             name=f"{site.lower()}-{i:03d}", site=site,
+            department=f"d{(i // len(sites)) % 3}",
             chips=rng.choice([1, 1, 2, 4]),
             perf_factor=perf,
             slots=1,

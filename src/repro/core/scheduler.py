@@ -2,7 +2,9 @@
 
 The schedule advisor periodically re-plans against live grid state:
 
-1. *discovery*   — authorized, up resources from the directory (MDS);
+1. *discovery*   — authorized, believed-up resources; under a Grid
+   Information Service this is a TTL-cached, heartbeat-stale snapshot
+   (``ResourceView.last_seen``), not ground truth;
 2. *trading*     — price quotes / sealed bids from the trade server;
 3. *rate model*  — jobs/second each resource sustains: roofline-seeded
    estimate refined by an EMA of measured completions (the paper's
@@ -58,6 +60,10 @@ class ResourceView:
     failures: int = 0
     suspected: bool = False
     avail_slots: Optional[int] = None        # None = all of spec.slots
+    # when the liveness/membership half of this view was last fetched
+    # from the information service (None = omniscient directory path);
+    # everything the advisor believes about this resource is as-of here
+    last_seen: Optional[float] = None
 
     def _avail_fraction(self) -> float:
         if self.avail_slots is None or self.spec.slots <= 0:

@@ -105,19 +105,87 @@ class FailureProcess:
 
         def fail():
             st = self.directory.status(name)
-            if st.up:
-                st.up = False
-                self.on_down(name)
             repair = rng.expovariate(1.0 / max(spec.mttr_hours * 3600.0, 1.0))
+            if st.up and not st.departed:
+                st.up = False
+                # publish the scheduled repair time: information services
+                # answer "ETA back up" from this, not from omniscience
+                st.next_transition = self.sim.now + repair
+                self.on_down(name)
 
             def fix():
-                st.up = True
-                self.on_up(name)
+                # a departed site owns its machines' fate: the renewal
+                # process keeps ticking but must not resurrect them
+                if not st.departed:
+                    st.up = True
+                    st.next_transition = math.inf
+                    self.on_up(name)
                 self._schedule_failure(name, spec, rng)
 
             self.sim.after(repair, fix)
 
         self.sim.after(dt, fail)
+
+
+class ChurnProcess:
+    """Site-level membership churn: whole administrative domains join
+    and leave the grid mid-run (the abstract's "resources ... may span
+    many administrative domains" is a statement about *time* too — a
+    global testbed's membership is never fixed).
+
+    Alternating leave/rejoin renewal process per site, deterministic per
+    (seed, site) exactly like ``FailureProcess`` per resource.  The
+    mechanics of departure (deregistering from the GIS, failing over
+    in-flight jobs, refunding contracts) belong to the driver:
+
+    * ``on_leave(site, rejoin_at) -> bool`` — return False to VETO the
+      departure (e.g. it would empty the grid); the process then just
+      re-draws a later departure time.  ``rejoin_at`` is the already
+      scheduled return time, for publishing as the resources' ETA.
+    * ``on_join(site)`` — the site is back.
+    """
+
+    def __init__(self, sim: Simulator, directory: ResourceDirectory,
+                 seed: int = 0, *,
+                 mean_uptime_hours: float = 8.0,
+                 mean_downtime_hours: float = 2.0,
+                 on_leave: Optional[Callable[[str, float], bool]] = None,
+                 on_join: Optional[Callable[[str], None]] = None):
+        if mean_uptime_hours <= 0 or mean_downtime_hours <= 0:
+            raise ValueError("churn means must be positive")
+        self.sim = sim
+        self.directory = directory
+        self.seed = seed
+        self.mean_uptime = mean_uptime_hours * 3600.0
+        self.mean_downtime = mean_downtime_hours * 3600.0
+        self.on_leave = on_leave or (lambda s, eta: True)
+        self.on_join = on_join or (lambda s: None)
+        self.events: List[Tuple[float, str, str]] = []   # (t, kind, site)
+
+    def install(self, site: str) -> None:
+        rng = random.Random(f"{self.seed}|churn|{site}")
+        self._schedule_leave(site, rng)
+
+    def _schedule_leave(self, site: str, rng: random.Random) -> None:
+        dt = rng.expovariate(1.0 / self.mean_uptime)
+
+        def leave():
+            downtime = rng.expovariate(1.0 / self.mean_downtime)
+            rejoin_at = self.sim.now + downtime
+            if not self.on_leave(site, rejoin_at):
+                # vetoed (e.g. last site standing): stay, try later
+                self._schedule_leave(site, rng)
+                return
+            self.events.append((self.sim.now, "leave", site))
+
+            def join():
+                self.events.append((self.sim.now, "join", site))
+                self.on_join(site)
+                self._schedule_leave(site, rng)
+
+            self.sim.after(downtime, join)
+
+        self.sim.after(dt, leave)
 
 
 def duration_model(spec: ResourceSpec, est_seconds_base: float,

@@ -1,0 +1,373 @@
+"""Grid Information Service: hierarchical discovery, heartbeat liveness,
+TTL-stale broker views, site churn, and the fail-over + refund economics
+of scheduling against imperfect information (cs/0203019's GIS layer)."""
+import math
+
+import pytest
+
+from repro.core import (ChurnProcess, FailureProcess, GISClient,
+                        GridInformationService, Marketplace, MarketUser,
+                        ResourceDirectory, ResourceSpec, SchedulerConfig,
+                        department_of, standard_market)
+
+HOUR = 3600.0
+
+
+def _spec(name, site, department="", price=1.0, slots=1, chips=1,
+          users=()):
+    return ResourceSpec(name=name, site=site, department=department,
+                        chips=chips, slots=slots, base_price=price,
+                        peak_multiplier=1.0, mtbf_hours=float("inf"),
+                        authorized_users=users)
+
+
+def _gis(specs, **kw):
+    d = ResourceDirectory()
+    for s in specs:
+        d.register(s)
+    gis = GridInformationService(d, **kw)
+    for s in specs:
+        gis.register(s, 0.0)
+    return d, gis
+
+
+# ---------------------------------------------------------------------------
+# hierarchy + attribute queries
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_query_scopes():
+    """The abstract's three levels: a department query sees only its
+    lab, an enterprise query the whole domain, global everything."""
+    d, gis = _gis([
+        _spec("a0", "ANL", "cs"), _spec("a1", "ANL", "cs"),
+        _spec("a2", "ANL", "physics"),
+        _spec("i0", "ISI", "grid"),
+    ])
+    assert [e.name for e in gis.query(0.0)] == ["a0", "a1", "a2", "i0"]
+    assert [e.name for e in gis.query(0.0, level="enterprise",
+                                      within="ANL")] == ["a0", "a1", "a2"]
+    assert [e.name for e in gis.query(0.0, level="department",
+                                      within="ANL/cs")] == ["a0", "a1"]
+    assert gis.levels() == {"ANL": ["ANL/cs", "ANL/physics"],
+                            "ISI": ["ISI/grid"]}
+    # a spec without a department lands in its site's main registry
+    assert department_of(_spec("x", "UVA")) == "UVA/main"
+
+
+def test_query_attribute_filters():
+    d, gis = _gis([
+        _spec("cheap", "X", price=0.5, chips=2),
+        _spec("dear", "X", price=5.0, chips=8),
+        _spec("vip", "X", price=1.0, users=("alice",)),
+    ])
+    assert [e.name for e in gis.query(0.0, min_chips=4)] == ["dear"]
+    assert [e.name for e in gis.query(0.0, max_price=1.0,
+                                      user="alice")] == ["cheap", "vip"]
+    # authorization: strangers never discover restricted machines
+    assert [e.name for e in gis.query(0.0, user="mallory")
+            ] == ["cheap", "dear"]
+
+
+def test_query_price_is_advertised_not_live():
+    """max_price filters on the price the resource last *advertised*
+    (at its heartbeat), not the owner's live quote."""
+    prices = {"m0": 1.0}
+    d, gis = _gis([_spec("m0", "X")],
+                  price_fn=lambda n, t: prices[n])
+    assert [e.name for e in gis.query(0.0, max_price=2.0)] == ["m0"]
+    prices["m0"] = 9.0               # owner repriced...
+    assert [e.name for e in gis.query(10.0, max_price=2.0)] == ["m0"]
+    gis.heartbeat("m0", 20.0)        # ...but only the beat publishes it
+    assert gis.query(30.0, max_price=2.0) == []
+
+
+# ---------------------------------------------------------------------------
+# heartbeat liveness: death is detected, never observed
+# ---------------------------------------------------------------------------
+
+def test_missed_heartbeats_create_detection_latency():
+    from repro.core import Simulator
+    d, gis = _gis([_spec("r0", "X")], heartbeat_interval=100.0,
+                  suspect_after=2)
+    sim = Simulator()
+    gis.start(sim)
+    sim.at(250.0, lambda: setattr(d.status("r0"), "up", False))
+    sim.run(until=1000.0)
+    # last successful beat at t=200; grace = 2 beats = 200s
+    assert not gis.suspected("r0", 390.0)    # the corpse still advertised
+    assert gis.suspected("r0", 410.0)        # ...until the grace lapses
+    # deregistration is definitive at any time
+    gis.deregister("r0", 1000.0)
+    assert gis.suspected("r0", 0.0)
+
+
+def test_failure_process_publishes_repair_eta():
+    """Satellite: ``ResourceStatus.next_transition`` is written on
+    failure (the scheduled repair time), cleared on repair, and the GIS
+    serves it as "ETA back up" for suspected resources only."""
+    from repro.core import Simulator
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="r0", site="X", chips=1, mtbf_hours=1.0,
+                            mttr_hours=2.0))
+    gis = GridInformationService(d, heartbeat_interval=60.0)
+    gis.register(d.spec("r0"), 0.0)
+    sim = Simulator()
+    gis.start(sim)
+    downs, ups = [], []
+    fp = FailureProcess(sim, d, seed=4,
+                        on_down=lambda r: downs.append(
+                            (sim.now, d.status(r).next_transition)),
+                        on_up=lambda r: ups.append(sim.now))
+    fp.install("r0")
+    # poll the GIS while the run unfolds (post-hoc queries would see
+    # only the final record state)
+    answers = []
+    sim.every(10 * 60.0, lambda: answers.append(
+        (sim.now, gis.eta_back_up("r0", sim.now))), start_delay=0.0)
+    sim.run(until=50 * HOUR)
+    assert downs and ups
+    for (t_down, eta), t_up in zip(downs, ups):
+        assert eta == pytest.approx(t_up)    # published ETA = actual fix
+        assert eta > t_down
+    served = [(t, eta) for t, eta in answers if eta is not None]
+    assert served                            # the GIS did answer "when?"
+    published = {eta for _, eta in downs}
+    for t, eta in served:
+        assert eta > t                       # always a *future* repair
+        assert eta in published              # ...from the outage's record
+    if len(ups) == len(downs):               # ended repaired: ETA cleared
+        assert d.status("r0").next_transition == math.inf
+
+
+# ---------------------------------------------------------------------------
+# cached broker views
+# ---------------------------------------------------------------------------
+
+def test_client_view_is_cached_until_ttl():
+    d, gis = _gis([_spec("m0", "X"), _spec("m1", "X")])
+    client = GISClient(gis, "u", ttl=500.0)
+    v1 = client.view(0.0)
+    assert set(v1.entries) == {"m0", "m1"}
+    gis.deregister("m0", 100.0)              # the world moves on...
+    v2 = client.view(400.0)
+    assert v2 is v1                          # ...the broker doesn't know
+    assert "m0" in v2.entries
+    assert client.refreshes == 1
+    v3 = client.view(600.0)                  # TTL lapsed: refresh
+    assert v3 is not v1
+    assert "m0" not in v3.entries
+    assert client.is_suspected("m0")         # gone = not schedulable
+
+
+def test_local_suspicion_lasts_until_next_refresh():
+    d, gis = _gis([_spec("m0", "X")])
+    client = GISClient(gis, "u", ttl=500.0)
+    client.view(0.0)
+    assert not client.is_suspected("m0")
+    client.suspect("m0")                     # a dispatch burned on it
+    assert client.is_suspected("m0")
+    client.view(100.0)                       # within TTL: opinion holds
+    assert client.is_suspected("m0")
+    client.view(600.0)                       # fresh snapshot: re-trust
+    assert not client.is_suspected("m0")
+
+
+def test_stale_view_dispatch_burns_and_requeues_without_attempt():
+    """The acceptance scenario in miniature: a site dies right after the
+    broker refreshed its view.  With max_attempts=1 every burned
+    dispatch would be fatal if it cost an attempt — yet all jobs finish
+    on the surviving site."""
+    specs = [_spec("x0", "X", price=0.1, slots=2),
+             _spec("y0", "Y", price=2.0, slots=2)]
+    market = Marketplace(specs=specs, seed=0, gis_ttl=2 * HOUR,
+                         noise_sigma=0.0)
+    eng = market.add_user(
+        MarketUser(name="u", deadline=20 * HOUR, budget=1e6, n_jobs=6,
+                   est_seconds=900.0),
+        sched_cfg=SchedulerConfig(max_attempts=1))
+    # cheap site X vanishes mid-run (in-flight jobs evicted too)
+    market.sim.at(1000.0, lambda: market._site_leaves("X", 40 * HOUR))
+    rep = market.run()
+    out = rep.outcomes[0]
+    assert rep.evictions > 0                   # in-flight work failed over
+    assert out.resource_losses > 0             # stale view burned dispatches
+    assert out.n_done == out.n_jobs, rep.summary()
+    assert out.stall_reason is None
+    # the ledger holds no stranded commitments and the bank balances
+    assert eng.ledger.committed == pytest.approx(0.0)
+    market.bank.reconcile({"u": eng.ledger})
+
+
+# ---------------------------------------------------------------------------
+# churn: whole sites leave and rejoin
+# ---------------------------------------------------------------------------
+
+def _churn_events(seed, veto=False):
+    from repro.core import Simulator
+    d = ResourceDirectory()
+    for name, site in (("a0", "A"), ("b0", "B")):
+        d.register(_spec(name, site))
+    sim = Simulator()
+    cp = ChurnProcess(sim, d, seed=seed, mean_uptime_hours=2.0,
+                      mean_downtime_hours=1.0,
+                      on_leave=(lambda s, eta: not veto))
+    for site in d.sites():
+        cp.install(site)
+    sim.run(until=40 * HOUR)
+    return cp.events
+
+
+def test_churn_process_deterministic_and_vetoable():
+    e1 = _churn_events(seed=9)
+    e2 = _churn_events(seed=9)
+    assert e1 and e1 == e2
+    assert e1 != _churn_events(seed=10)
+    # leaves and joins alternate per site
+    per_site = {}
+    for _, kind, site in e1:
+        assert per_site.get(site) != kind
+        per_site[site] = kind
+    # a vetoed departure never happens (and never deadlocks the process)
+    assert _churn_events(seed=9, veto=True) == []
+
+
+def test_departing_site_voids_contracts_and_refunds_through_bank():
+    """Satellite: a price-locked contract on a dying site is voided, its
+    reservations cancelled, and the owner's breach rebate flows through
+    the bank — with the books still reconciling exactly."""
+    specs = [_spec("x0", "X"), _spec("y0", "Y")]
+    market = Marketplace(specs=specs, seed=0, churn_rebate=0.25)
+    eng = market.add_user(MarketUser(name="u0", deadline=10 * HOUR,
+                                     budget=1e4, n_jobs=2))
+    offer = [o for o in market.auction_house.call_for_tenders(0.0, "u0")
+             if o.site == "X"][0]
+    c = market.auction_house.accept(offer, "u0", t=0.0)
+    assert market.trade.reserved_price("x0", "u0", HOUR) is not None
+    settled_before = eng.ledger.settled
+    assert market._site_leaves("X", rejoin_at=8 * HOUR)
+    assert c.voided_at == 0.0
+    assert market.refunds > 0.0
+    assert eng.ledger.settled == pytest.approx(settled_before
+                                               - market.refunds)
+    refund_entries = [e for e in market.bank.entries if e.kind == "refund"]
+    assert refund_entries and all(e.amount < 0 for e in refund_entries)
+    market.bank.reconcile({"u0": eng.ledger})
+    # the domain is untradeable while gone...
+    from repro.core import AdmissionError
+    with pytest.raises(AdmissionError):
+        market.trade.reserve("x0", "u0", HOUR, 2 * HOUR, 0.0)
+    assert market.trade.quote("x0", 0.0) > 0.0     # stale quotes still price
+    # ...and fully tradeable again after rejoining (fresh book, no locks)
+    market.sim.at(0.0, lambda: None)
+    market._site_joins("X")
+    assert market.gis.is_registered("x0")
+    assert market.trade.reserved_price("x0", "u0", HOUR) is None
+    market.trade.reserve("x0", "u0", HOUR, 2 * HOUR, 0.0)
+
+
+def test_churn_market_completes_and_reconciles():
+    """Acceptance: a churning market with a finite TTL ends with every
+    broker either meeting its constraints or reporting the miss — no
+    crashes, no lost jobs, no unreconciled G$."""
+    market = standard_market(6, n_machines=10, seed=5, n_jobs=8,
+                             gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                             churn_mean_downtime_h=2.0)
+    rep = market.run(churn=True)
+    assert rep.churn_trace                       # membership really churned
+    assert all(e.finished for e in market.engines)
+    for user, engine in zip(market.users, market.engines):
+        statuses = [j.status.value for j in engine.jobs.values()]
+        assert len(statuses) == user.n_jobs      # no job vanished
+        done = sum(1 for s in statuses if s == "done")
+        out = next(o for o in rep.outcomes if o.user == user.name)
+        assert out.n_done == done
+        if done < user.n_jobs:                   # a miss must be reported
+            assert not out.met_deadline or out.stall_reason is not None
+        assert engine.ledger.committed == pytest.approx(0.0)
+    market.bank.reconcile({u.name: e.ledger
+                           for u, e in zip(market.users, market.engines)})
+
+
+def test_churn_market_run_is_seed_deterministic():
+    """Satellite: the churn path (like the failure path) must be
+    byte-identical across same-seed runs."""
+    kw = dict(n_machines=10, seed=7, n_jobs=6, gis_ttl=600.0,
+              churn_mean_uptime_h=3.0, churn_mean_downtime_h=1.5)
+    r1 = standard_market(6, **kw).run(churn=True, failures=True)
+    r2 = standard_market(6, **kw).run(churn=True, failures=True)
+    assert r1.stable_repr() == r2.stable_repr()
+    r3 = standard_market(6, **dict(kw, seed=8)).run(churn=True,
+                                                    failures=True)
+    assert r1.stable_repr() != r3.stable_repr()
+
+
+def test_rejoined_site_never_reissues_retired_reservation_ids():
+    """A site that rejoins gets a FRESH trade server, but ids its old
+    server issued live on in voided contracts and audit trails — the
+    new book must never reuse them (a later cancel would destroy a
+    rival's reservation)."""
+    specs = [_spec("x0", "X"), _spec("y0", "Y")]
+    market = Marketplace(specs=specs, seed=0)
+    issued = set()
+    for _ in range(3):
+        r = market.trade.reserve("x0", "u", 0.0, 60.0, 0.0)
+        issued.add(r.reservation_id)
+        market.trade.cancel(r.reservation_id)
+    assert market._site_leaves("X", rejoin_at=HOUR)
+    market._site_joins("X")
+    fresh = market.trade.reserve("x0", "v", 0.0, HOUR, 0.0)
+    assert fresh.reservation_id not in issued
+    # the retired ids resolve to nothing: cancelling one is a no-op
+    held = market.trade.reserved_price("x0", "v", 30 * 60.0)
+    for rid in issued:
+        market.trade.cancel(rid)
+    assert market.trade.reserved_price("x0", "v", 30 * 60.0) == held
+
+
+def test_withdraw_after_void_leaves_rival_reservations_alone():
+    """The depart→void→rejoin→withdraw chain: a broker shutting down
+    must not cancel reservations behind contracts a departing site
+    already voided (their ids may since belong to someone else)."""
+    specs = [_spec("x0", "X"), _spec("y0", "Y")]
+    market = Marketplace(specs=specs, seed=0, churn_rebate=0.0)
+    eng = market.add_user(MarketUser(name="u", deadline=10 * HOUR,
+                                     budget=1e4, strategy="auction",
+                                     n_jobs=2))
+    offer = [o for o in market.auction_house.call_for_tenders(0.0, "u")
+             if o.site == "X"][0]
+    c = market.auction_house.accept(offer, "u", t=0.0)
+    eng.auction._live.append(c)              # broker tracks its contract
+    assert market._site_leaves("X", rejoin_at=HOUR)
+    market._site_joins("X")
+    rival = market.trade.reserve("x0", "rival", 0.0, offer.end, 0.0)
+    eng.auction.withdraw(t=0.0)              # u's experiment ends
+    assert market.trade.reserved_price(
+        "x0", "rival", 30 * 60.0) is not None  # rival's lock survives
+
+
+def test_tender_accept_after_site_departed_is_refused_not_crash():
+    from repro.core import AdmissionError
+    specs = [_spec("x0", "X"), _spec("y0", "Y")]
+    market = Marketplace(specs=specs, seed=0)
+    market.add_user(MarketUser(name="u", deadline=10 * HOUR, budget=1e4,
+                               n_jobs=2))
+    offer = [o for o in market.auction_house.call_for_tenders(0.0, "u")
+             if o.site == "X"][0]
+    assert market._site_leaves("X", rejoin_at=HOUR)
+    with pytest.raises(AdmissionError):      # inside validity, site gone
+        market.auction_house.accept(offer, "u", t=60.0)
+
+
+def test_trade_federation_membership_tracks_gis():
+    market = Marketplace(specs=[_spec("x0", "X"), _spec("y0", "Y")],
+                         seed=0)
+    assert set(market.gis.trade_servers()) == {"X", "Y"}
+    assert market._site_leaves("X", rejoin_at=HOUR)
+    assert set(market.gis.trade_servers()) == {"Y"}
+    assert market.trade.sites() == ["Y"]
+    assert market.trade.departed_sites() == ["X"]
+    # the last site standing may never leave
+    assert not market._site_leaves("Y", rejoin_at=HOUR)
+    market._site_joins("X")
+    assert set(market.gis.trade_servers()) == {"X", "Y"}
+    assert market.trade.sites() == ["X", "Y"]

@@ -125,6 +125,39 @@ def test_whole_market_run_is_seed_deterministic():
     assert r1.stable_repr() != r3.stable_repr()
 
 
+def test_failure_market_run_is_seed_deterministic():
+    """The failure path must be as reproducible as the failure-free one:
+    same seed, same crashes, same requeues, byte-identical outcomes."""
+    r1 = standard_market(6, n_machines=8, seed=11, n_jobs=8).run(
+        failures=True)
+    r2 = standard_market(6, n_machines=8, seed=11, n_jobs=8).run(
+        failures=True)
+    assert r1.stable_repr() == r2.stable_repr()
+    r3 = standard_market(6, n_machines=8, seed=12, n_jobs=8).run(
+        failures=True)
+    assert r1.stable_repr() != r3.stable_repr()
+
+
+def test_failed_job_requeues_without_burning_attempt():
+    """A resource dying under a running job is the machine's fault, not
+    the job's: with max_attempts=1 every fault-requeue would be fatal if
+    it cost an attempt, yet a flaky grid still completes everything."""
+    specs = [ResourceSpec(name=f"m{i}", site="x", chips=1, slots=1,
+                          base_price=1.0, peak_multiplier=1.0,
+                          mtbf_hours=1.0, mttr_hours=0.25)
+             for i in range(4)]
+    market = Marketplace(specs=specs, seed=3, noise_sigma=0.0)
+    market.add_user(MarketUser(name="u", deadline=40 * HOUR, budget=1e6,
+                               strategy="time", n_jobs=12,
+                               est_seconds=1800.0),
+                    sched_cfg=SchedulerConfig(max_attempts=1))
+    rep = market.run(failures=True)
+    out = rep.outcomes[0]
+    assert out.resource_losses > 0, rep.summary()   # faults did happen
+    assert out.n_done == out.n_jobs, rep.summary()  # none became fatal
+    assert market.engines[0].ledger.committed == pytest.approx(0.0)
+
+
 def test_sixteen_users_share_one_clock_and_finish():
     market = standard_market(16, n_machines=12, seed=2, n_jobs=10)
     rep = market.run()
