@@ -1,0 +1,230 @@
+"""Broker hot-path scale sweep: jobs × users × market variant.
+
+The PR-4 refactor makes the scheduling tick O(active work) instead of
+O(experiment size): status-bucketed job indices, per-resource in-flight
+counters, per-tick quote memoization and cancellable simulator timers.
+This bench measures what that buys — the same seeded marketplace run at
+jobs/user ∈ {100, 1k, 10k} × brokers ∈ {1, 4, 16}, for the posted-price
+market, the auction (negotiated) market, and a failing+churning grid —
+and records simulator events/sec as the throughput metric.
+
+``PRE_REFACTOR`` holds the same points measured on the pre-index code
+(commit fe4417f..d675d64 lineage) on the same machine; the headline
+ratio is the 10k-jobs × 16-users posted point.  Results land in
+``BENCH_scale.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_scale            # full
+    PYTHONPATH=src python -m benchmarks.bench_scale --smoke    # CI
+
+Smoke mode runs the 100-job points only, re-checks same-seed
+determinism, rewrites the committed JSON's ``smoke`` section, and FAILS
+if measured events/sec regressed more than ``GATE`` (30%) against the
+committed baseline (override the gate with SCALE_BENCH_NO_GATE=1 when
+the hardware legitimately changed).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import (SchedulerConfig, mixed_auction_market,
+                        standard_market)
+
+HOUR = 3600.0
+
+SEED = 11
+N_MACHINES = 32
+JOBS = (100, 1_000, 10_000)
+USERS = (1, 4, 16)
+VARIANTS = ("posted", "auction", "churn")
+SMOKE_JOBS = (100,)
+GATE = 0.30                       # max tolerated events/sec regression
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_scale.json")
+
+# Same-machine measurements of the identical scenarios on the
+# pre-refactor broker (full job-table rescans per tick, attempts-log
+# walks per dispatch, uncached quotes).  events/sec per point.
+PRE_REFACTOR = {
+    "posted_j100_u1": 3654.3,
+    "posted_j100_u4": 2742.9,
+    "posted_j100_u16": 2922.3,
+    "posted_j1000_u4": 768.5,
+    "posted_j1000_u16": 917.6,
+    "posted_j10000_u1": 231.7,
+    "posted_j10000_u4": 140.3,
+    "posted_j10000_u16": 87.4,     # the acceptance point (wall 795.8s)
+    "auction_j10000_u16": 75.6,
+    "churn_j10000_u16": 130.1,
+}
+
+
+def point_key(variant: str, jobs: int, users: int) -> str:
+    return f"{variant}_j{jobs}_u{users}"
+
+
+def run_point(jobs: int, users: int, variant: str, seed: int = SEED) -> dict:
+    builder = mixed_auction_market if variant == "auction" \
+        else standard_market
+    market = builder(
+        users, n_machines=N_MACHINES, seed=seed, n_jobs=jobs,
+        est_seconds=600.0, deadline_h=24.0, budget=100.0 * jobs,
+        demand_elasticity=0.5,
+        sched_cfg=SchedulerConfig(
+            timeline_stride=16 if jobs >= 1_000 else 1))
+    run_kw = dict(churn=True, failures=True) if variant == "churn" else {}
+    t0 = time.time()
+    rep = market.run(**run_kw)
+    wall = time.time() - t0
+    ev = market.sim.events
+    return {
+        "variant": variant, "jobs_per_user": jobs, "users": users,
+        "wall_s": round(wall, 3), "events": ev,
+        "events_per_sec": round(ev / max(wall, 1e-9), 1),
+        "jobs_done": rep.total_done, "jobs_total": rep.total_jobs,
+        "stable_repr_len": len(rep.stable_repr()),
+    }
+
+
+def sweep(csv: bool, jobs_axis, variants, best_of: int = 1) -> list:
+    rows = []
+    if not csv:
+        print("variant  jobs/u  users    done/total      events   "
+              "ev/s      wall_s")
+    for variant in variants:
+        for jobs in jobs_axis:
+            for users in USERS:
+                r = max((run_point(jobs, users, variant)
+                         for _ in range(best_of)),
+                        key=lambda r: r["events_per_sec"])
+                rows.append(r)
+                if not csv:
+                    print(f"{r['variant']:8s} {r['jobs_per_user']:6d} "
+                          f"{r['users']:5d} {r['jobs_done']:8d}/"
+                          f"{r['jobs_total']:<8d} {r['events']:9d} "
+                          f"{r['events_per_sec']:9.1f} {r['wall_s']:8.2f}")
+    return rows
+
+
+def _fresh_market():
+    return standard_market(4, n_machines=N_MACHINES, seed=SEED, n_jobs=100,
+                           est_seconds=600.0, deadline_h=24.0,
+                           budget=100.0 * 100, demand_elasticity=0.5,
+                           sched_cfg=SchedulerConfig())
+
+
+def determinism_check(csv: bool):
+    t0 = time.time()
+    rep1, rep2 = _fresh_market().run(), _fresh_market().run()
+    wall = time.time() - t0
+    identical = rep1.stable_repr() == rep2.stable_repr()
+    if not csv:
+        print(f"same-seed scale-market re-run byte-identical: {identical}")
+    if not identical:
+        raise AssertionError("scale market run is not seed-deterministic")
+    return [("scale_determinism", wall * 1e6, int(identical))]
+
+
+def _gate_against_committed(rows: list, csv: bool) -> None:
+    """CI regression gate: measured events/sec vs the committed JSON.
+
+    Gates on the AGGREGATE events/sec over the matched smoke points
+    (sub-2s single points jitter well past 30% on a shared runner; the
+    suite total is the stable signal).  Per-point ratios are printed
+    for diagnosis."""
+    if os.environ.get("SCALE_BENCH_NO_GATE"):
+        return
+    if not os.path.exists(OUT_PATH):
+        return
+    with open(OUT_PATH) as f:
+        committed = json.load(f)
+    # like-for-like: gate against the committed smoke section (same
+    # best-of-N protocol); fall back to the full-sweep rows before the
+    # first smoke baseline ever lands
+    base_rows = committed.get("smoke") or committed.get("results", [])
+    baseline = {r["variant"] + f"_j{r['jobs_per_user']}_u{r['users']}": r
+                for r in base_rows}
+    got_ev = got_wall = base_ev = base_wall = 0.0
+    for r in rows:
+        key = point_key(r["variant"], r["jobs_per_user"], r["users"])
+        base = baseline.get(key)
+        if base is None or not base.get("events_per_sec"):
+            continue
+        got_ev += r["events"]
+        got_wall += r["wall_s"]
+        base_ev += base["events"]
+        base_wall += base["wall_s"]
+        if not csv:
+            print(f"gate {key}: {r['events_per_sec']:.0f} ev/s vs "
+                  f"committed {base['events_per_sec']:.0f} "
+                  f"({r['events_per_sec'] / base['events_per_sec']:.2f}x)")
+    if base_wall <= 0 or got_wall <= 0:
+        return
+    ratio = (got_ev / got_wall) / (base_ev / base_wall)
+    if not csv:
+        print(f"gate aggregate: {got_ev / got_wall:.0f} ev/s vs committed "
+              f"{base_ev / base_wall:.0f} ({ratio:.2f}x)")
+    if ratio < 1.0 - GATE:
+        raise AssertionError(
+            f"aggregate events/sec regressed >{GATE:.0%} vs committed "
+            f"baseline ({ratio:.2f}x) — if the hardware changed, re-run "
+            f"the full bench and commit a fresh BENCH_scale.json "
+            f"(or set SCALE_BENCH_NO_GATE=1)")
+
+
+def main(csv: bool = False, smoke: bool = False):
+    jobs_axis = SMOKE_JOBS if smoke else JOBS
+    variants = VARIANTS
+    rows = sweep(csv, jobs_axis, variants, best_of=2 if smoke else 1)
+
+    if smoke:
+        _gate_against_committed(rows, csv)
+        # refresh the smoke section only — the committed full sweep and
+        # baseline stay as measured on the reference machine
+        doc = {}
+        if os.path.exists(OUT_PATH):
+            with open(OUT_PATH) as f:
+                doc = json.load(f)
+        doc["smoke"] = rows
+        with open(OUT_PATH, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    else:
+        key = point_key("posted", 10_000, 16)
+        post = next((r["events_per_sec"] for r in rows
+                     if point_key(r["variant"], r["jobs_per_user"],
+                                  r["users"]) == key), None)
+        pre = PRE_REFACTOR.get(key)
+        speedup = (round(post / pre, 2)
+                   if post and pre else None)
+        doc = {
+            "bench": "scale",
+            "seed": SEED,
+            "n_machines": N_MACHINES,
+            "est_seconds": 600.0,
+            "deadline_h": 24.0,
+            "jobs_axis": list(JOBS),
+            "users_axis": list(USERS),
+            "variants": list(VARIANTS),
+            "pre_refactor_events_per_sec": PRE_REFACTOR,
+            "results": rows,
+            "speedup_posted_j10000_u16": speedup,
+        }
+        with open(OUT_PATH, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        if not csv and speedup is not None:
+            print(f"\n10k-job x 16-user posted market: {speedup}x "
+                  f"events/sec over the pre-refactor broker "
+                  f"({pre:.0f} -> {post:.0f})")
+    if not csv:
+        print(f"wrote {OUT_PATH}")
+
+    results = [(point_key(r["variant"], r["jobs_per_user"], r["users"]),
+                r["wall_s"] * 1e6, r["events_per_sec"]) for r in rows]
+    return results + determinism_check(csv)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

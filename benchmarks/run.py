@@ -16,7 +16,7 @@ def main() -> None:
     failures = []
     from benchmarks import (bench_auctions, bench_figure3, bench_gis,
                             bench_kernels, bench_marketplace,
-                            bench_roofline, bench_scheduler)
+                            bench_roofline, bench_scale, bench_scheduler)
     mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
             ("scheduler tables (strategies / scale / faults)",
              bench_scheduler),
@@ -25,6 +25,8 @@ def main() -> None:
             ("auctions (negotiated contracts vs posted prices)",
              bench_auctions),
             ("GIS staleness (view TTL x site churn)", bench_gis),
+            ("scale (indexed hot path: jobs x users x variant)",
+             bench_scale),
             ("kernels (pallas vs oracle)", bench_kernels),
             ("roofline (dry-run 3-term table)", bench_roofline)]
     # moe crossover needs 512 placeholder devices; include only when the

@@ -249,11 +249,12 @@ class AuctionHouse:
                  on_contract: Callable[[Contract], None]) -> None:
         self._subscribers[user] = on_contract
 
-    def start(self, sim: Simulator) -> None:
-        """Begin periodic clearing rounds on the simulator clock."""
+    def start(self, sim: Simulator):
+        """Begin periodic clearing rounds on the simulator clock.
+        Returns the recurring-timer handle (cancel it to end trading)."""
         self._sim = sim
-        sim.every(self.round_interval, self._run_round,
-                  start_delay=self.round_interval)
+        return sim.every(self.round_interval, self._run_round,
+                         start_delay=self.round_interval)
 
     def _run_round(self) -> None:
         assert self._sim is not None

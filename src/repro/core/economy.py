@@ -123,6 +123,17 @@ class TradeServer:
         self.reservations: List[Reservation] = []
         self._next_rid = 1
         self._rid_step = 1       # federation strides this for unique ids
+        # monotone stamp bumped on every reservation-book mutation:
+        # broker-side quote caches key on it, so an effective price is
+        # recomputed exactly when a reservation could have changed it
+        self.book_version = 0
+
+    def price_version(self, resource: str) -> int:
+        """Stamp of everything (besides time and queue utilization) a
+        quote for ``resource`` depends on.  Equal stamps at equal t and
+        equal ``ResourceStatus.version`` ⇒ ``effective_price`` is
+        unchanged — the invariant the per-tick broker cache relies on."""
+        return self.book_version
 
     def _prune(self, t: float) -> None:
         """Drop expired reservations so long market runs never degrade
@@ -131,6 +142,7 @@ class TradeServer:
         block admission for windows at/after ``t``."""
         if any(r.end <= t for r in self.reservations):
             self.reservations = [r for r in self.reservations if r.end > t]
+            self.book_version += 1
 
     def resources(self) -> List[str]:
         """Names this server trades (its domain's slice of the grid)."""
@@ -225,13 +237,17 @@ class TradeServer:
                         reservation_id=self._next_rid)
         self._next_rid += self._rid_step
         self.reservations.append(r)
+        self.book_version += 1
         return r
 
     def cancel(self, reservation_id: int) -> bool:
         n = len(self.reservations)
         self.reservations = [r for r in self.reservations
                              if r.reservation_id != reservation_id]
-        return len(self.reservations) < n
+        if len(self.reservations) < n:
+            self.book_version += 1
+            return True
+        return False
 
     def reserved_price(self, resource: str, user: str, t: float
                        ) -> Optional[float]:
@@ -373,6 +389,9 @@ class TradeFederation:
         return self._departed[site]
 
     # -- single-server interface (delegated) ---------------------------
+    def price_version(self, resource: str) -> int:
+        return self.server_for(resource).book_version
+
     def utilization(self, resource: str) -> float:
         return self.server_for(resource).utilization(resource)
 

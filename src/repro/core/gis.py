@@ -192,16 +192,18 @@ class GridInformationService:
         return dict(sorted(self._trade_servers.items()))
 
     # -- heartbeats ----------------------------------------------------
-    def start(self, sim: Simulator, until: float = math.inf) -> None:
+    def start(self, sim: Simulator, until: float = math.inf):
         """Pump heartbeats on the virtual clock: every interval, each
         registered resource that is genuinely up refreshes its record
         (liveness + advertised price).  Down or departed resources go
-        silent — the only way the GIS ever finds out."""
+        silent — the only way the GIS ever finds out.  Returns the
+        recurring-timer handle so a driver can cancel the pump once
+        nobody is left listening."""
         def _pump() -> None:
             # NB: sim.every stops on a truthy return — swallow the count
             self.pump_heartbeats(sim.now)
 
-        sim.every(self.heartbeat_interval, _pump, until=until)
+        return sim.every(self.heartbeat_interval, _pump, until=until)
 
     def pump_heartbeats(self, t: float) -> int:
         beat = 0
@@ -303,6 +305,10 @@ class GISSnapshot:
     until the next refresh, however wrong the world has become."""
     taken_at: float
     entries: Dict[str, GISEntry]
+    # monotone per-client refresh counter: consumers that diff snapshots
+    # (membership discovery) can skip the work while this is unchanged —
+    # same generation ⇒ identical membership and advertised attributes
+    generation: int = 0
 
     def alive(self) -> List[GISEntry]:
         return [e for _, e in sorted(self.entries.items())
@@ -337,7 +343,8 @@ class GISClient:
                 or t - self._snapshot.taken_at > self.ttl + 1e-9):
             entries = {e.name: e for e in self.gis.query(
                 t, user=self.user, include_suspected=True)}
-            self._snapshot = GISSnapshot(taken_at=t, entries=entries)
+            self._snapshot = GISSnapshot(taken_at=t, entries=entries,
+                                         generation=self.refreshes + 1)
             # a fresh snapshot supersedes dispatch-time suspicions: the
             # GIS's (possibly still wrong) answer gets another chance
             self._local_suspects.clear()

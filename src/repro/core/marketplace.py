@@ -234,6 +234,8 @@ class Marketplace:
         self.users: List[MarketUser] = []
         self.engines: List[NimrodG] = []
         self.price_trace: List[Tuple[float, float]] = []
+        self._gis_handle = None
+        self._auction_handle = None
 
     # ------------------------------------------------------------------
     def add_user(self, user: MarketUser,
@@ -345,6 +347,11 @@ class Marketplace:
         t = self.sim.now
         self.price_trace.append((t, self.mean_quote(t)))
         if all(e.finished for e in self.engines):
+            # nobody is trading anymore: the heartbeat pump and clearing
+            # rounds leave the heap with the brokers, then the clock stops
+            for handle in (self._gis_handle, self._auction_handle):
+                if handle is not None:
+                    handle.cancel()
             self.sim.stop()
             return
         if t + sample_interval <= horizon:
@@ -358,7 +365,7 @@ class Marketplace:
             raise ValueError("no users in the market — add_user() first")
         if horizon is None:
             horizon = max(u.deadline for u in self.users) * 1.5 + 8 * HOUR
-        self.gis.start(self.sim, until=horizon)
+        self._gis_handle = self.gis.start(self.sim, until=horizon)
         if failures:
             fp = FailureProcess(self.sim, self.directory, seed=self.seed)
             for name in self.directory.all_names():
@@ -372,7 +379,7 @@ class Marketplace:
             for site in self.directory.sites():
                 self.churn.install(site)
         if any(e.auction is not None for e in self.engines):
-            self.auction_house.start(self.sim)
+            self._auction_handle = self.auction_house.start(self.sim)
         for engine in self.engines:
             self.sim.after(0.0, engine.tick)
         self.sim.after(0.0, lambda: self._watch(sample_interval, horizon))
@@ -430,12 +437,14 @@ def standard_market(n_users: int, *, n_machines: int = 20, seed: int = 0,
                                                  "conservative"),
                     demand_elasticity: float = 0.5,
                     dispatch_latency: float = 1.0,
+                    sched_cfg: Optional[SchedulerConfig] = None,
                     **market_kw) -> Marketplace:
     """Canonical N-user market: strategies round-robin over the mix,
     deadlines/budgets slightly staggered so brokers are heterogeneous but
     everything stays deterministic in (n_users, seed).  Extra keywords
     (``gis_ttl=``, ``churn_mean_uptime_h=``, ...) pass through to
-    ``Marketplace``."""
+    ``Marketplace``; ``sched_cfg`` (e.g. ``timeline_stride`` for big
+    sweeps) is applied to every broker."""
     market = Marketplace(n_machines=n_machines, seed=seed,
                          demand_elasticity=demand_elasticity,
                          dispatch_latency=dispatch_latency,
@@ -447,7 +456,7 @@ def standard_market(n_users: int, *, n_machines: int = 20, seed: int = 0,
             budget=budget * (1.0 + 0.25 * (i % 4)),
             strategy=strategies[i % len(strategies)],
             n_jobs=n_jobs,
-            est_seconds=est_seconds))
+            est_seconds=est_seconds), sched_cfg=sched_cfg)
     return market
 
 

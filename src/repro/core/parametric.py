@@ -11,6 +11,7 @@ thread-pool grid executing genuine payloads (``run_local``).
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import math
@@ -120,6 +121,37 @@ class NimrodG:
         self._finished = False
         self._dup_counter = 0
 
+        # ---- incremental job-state indices (the O(active-work) tick) --
+        # Every index is a pure function of primary-job (status, attempt)
+        # and is re-derived through _reindex() after each transition; the
+        # scans they replace (_pending_jobs/_remaining/stall detection /
+        # straggler walk) were O(experiment size) per tick.
+        self._job_seq: Dict[str, int] = {
+            jid: i for i, jid in enumerate(self.jobs)}
+        self._pending_ids: Set[str] = set()
+        self._pending_sorted: List[Tuple[int, str]] = []  # (seq, jid)
+        self._done_ids: Set[str] = set()
+        self._active_ids: Set[str] = set()    # primaries STAGED|RUNNING
+        self._running_ids: Set[str] = set()   # primaries RUNNING
+        # attempt objects dispatched and possibly still holding (or about
+        # to hold) a slot — replaces the full attempts-log walks in
+        # _my_running()/_dispatch_price(); pruned lazily once an attempt
+        # can no longer hold a slot
+        self._inflight: Dict[int, Job] = {}
+        self._dispatch_order: Dict[str, int] = {}  # primary -> 1st-dispatch seq
+        # per-(resource) quote memo: value is reused while (t, queue
+        # version, reservation-book version) are all unchanged
+        self._price_cache: Dict[str, Tuple[Tuple, float]] = {}
+        self._spot_cache: Dict[str, Tuple[Tuple, float]] = {}
+        self._locked_cache: Dict[str, Tuple[Tuple, List[float]]] = {}
+        self._probe = (Job(spec=next(iter(self.jobs.values())).spec)
+                       if self.jobs else None)
+        self._tick_handle = None
+        self._tick_count = 0
+        self._seen_gis_generation = -1
+        for job in self.jobs.values():
+            self._reindex(job)
+
         self._log("EXP_CREATED", n_jobs=len(self.jobs),
                   deadline=requirements.deadline, budget=requirements.budget,
                   strategy=requirements.strategy, user=requirements.user)
@@ -191,6 +223,7 @@ class NimrodG:
                 j = self.jobs[jid]
                 j.status = JobStatus.DONE
                 j.actual_cost = cost
+                self._reindex(j)
                 self.report.n_done += 1
         self.ledger.settled += st["spent"]
         self.report.total_cost = st["spent"]
@@ -203,18 +236,77 @@ class NimrodG:
     def _now(self) -> float:
         return self.sim.now if self.sim is not None else _time.time()
 
+    def _reindex(self, job: Job) -> None:
+        """Re-derive a primary job's index-bucket membership from its
+        current (status, attempt).  MUST be called after every mutation
+        of either field — the invariant every O(1) read below relies on.
+        Idempotent, so callers never reason about the previous state.
+        Duplicates are never indexed (they live only in ``attempts``)."""
+        jid = job.job_id
+        seq = self._job_seq.get(jid)
+        if seq is None:
+            return
+        pending = (job.status in (JobStatus.PENDING, JobStatus.FAILED)
+                   and job.attempt < self.cfg.max_attempts)
+        if pending and jid not in self._pending_ids:
+            self._pending_ids.add(jid)
+            bisect.insort(self._pending_sorted, (seq, jid))
+        elif not pending and jid in self._pending_ids:
+            self._pending_ids.discard(jid)
+            i = bisect.bisect_left(self._pending_sorted, (seq, jid))
+            if (i < len(self._pending_sorted)
+                    and self._pending_sorted[i] == (seq, jid)):
+                del self._pending_sorted[i]
+        if job.status is JobStatus.DONE:
+            self._done_ids.add(jid)
+        if job.status in (JobStatus.STAGED, JobStatus.RUNNING):
+            self._active_ids.add(jid)
+        else:
+            self._active_ids.discard(jid)
+        if job.status is JobStatus.RUNNING:
+            self._running_ids.add(jid)
+        else:
+            self._running_ids.discard(jid)
+
     def _pending_jobs(self) -> List[Job]:
-        return [j for j in self.jobs.values()
-                if j.status in (JobStatus.PENDING, JobStatus.FAILED)
-                and j.attempt < self.cfg.max_attempts]
+        return [self.jobs[jid] for _, jid in self._pending_sorted]
 
     def _remaining(self) -> int:
-        return sum(1 for j in self.jobs.values()
-                   if j.status != JobStatus.DONE)
+        return len(self.jobs) - len(self._done_ids)
+
+    def _quote_memo(self, cache: Dict[str, Tuple[Tuple, Any]],
+                    resource: str, compute: Callable[[float], Any]) -> Any:
+        """Per-resource quote memo.  A quote is a pure function of
+        (t, queue utilization, reservation book), so the cached value is
+        reused until any of the three stamps moves; ``compute(t)`` may
+        itself prune the book (bumping its stamp), so the entry is keyed
+        on the post-call state."""
+        cached = cache.get(resource)
+        key = (self._now(), self.directory.status(resource).version,
+               self.trade.price_version(resource))
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        value = compute(key[0])
+        key = (key[0], self.directory.status(resource).version,
+               self.trade.price_version(resource))
+        cache[resource] = (key, value)
+        return value
 
     def _price(self, resource: str) -> float:
-        return self.trade.effective_price(resource, self.req.user,
-                                          self._now())
+        return self._quote_memo(
+            self._price_cache, resource,
+            lambda t: self.trade.effective_price(resource, self.req.user, t))
+
+    def _spot(self, resource: str) -> float:
+        return self._quote_memo(
+            self._spot_cache, resource,
+            lambda t: self.trade.quote(resource, t, self.req.user))
+
+    def _locked_prices(self, resource: str) -> List[float]:
+        return self._quote_memo(
+            self._locked_cache, resource,
+            lambda t: self.trade.reserved_price_list(resource,
+                                                     self.req.user, t))
 
     def _dispatch_price(self, resource: str) -> float:
         """Price the *next* dispatch to ``resource`` pays.  Each of the
@@ -223,28 +315,21 @@ class NimrodG:
         different prices); dispatches beyond the reserved draw-down pay
         the live spot quote — one cheap contract must not discount the
         whole queue."""
-        t = self._now()
-        locked = self.trade.reserved_price_list(resource, self.req.user, t)
+        locked = self._locked_prices(resource)
         if not locked:
-            return self.trade.quote(resource, t, self.req.user)
+            return self._spot(resource)
         # each in-flight contract-priced job consumes one reservation
         inflight = collections.Counter()
-        seen: set = set()
-        for attempts in self.attempts.values():
-            for j in attempts:
-                if id(j) in seen:
-                    continue
-                seen.add(id(j))
-                if (j.resource == resource
-                        and j.status in (JobStatus.STAGED,
-                                         JobStatus.RUNNING)):
-                    inflight[j.quoted_price] += 1
+        for j in self._inflight.values():
+            if (j.resource == resource
+                    and j.status in (JobStatus.STAGED, JobStatus.RUNNING)):
+                inflight[j.quoted_price] += 1
         for price in locked:
             if inflight[price] > 0:
                 inflight[price] -= 1
                 continue
             return price
-        return self.trade.quote(resource, t, self.req.user)
+        return self._spot(resource)
 
     def _my_running(self) -> Dict[str, int]:
         """Slots this experiment currently occupies, per resource.
@@ -252,21 +337,26 @@ class NimrodG:
         Counts ``slot_held`` (set by the executor at acquisition), not
         job status: a requeued job appears multiple times in the attempts
         log, and a STAGED dispatch still in the WAN hop holds nothing —
-        either would misstate rival occupancy."""
+        either would misstate rival occupancy.  Walks the in-flight
+        index, not the full attempts log; attempts that can no longer
+        (re)acquire a slot are dropped on the way through."""
         mine: Dict[str, int] = {}
-        seen: set = set()
-        for attempts in self.attempts.values():
-            for j in attempts:
-                if id(j) in seen:
-                    continue
-                seen.add(id(j))
-                if j.slot_held and j.resource:
+        dead: List[int] = []
+        for key, j in self._inflight.items():
+            if j.slot_held:
+                if j.resource:
                     mine[j.resource] = mine.get(j.resource, 0) + 1
+            elif j.status not in (JobStatus.STAGED, JobStatus.RUNNING):
+                # terminal and slotless: a KILLED duplicate whose cancel
+                # token fired, or a settled attempt — can never hold (or
+                # price) a slot again
+                dead.append(key)
+        for key in dead:
+            del self._inflight[key]
         return mine
 
     def _new_view(self, spec) -> ResourceView:
-        probe = Job(spec=next(iter(self.jobs.values())).spec)
-        est = self.dispatcher.estimate(probe, spec.name)
+        est = self.dispatcher.estimate(self._probe, spec.name)
         return ResourceView(spec=spec, est_job_seconds=max(est, 1e-6))
 
     def _refresh_views(self) -> None:
@@ -274,13 +364,17 @@ class NimrodG:
         if self.gis_client is not None:
             # discovery phase through the information service: the
             # snapshot refreshes only when its TTL lapses, so membership
-            # and liveness here can lag the world by ttl + heartbeats
+            # and liveness here can lag the world by ttl + heartbeats —
+            # and an unchanged generation cannot add members, so the
+            # membership diff below runs once per refresh, not per tick
             snap = self.gis_client.view(self._now())
-            for name in sorted(snap.entries):
-                entry = snap.entries[name]
-                if (not entry.suspected and name not in self.views
-                        and name in self.directory):
-                    self.views[name] = self._new_view(entry.spec)
+            if snap.generation != self._seen_gis_generation:
+                self._seen_gis_generation = snap.generation
+                for name in sorted(snap.entries):
+                    entry = snap.entries[name]
+                    if (not entry.suspected and name not in self.views
+                            and name in self.directory):
+                        self.views[name] = self._new_view(entry.spec)
         else:
             for spec in self.directory.discover(self.req.user):
                 if spec.name not in self.views:
@@ -289,7 +383,10 @@ class NimrodG:
         for name, v in self.views.items():
             if snap is not None:
                 # believed liveness: the snapshot's word plus dispatch
-                # burns since — NOT the directory's ground truth
+                # burns since — NOT the directory's ground truth.  This
+                # reassertion must stay per-tick: completion/failure
+                # handlers flip ResourceView.suspected between ticks and
+                # the broker's belief always wins the argument back
                 v.suspected = self.gis_client.is_suspected(name)
                 v.last_seen = snap.taken_at
             else:
@@ -347,14 +444,17 @@ class NimrodG:
 
         self._fill_slots()
         self._check_stragglers()
-        self.report.timeline.append(
-            (t, len(self.allocated), self.report.n_done, self.ledger.settled))
+        self._tick_count += 1
+        if (self.cfg.timeline_stride <= 1
+                or (self._tick_count - 1) % self.cfg.timeline_stride == 0):
+            self.report.timeline.append(
+                (t, len(self.allocated), self.report.n_done,
+                 self.ledger.settled))
 
-        # stall detection
-        running = any(j.status in (JobStatus.STAGED, JobStatus.RUNNING)
-                      for j in self.jobs.values())
+        # stall detection (all O(1) index reads)
+        running = bool(self._active_ids)
         if not running and not self._finished:
-            pending = self._pending_jobs()
+            pending = bool(self._pending_ids)
             if not pending and self._remaining() > 0:
                 self._finish(stall="max_attempts_exhausted")
                 return
@@ -371,7 +471,7 @@ class NimrodG:
                     return
 
         if self.sim is not None and not self._finished:
-            self.sim.after(self.cfg.interval, self.tick)
+            self._tick_handle = self.sim.after(self.cfg.interval, self.tick)
 
     # ------------------------------------------------------------------
     # dispatch machinery
@@ -391,9 +491,7 @@ class NimrodG:
         return max(0, spec.slots - mine.get(r, 0))
 
     def _fill_slots(self) -> None:
-        t = self._now()
-        pend = self._pending_jobs()
-        if not pend:
+        if not self._pending_ids:
             return
         mine = self._my_running()
         slots: List[str] = []
@@ -402,6 +500,10 @@ class NimrodG:
                             self.views[n], self._price(n)), n)):
             slots.extend([r] * self._believed_free_slots(r, mine))
         remaining = self._remaining()
+        # snapshot only as many pending jobs as there are slots to fill
+        # (dispatching reindexes _pending_sorted mid-loop; zip pairs the
+        # same (job, slot) tuples the full pending list would have)
+        pend = [self.jobs[jid] for _, jid in self._pending_sorted[:len(slots)]]
         for job, resource in zip(pend, slots):
             est = self.views[resource].est_job_seconds
             price = self._dispatch_price(resource)
@@ -422,6 +524,9 @@ class NimrodG:
         job.submitted_at = self._now()
         primary = job.duplicate_of or job.job_id
         self.attempts[primary].append(job)
+        if primary not in self._dispatch_order:
+            self._dispatch_order[primary] = len(self._dispatch_order)
+        self._inflight[id(job)] = job
         self._log("DISPATCH", job_id=job.job_id, resource=resource,
                   attempt=job.attempt + 1, committed=committed)
         self.report.resources_used.add(resource)
@@ -430,6 +535,10 @@ class NimrodG:
                                on_failed=self._on_failed,
                                on_blocked=self._on_blocked)
         self.dispatcher.dispatch(job, resource, cb)
+        # dispatch() mutated (status, attempt) — and, on a zero-latency
+        # grid, may already have run failure handlers re-entrantly, so
+        # derive the index from wherever the job actually landed
+        self._reindex(job)
 
     # -- callbacks (invoked via the event queue drain) --
     def _on_started(self, job: Job) -> None:
@@ -467,6 +576,7 @@ class NimrodG:
     def _handle_started(self, job: Job) -> None:
         job.status = JobStatus.RUNNING
         job.started_at = self._now()
+        self._reindex(job)
         self._log("START", job_id=job.job_id, resource=job.resource)
 
     def _handle_done(self, job: Job, exec_seconds: float) -> None:
@@ -504,6 +614,7 @@ class NimrodG:
         primary.finished_at = t
         primary.actual_cost += actual
         primary.result = job.result
+        self._reindex(primary)
         self.report.n_done += 1
         self.report.total_cost = self.ledger.settled
         # kill losing duplicates
@@ -554,6 +665,7 @@ class NimrodG:
             return
         if job.duplicate_of is None:
             job.status = JobStatus.PENDING
+            self._reindex(job)
             self.report.requeues += 1
         else:
             job.status = JobStatus.KILLED   # duplicate: primary still runs
@@ -590,6 +702,13 @@ class NimrodG:
                 job.status = JobStatus.FAILED
                 if job.attempt >= self.cfg.max_attempts:
                     self.report.n_failed_final += 1
+            self._reindex(job)
+        # a failed DUPLICATE keeps its STAGED/RUNNING status (and its
+        # _inflight entry): it still blocks a re-race of its primary and
+        # still draws down a locked reservation in _dispatch_price.
+        # Long-standing engine behavior — the golden-equivalence hashes
+        # pin it, so retiring the ghost is a scheduling change, not a
+        # cleanup
         self._fill_slots()
 
     # ------------------------------------------------------------------
@@ -607,10 +726,16 @@ class NimrodG:
         if not ests:
             return
         fastest = min(ests)
-        for primary_id, attempts in list(self.attempts.items()):
+        # walk only the currently-RUNNING primaries, in first-dispatch
+        # order — the order the full attempts-log walk used to visit
+        # them in (budget-guarded ``break`` below makes order part of
+        # the behavior, not just the cost)
+        for primary_id in sorted(self._running_ids,
+                                 key=self._dispatch_order.__getitem__):
             primary = self.jobs.get(primary_id)
             if primary is None or primary.status != JobStatus.RUNNING:
                 continue
+            attempts = self.attempts[primary_id]
             if any(a.duplicate_of for a in attempts
                    if a.status in (JobStatus.STAGED, JobStatus.RUNNING)):
                 continue  # already racing a duplicate
@@ -654,6 +779,12 @@ class NimrodG:
         if self._finished:
             return
         self._finished = True
+        if self._tick_handle is not None:
+            # a finished engine's tick chain leaves the heap NOW — in a
+            # long marketplace run the clock must not keep popping dead
+            # brokers' wakeups
+            self._tick_handle.cancel()
+            self._tick_handle = None
         t = self._now()
         if self.auction is not None:
             self.auction.withdraw(t)

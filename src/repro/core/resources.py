@@ -54,6 +54,10 @@ class ResourceStatus:
     # is it back up?" from this, never from the event queue
     next_transition: float = math.inf
     departed: bool = False            # site left the grid (churn)
+    # monotone stamp bumped on every slot acquire/release: quote caches
+    # key on it (utilization feeds demand pricing), so a cached price is
+    # reused exactly as long as nothing that prices off this queue moved
+    version: int = 0
 
     def free_slots(self, spec: ResourceSpec) -> int:
         return max(0, spec.slots - self.running) if self.up else 0
@@ -66,10 +70,12 @@ class ResourceStatus:
         if not self.up or self.running >= spec.slots:
             return False
         self.running += 1
+        self.version += 1
         return True
 
     def release(self) -> None:
         self.running = max(0, self.running - 1)
+        self.version += 1
 
     def utilization(self, spec: ResourceSpec) -> float:
         """Fraction of the queue occupied — the demand half of GRACE's

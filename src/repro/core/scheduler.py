@@ -42,6 +42,11 @@ class SchedulerConfig:
     max_attempts: int = 5
     rate_ema: float = 0.5            # weight of new measurement
     min_resources: int = 1
+    # record every k-th tick into ExperimentReport.timeline (1 = every
+    # tick, the historical behavior).  A 10k-job horizon-length run at
+    # stride 1 holds O(ticks) tuples per broker; large-scale sweeps set
+    # this to keep reports bounded without touching scheduling behavior
+    timeline_stride: int = 1
 
 
 @dataclasses.dataclass

@@ -18,64 +18,117 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.resources import ResourceDirectory, ResourceSpec
 
 
+class Timer:
+    """Cancellable handle for one scheduled event.
+
+    Cancellation is lazy: the heap entry stays where it is and is
+    discarded unfired when it reaches the top — O(1) to cancel, no heap
+    surgery.  A cancelled entry neither advances the clock nor counts
+    against the event budget, and it can never distort the final-clock
+    clamp at the ``run(until=...)`` boundary."""
+    __slots__ = ("cancelled",)
+
+    def __init__(self):
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class RepeatingTimer:
+    """Handle for an ``every()`` chain: cancelling it stops the series —
+    both the firing currently in the heap and every rescheduling after."""
+    __slots__ = ("cancelled", "_current")
+
+    def __init__(self):
+        self.cancelled = False
+        self._current: Optional[Timer] = None
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        if self._current is not None:
+            self._current.cancel()
+
+
 class Simulator:
     def __init__(self, start: float = 0.0):
         self._t = start
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Callable[[], None], Timer]] = []
         self._seq = itertools.count()
         self.stopped = False
+        self.events = 0              # events actually fired, ever
 
     @property
     def now(self) -> float:
         return self._t
 
-    def at(self, t: float, fn: Callable[[], None]) -> None:
+    def at(self, t: float, fn: Callable[[], None]) -> Timer:
         if t < self._t - 1e-9:
             raise ValueError(f"scheduling into the past: {t} < {self._t}")
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        handle = Timer()
+        heapq.heappush(self._heap, (t, next(self._seq), fn, handle))
+        return handle
 
-    def after(self, delay: float, fn: Callable[[], None]) -> None:
-        self.at(self._t + max(0.0, delay), fn)
+    def after(self, delay: float, fn: Callable[[], None]) -> Timer:
+        return self.at(self._t + max(0.0, delay), fn)
 
     def every(self, interval: float, fn: Callable[[], None], *,
               start_delay: Optional[float] = None,
-              until: float = math.inf) -> None:
+              until: float = math.inf) -> RepeatingTimer:
         """Recurring event (e.g. an auction clearing round): run ``fn``
-        every ``interval`` seconds until ``until`` or until ``fn``
-        returns a truthy "stop" value.  The first firing is after
-        ``start_delay`` (defaults to ``interval``)."""
+        every ``interval`` seconds until ``until``, until ``fn`` returns
+        a truthy "stop" value, or until the returned handle is
+        cancelled.  The first firing is after ``start_delay`` (defaults
+        to ``interval``)."""
         if interval <= 0:
             raise ValueError(f"interval must be positive, got {interval}")
+        handle = RepeatingTimer()
 
         def fire():
-            if self._t > until or self.stopped:
+            if handle.cancelled or self._t > until or self.stopped:
                 return
             stop = fn()
-            if not stop and self._t + interval <= until:
-                self.after(interval, fire)
+            if not stop and not handle.cancelled \
+                    and self._t + interval <= until:
+                handle._current = self.after(interval, fire)
 
-        self.after(interval if start_delay is None else start_delay, fire)
+        handle._current = self.after(
+            interval if start_delay is None else start_delay, fire)
+        return handle
+
+    def _drop_cancelled_head(self) -> None:
+        while self._heap and self._heap[0][3].cancelled:
+            heapq.heappop(self._heap)
 
     def run(self, until: float = math.inf, max_events: int = 10_000_000
             ) -> None:
         n = 0
-        while self._heap and not self.stopped:
-            t, _, fn = self._heap[0]
+        while not self.stopped:
+            self._drop_cancelled_head()
+            if not self._heap:
+                break
+            t, _, fn, _h = self._heap[0]
             if t > until:
                 break
             heapq.heappop(self._heap)
             self._t = t
             fn()
             n += 1
+            self.events += 1
             if n >= max_events:
                 raise RuntimeError("simulator event budget exceeded "
                                    "(runaway loop?)")
         if not self.stopped:
+            self._drop_cancelled_head()
             self._t = max(self._t, min(until, self._t if not self._heap
                                        else self._heap[0][0]))
 
     def stop(self) -> None:
         self.stopped = True
+
+    def pending_events(self) -> int:
+        """Live (non-cancelled) entries still in the heap."""
+        return sum(1 for e in self._heap if not e[3].cancelled)
 
 
 class FailureProcess:

@@ -1,0 +1,177 @@
+"""Golden same-seed equivalence: the indexed broker hot path must be
+*behavior-preserving* — byte-identical reports and journals versus the
+pre-index implementation (PR 1-3 lineage).
+
+The hashes below were captured by running these exact scenarios on the
+pre-refactor code (full job-table rescans, attempts-log walks, uncached
+quotes, no timer cancellation).  Each scenario was chosen to cross every
+index update point:
+
+* ``contention``  — slot races lost (SLOT_LOST requeue, attempt handed
+  back) across 4 posted-price brokers with failures;
+* ``auction``     — negotiated contracts (reservation book mutations,
+  locked-vs-spot dispatch pricing) in a mixed market;
+* ``churn``       — whole-site departures: in-flight evictions, burned
+  dispatches on stale GIS views, fault requeues without attempt burn;
+* ``journal``     — a single journaled engine with a tight straggler
+  factor (duplicate racing + kill settlement), hashed event-by-event.
+
+If an intentional behavior change lands, regenerate with
+``python tests/test_golden_equivalence.py`` and update the constants in
+the same commit — silently drifting schedules are the bug this guards.
+"""
+import hashlib
+import os
+
+import pytest
+
+from repro.core import (Dispatcher, Journal, NimrodG, PriceSchedule,
+                        ResourceDirectory, SchedulerConfig,
+                        SimulatedExecutor, Simulator, TradeServer,
+                        UserRequirements, gusto_like_testbed,
+                        mixed_auction_market, parse_plan, standard_market)
+
+HOUR = 3600.0
+
+GOLDEN = {
+    "contention":
+        "465719d24255b82f39413e350d298ae1550dfa82e39d5ad2a6a301f0776e2e07",
+    "auction":
+        "1bf2b420da6859e0f20ee575beba4665d4737ae2fa05acc8d61732e78b2e5b44",
+    "churn":
+        "b84fbebd806c6e2146ed58b8df37835299383539b3992ebf22715a8163c44430",
+    "journal":
+        "2fffca3c43ec2cff3477444e2ffdca0ba92cbabf900173bfb1ddf9b87f4c1672",
+    "journal_report":
+        "99321471481ed18410849eb7b41991d823489f04efe9c55fa706d2444961f1ab",
+}
+
+
+def _sha(s: str) -> str:
+    return hashlib.sha256(s.encode()).hexdigest()
+
+
+def _canonical_report(rep) -> str:
+    """Process-stable serialization of an ExperimentReport: plain
+    ``repr`` leaks set iteration order (hash-randomized per process),
+    so resources are sorted and every float rendered exactly."""
+    return (f"{rep.experiment}|{rep.strategy}|{rep.n_done}/{rep.n_jobs}"
+            f"|failed={rep.n_failed_final}|t={rep.completion_time!r}"
+            f"|cost={rep.total_cost!r}|met={rep.met_deadline}"
+            f"|within={rep.within_budget}"
+            f"|res={sorted(rep.resources_used)!r}"
+            f"|peak={rep.peak_allocation}|dups={rep.duplicates_launched}"
+            f"|rq={rep.requeues}|races={rep.slot_races_lost}"
+            f"|rl={rep.resource_losses}|stall={rep.stall_reason}"
+            f"|timeline={rep.timeline!r}")
+
+
+def _contention_market():
+    return standard_market(4, n_machines=8, seed=7, n_jobs=12,
+                           demand_elasticity=1.0)
+
+
+def _churn_market():
+    return standard_market(4, n_machines=12, seed=5, n_jobs=10,
+                           gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                           churn_mean_downtime_h=1.0)
+
+
+def _journal_engine(tmpdir: str):
+    directory = ResourceDirectory()
+    for spec in gusto_like_testbed(12, seed=9):
+        directory.register(spec)
+    schedules = {n: PriceSchedule(directory.spec(n), spot_amplitude=0.1,
+                                  demand_elasticity=0.5)
+                 for n in directory.all_names()}
+    trade = TradeServer(directory, schedules)
+    sim = Simulator()
+    disp = Dispatcher(SimulatedExecutor(sim, directory, seed=2,
+                                        dispatch_latency=1.0), directory)
+    plan = parse_plan("""
+parameter alpha float range from 0.1 to 1.8 step 0.1
+task main
+    execute sim --alpha $alpha
+endtask
+""")
+    req = UserRequirements(deadline=6 * HOUR, budget=9_000.0,
+                           strategy="cost")
+    jpath = os.path.join(tmpdir, "golden.jsonl")
+    eng = NimrodG.from_plan("golden", plan, req, directory, trade, disp,
+                            est_seconds=lambda p: 1500.0, sim=sim,
+                            journal=Journal(jpath, fsync=False),
+                            sched_cfg=SchedulerConfig(straggler_factor=1.2))
+    return eng, jpath
+
+
+def test_golden_contention_market_reproduces_pre_index_bytes():
+    rep = _contention_market().run(failures=True)
+    assert rep.slot_races_lost > 0          # the scenario still bites
+    assert _sha(rep.stable_repr()) == GOLDEN["contention"]
+
+
+def test_golden_auction_market_reproduces_pre_index_bytes():
+    rep = mixed_auction_market(6, n_machines=10, seed=3, n_jobs=10).run()
+    assert rep.contracts_struck > 0
+    assert _sha(rep.stable_repr()) == GOLDEN["auction"]
+
+
+def test_golden_churn_market_reproduces_pre_index_bytes():
+    rep = _churn_market().run(failures=True, churn=True)
+    assert rep.evictions > 0 and rep.resource_losses > 0
+    assert len(rep.churn_trace) > 0
+    assert _sha(rep.stable_repr()) == GOLDEN["churn"]
+
+
+def test_golden_journaled_engine_reproduces_pre_index_journal(tmp_path):
+    eng, jpath = _journal_engine(str(tmp_path))
+    rep = eng.run_simulated(failures=True)
+    eng.journal.close()
+    assert rep.duplicates_launched > 0      # straggler race exercised
+    with open(jpath) as f:
+        assert _sha(f.read()) == GOLDEN["journal"]
+    assert _sha(_canonical_report(rep)) == GOLDEN["journal_report"]
+
+
+def test_index_invariants_after_run():
+    """After a run every index agrees with a from-scratch recount —
+    the invariant _reindex() maintains transition by transition."""
+    from repro.core.jobs import JobStatus
+    market = _contention_market()
+    market.run(failures=True)
+    for eng in market.engines:
+        done = {j.job_id for j in eng.jobs.values()
+                if j.status is JobStatus.DONE}
+        pending = {j.job_id for j in eng.jobs.values()
+                   if j.status in (JobStatus.PENDING, JobStatus.FAILED)
+                   and j.attempt < eng.cfg.max_attempts}
+        active = {j.job_id for j in eng.jobs.values()
+                  if j.status in (JobStatus.STAGED, JobStatus.RUNNING)}
+        assert eng._done_ids == done
+        assert eng._pending_ids == pending
+        assert {jid for _, jid in eng._pending_sorted} == pending
+        assert eng._active_ids == active
+        assert eng._remaining() == sum(
+            1 for j in eng.jobs.values() if j.status != JobStatus.DONE)
+
+
+if __name__ == "__main__":
+    # regeneration helper: prints the hashes to paste into GOLDEN
+    import tempfile
+    out = {}
+    out["contention"] = _sha(
+        _contention_market().run(failures=True).stable_repr())
+    out["auction"] = _sha(
+        mixed_auction_market(6, n_machines=10, seed=3,
+                             n_jobs=10).run().stable_repr())
+    out["churn"] = _sha(
+        _churn_market().run(failures=True, churn=True).stable_repr())
+    with tempfile.TemporaryDirectory() as td:
+        eng, jpath = _journal_engine(td)
+        rep = eng.run_simulated(failures=True)
+        eng.journal.close()
+        with open(jpath) as f:
+            out["journal"] = _sha(f.read())
+        out["journal_report"] = _sha(_canonical_report(rep))
+    for k, v in out.items():
+        print(f'    "{k}":\n        "{v}",')

@@ -1,0 +1,183 @@
+"""The indexed hot path's new mechanics: cancellable timers, strided
+timelines, and version-stamped quote caching — the machinery behind the
+O(active-work) broker tick (scheduling behavior itself is pinned by
+tests/test_golden_equivalence.py)."""
+import math
+
+import pytest
+
+from repro.core import (PriceSchedule, ResourceDirectory, ResourceSpec,
+                        SchedulerConfig, Simulator, TradeServer,
+                        standard_market)
+
+HOUR = 3600.0
+
+
+# ---------------------------------------------------------------------------
+# simulator: cancellable handles
+# ---------------------------------------------------------------------------
+
+def test_cancelled_timer_never_fires():
+    sim = Simulator()
+    fired = []
+    h = sim.at(10.0, lambda: fired.append("a"))
+    sim.at(20.0, lambda: fired.append("b"))
+    h.cancel()
+    sim.run()
+    assert fired == ["b"]
+    assert sim.now == 20.0
+
+
+def test_cancelled_timer_does_not_advance_clock_or_count_events():
+    sim = Simulator()
+    h = sim.at(50.0, lambda: None)
+    h.cancel()
+    sim.run(until=math.inf)
+    assert sim.now == 0.0                    # skipped, not fired
+    assert sim.events == 0
+
+
+def test_cancelled_head_does_not_distort_until_boundary_clock():
+    """A dead timer sitting first in the heap must not cap the final
+    clock clamp at run(until=...)."""
+    sim = Simulator()
+    h = sim.at(5.0, lambda: None)
+    sim.at(30.0, lambda: None)
+    h.cancel()
+    sim.run(until=10.0)
+    assert sim.now == 10.0                   # clamped by until, not by 5.0
+
+
+def test_every_handle_cancels_the_chain():
+    sim = Simulator()
+    ticks = []
+    handle = sim.every(10.0, lambda: ticks.append(sim.now))
+    sim.at(35.0, handle.cancel)
+    sim.run(until=100.0)
+    assert ticks == [10.0, 20.0, 30.0]
+    assert sim.pending_events() == 0
+
+
+def test_finished_engines_leave_the_heap():
+    """A marketplace engine that finishes cancels its pending tick: the
+    heap must not keep popping dead brokers' wakeups for the rest of a
+    long run."""
+    market = standard_market(2, n_machines=6, seed=1, n_jobs=4,
+                             est_seconds=600.0)
+    for eng in market.engines:
+        assert eng._tick_handle is None
+    market.run()
+    for eng in market.engines:
+        assert eng.finished
+        assert eng._tick_handle is None      # cancelled and dropped
+
+
+# ---------------------------------------------------------------------------
+# timeline stride
+# ---------------------------------------------------------------------------
+
+def test_timeline_stride_bounds_report_growth_without_changing_schedule():
+    dense = standard_market(2, n_machines=6, seed=3, n_jobs=8,
+                            sched_cfg=SchedulerConfig()).run()
+    strided = standard_market(2, n_machines=6, seed=3, n_jobs=8,
+                              sched_cfg=SchedulerConfig(
+                                  timeline_stride=8)).run()
+    # identical scheduling: stable_repr covers every economic outcome
+    assert dense.stable_repr() == strided.stable_repr()
+    assert len(dense.price_trace) == len(strided.price_trace)
+
+
+def test_timeline_stride_engine_level():
+    m1 = standard_market(1, n_machines=4, seed=5, n_jobs=6,
+                         sched_cfg=SchedulerConfig())
+    r1 = m1.run()
+    m2 = standard_market(1, n_machines=4, seed=5, n_jobs=6,
+                         sched_cfg=SchedulerConfig(timeline_stride=4))
+    r2 = m2.run()
+    t1 = m1.engines[0].report.timeline
+    t2 = m2.engines[0].report.timeline
+    assert len(t1) > len(t2) >= math.ceil(len(t1) / 4)
+    assert t2 == t1[::4]                     # every 4th tick, first kept
+    assert r1.stable_repr() == r2.stable_repr()
+
+
+def test_timeline_stride_must_not_change_behavior_under_churn():
+    kw = dict(n_machines=10, seed=9, n_jobs=6, gis_ttl=900.0,
+              churn_mean_uptime_h=3.0, churn_mean_downtime_h=1.0)
+    r1 = standard_market(3, sched_cfg=SchedulerConfig(), **kw).run(
+        failures=True, churn=True)
+    r2 = standard_market(3, sched_cfg=SchedulerConfig(timeline_stride=16),
+                         **kw).run(failures=True, churn=True)
+    assert r1.stable_repr() == r2.stable_repr()
+
+
+# ---------------------------------------------------------------------------
+# version-stamped quote cache
+# ---------------------------------------------------------------------------
+
+def _one_machine():
+    d = ResourceDirectory()
+    d.register(ResourceSpec(name="m0", site="s", chips=2, slots=2,
+                            base_price=1.0, peak_multiplier=1.0))
+    sched = {"m0": PriceSchedule(d.spec("m0"), demand_elasticity=1.0)}
+    return d, TradeServer(d, sched)
+
+
+def test_status_version_bumps_on_acquire_release():
+    d, _ = _one_machine()
+    st, spec = d.status("m0"), d.spec("m0")
+    v0 = st.version
+    assert st.acquire(spec)
+    assert st.version == v0 + 1
+    st.release()
+    assert st.version == v0 + 2
+    # a refused acquire (queue full) is not a state change
+    assert st.acquire(spec) and st.acquire(spec)
+    v_full = st.version
+    assert not st.acquire(spec)
+    assert st.version == v_full
+
+
+def test_book_version_bumps_on_reserve_cancel_prune():
+    d, ts = _one_machine()
+    v0 = ts.book_version
+    r = ts.reserve("m0", "u", 0.0, 100.0, 0.0)
+    assert ts.book_version == v0 + 1
+    assert ts.cancel(r.reservation_id)
+    assert ts.book_version == v0 + 2
+    assert not ts.cancel(999_999)            # no-op cancel: no bump
+    assert ts.book_version == v0 + 2
+    ts.reserve("m0", "u", 0.0, 10.0, 0.0)
+    ts._prune(50.0)                          # expiry pruning bumps
+    assert ts.book_version == v0 + 4
+
+
+def test_cached_price_tracks_utilization_and_reservations():
+    """The broker-side memo must never serve a stale quote: demand
+    pricing moves with the queue, reservations lock prices — both bump a
+    stamp the cache keys on."""
+    from repro.core.dispatcher import Dispatcher, SimulatedExecutor
+    from repro.core.economy import UserRequirements
+    from repro.core.parametric import NimrodG
+    from repro.core.jobs import JobSpec
+
+    d, ts = _one_machine()
+    sim = Simulator()
+    disp = Dispatcher(SimulatedExecutor(sim, d), d)
+    req = UserRequirements(deadline=10 * HOUR, budget=1e6, user="u")
+    eng = NimrodG("cache", [JobSpec(job_id="j0", experiment="cache",
+                                    point={}, steps=())],
+                  req, d, ts, disp, sim=sim)
+    p_idle = eng._price("m0")
+    assert p_idle == ts.effective_price("m0", "u", sim.now)
+    # rival grabs a slot: utilization 0 -> 1/2, demand premium kicks in
+    d.status("m0").acquire(d.spec("m0"))
+    p_half = eng._price("m0")
+    assert p_half > p_idle
+    assert p_half == ts.effective_price("m0", "u", sim.now)
+    # a locked reservation beats the spot quote through the same cache
+    ts.reserve("m0", "u", sim.now, sim.now + HOUR, sim.now,
+               locked_price=0.25)
+    assert eng._price("m0") == 0.25
+    # cache hit path: same t, same stamps -> identical object back
+    assert eng._price("m0") == 0.25
