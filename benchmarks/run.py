@@ -16,7 +16,8 @@ def main() -> None:
     failures = []
     from benchmarks import (bench_auctions, bench_figure3, bench_gis,
                             bench_kernels, bench_marketplace,
-                            bench_roofline, bench_scale, bench_scheduler)
+                            bench_roofline, bench_scale, bench_scheduler,
+                            bench_secondary)
     mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
             ("scheduler tables (strategies / scale / faults)",
              bench_scheduler),
@@ -27,6 +28,8 @@ def main() -> None:
             ("GIS staleness (view TTL x site churn)", bench_gis),
             ("scale (indexed hot path: jobs x users x variant)",
              bench_scale),
+            ("secondary market (resale on/off x brokers, price discovery)",
+             bench_secondary),
             ("kernels (pallas vs oracle)", bench_kernels),
             ("roofline (dry-run 3-term table)", bench_roofline)]
     # moe crossover needs 512 placeholder devices; include only when the

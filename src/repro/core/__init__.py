@@ -29,6 +29,8 @@ from repro.core.resources import (ResourceDirectory, ResourceSpec,
 from repro.core.scheduler import (AllocationDecision, ContractQuote,
                                   ResourceView, ScheduleAdvisor,
                                   SchedulerConfig, negotiate_contract)
+from repro.core.secondary import (Clearing, ClearingHistory, ResaleFill,
+                                  ResaleListing, SecondaryMarket)
 from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
                                   duration_model)
 from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
@@ -39,16 +41,19 @@ from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
 __all__ = [
     "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
     "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
-    "ChurnProcess", "ClearingRound", "Contract", "ContractQuote",
+    "ChurnProcess", "Clearing", "ClearingHistory", "ClearingRound",
+    "Contract", "ContractQuote",
     "CounterOffer", "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
     "ExperimentReport", "FailureProcess", "GISClient", "GISEntry",
     "GISRecord", "GISRegistry", "GISSnapshot", "GridBank",
     "GridInformationService", "Job", "JobSpec",
     "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
     "Marketplace", "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
-    "PriceSchedule", "ReconciliationError", "Reservation",
+    "PriceSchedule", "ReconciliationError", "ResaleFill", "ResaleListing",
+    "Reservation",
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
     "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
+    "SecondaryMarket",
     "SimulatedExecutor", "Simulator", "StagingProxy", "TradeFederation",
     "TradeServer", "UserOutcome", "UserRequirements", "department_of",
     "duration_model", "gusto_like_testbed", "is_resource_fault",

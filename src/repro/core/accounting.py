@@ -93,6 +93,13 @@ class GridBank:
         ``total_revenue`` is a genuine two-sided audit."""
         return math.fsum(self._spend.values())
 
+    def kind_total(self, kind: str) -> float:
+        """Signed G$ total of one entry kind — e.g. ``"idle"`` is the
+        market's aggregate wasted-contract spend (commitment fees paid
+        for reserved-but-unused windows), and ``"resale"`` nets to zero
+        by construction (every fill is a matched charge/refund pair)."""
+        return math.fsum(e.amount for e in self.entries if e.kind == kind)
+
     def total_refunds(self) -> float:
         """G$ owners have paid BACK to users (contract-breach rebates
         from departing sites).  Positive number; the signed entries are

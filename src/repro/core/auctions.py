@@ -227,13 +227,19 @@ class AuctionHouse:
                  window: float = 2 * HOUR,
                  idle_discount: float = 0.25,
                  tender_discount: float = 0.15,
-                 tender_validity: float = 0.5 * HOUR):
+                 tender_validity: float = 0.5 * HOUR,
+                 history=None):
         self.federation = federation
         self.round_interval = round_interval
         self.window = window
         self.idle_discount = idle_discount
         self.tender_discount = tender_discount
         self.tender_validity = tender_validity
+        # per-resource ClearingHistory (see repro.core.secondary): every
+        # clearing round's matched resources append their uniform price,
+        # and owners' PriceSchedules get the observation — the discovery
+        # loop that lets posted prices track what capacity clears at
+        self.history = history
         self.books: Dict[str, DoubleAuctionBook] = {
             site: DoubleAuctionBook(server, idle_discount=idle_discount)
             for site, server in federation.servers.items()}
@@ -267,8 +273,20 @@ class AuctionHouse:
     def clear_all(self, t: float) -> List[Contract]:
         struck: List[Contract] = []
         for site in sorted(self.books):
+            server = self.books[site].server
             trades, price, audit = self.books[site].clear(t, self.window)
             self.rounds.append(audit)
+            # record the round and feed the owners' discovery loop
+            # BEFORE striking: the posted quote logged is the one the
+            # round actually cleared against, not an already-nudged one
+            for resource in sorted({r for _, r, _ in trades}):
+                sched = server.schedules.get(resource)
+                if self.history is not None:
+                    posted = server.forward_quote(resource, t)
+                    self.history.append(t, resource, price, posted,
+                                        "auction")
+                if sched is not None:
+                    sched.observe_clearing(t, price)
             for user, resource, slots in trades:
                 c = self._strike(user, resource, site, price, slots,
                                  t, t + self.window, via="auction")
@@ -421,11 +439,16 @@ class AuctionBroker:
 
     def __init__(self, house: AuctionHouse, user: str, *,
                  bid_discount: float = 1.0,
-                 commit_fraction: float = 0.8):
+                 commit_fraction: float = 0.8,
+                 secondary=None):
         self.house = house
         self.user = user
         self.bid_discount = bid_discount
         self.commit_fraction = commit_fraction
+        # secondary market (repro.core.secondary): idle contracted
+        # windows are listed for resale (or released for the commitment
+        # fee) instead of silently cancelled
+        self.secondary = secondary
         self.contracts: List[Contract] = []      # full history (audit)
         self._live: List[Contract] = []          # pruned on access
         house.register(user, self._on_contract)
@@ -448,8 +471,38 @@ class AuctionBroker:
             # ids are retired, never ours to cancel again
             if c.end > t and c.voided_at is None:
                 for rid in c.reservation_ids:
-                    self.house.federation.cancel(rid)
+                    if self.secondary is not None:
+                        # resell the unexpired window (or pay the
+                        # commitment fee) rather than tear it up free
+                        self.secondary.shed(rid, self.user, t)
+                    else:
+                        self.house.federation.cancel(rid)
         self._live = []
+
+    def shed_idle(self, t: float, keep) -> List[int]:
+        """Hand off contracted windows the re-plan left idle: any live
+        contract on a resource outside ``keep`` (the advisor's current
+        allocation) that has survived at least one full clearing round
+        unused goes to the secondary market — listed for resale, or
+        released for the fee when resale is off.  Returns the shed
+        reservation ids.  The grace round keeps a contract struck this
+        tick from bouncing straight back onto the book."""
+        if self.secondary is None:
+            return []
+        shed: List[int] = []
+        kept: List[Contract] = []
+        for c in self._live:
+            idle = (c.end > t and c.voided_at is None
+                    and c.resource not in keep
+                    and c.start + self.house.round_interval <= t)
+            if not idle:
+                kept.append(c)
+                continue
+            for rid in c.reservation_ids:
+                if self.secondary.shed(rid, self.user, t) != "gone":
+                    shed.append(rid)
+        self._live = kept
+        return shed
 
     def active_contracts(self, t: float) -> List[Contract]:
         """Contracts covering ``t``, scanning only the not-yet-elapsed

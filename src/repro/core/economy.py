@@ -32,18 +32,35 @@ class PriceSchedule:
     """Owner-set price: base * peak-hours multiplier * per-user factor,
     plus optional spot-style fluctuation (deterministic in virtual time)
     and a demand-responsive multiplier (GRACE's supply-and-demand knob:
-    a busy queue raises the quote, an idle one relaxes it)."""
+    a busy queue raises the quote, an idle one relaxes it).
+
+    With ``discovery_gain > 0`` the owner also *learns* from the market:
+    every auction clearing round it trades in EMA-nudges the posted
+    ``base_price`` toward the base the clearing price implies, with
+    drift bounded to ``discovery_band`` around the original base —
+    auction price discovery feeding the posted-price schedule back."""
 
     def __init__(self, spec: ResourceSpec,
                  user_factors: Optional[Dict[str, float]] = None,
                  spot_amplitude: float = 0.0, spot_period: float = 5 * HOUR,
-                 phase: float = 0.0, demand_elasticity: float = 0.0):
+                 phase: float = 0.0, demand_elasticity: float = 0.0,
+                 discovery_gain: float = 0.0, discovery_band: float = 0.5):
+        if not 0.0 <= discovery_gain <= 1.0:
+            raise ValueError("discovery_gain must be in [0, 1]")
+        if discovery_band < 0.0:
+            raise ValueError("discovery_band must be >= 0")
         self.spec = spec
         self.user_factors = user_factors or {}
         self.spot_amplitude = spot_amplitude
         self.spot_period = spot_period
         self.phase = phase
         self.demand_elasticity = demand_elasticity
+        self.discovery_gain = discovery_gain
+        self.discovery_band = discovery_band
+        # the posted base the owner actually quotes: equals the spec's
+        # base forever when discovery is off, drifts (bounded) toward
+        # clearing prices when it is on
+        self.base_price = spec.base_price
 
     def chip_hour_price(self, t: float, user: str = "",
                         utilization: float = 0.0) -> float:
@@ -55,7 +72,25 @@ class PriceSchedule:
                 2 * math.pi * (t + self.phase * HOUR) / self.spot_period)
         uf = self.user_factors.get(user, 1.0)
         demand = 1.0 + self.demand_elasticity * max(0.0, min(1.0, utilization))
-        return self.spec.base_price * peak * spot * uf * demand
+        return self.base_price * peak * spot * uf * demand
+
+    def observe_clearing(self, t: float, clearing_price: float) -> None:
+        """A trade on this resource cleared at ``clearing_price``.  The
+        clearing quote carries the same time-of-day/spot factors as the
+        posted one, so the implied *base* is backed out by ratio before
+        the EMA step — an off-peak trade never drags the peak schedule
+        around.  Deterministic: driven only by clearing events, which
+        fire on the virtual clock."""
+        if self.discovery_gain <= 0.0 or clearing_price <= 0.0:
+            return
+        posted = self.chip_hour_price(t)
+        if posted <= 0.0:
+            return
+        implied = self.base_price * (clearing_price / posted)
+        lo = self.spec.base_price * (1.0 - self.discovery_band)
+        hi = self.spec.base_price * (1.0 + self.discovery_band)
+        target = min(max(implied, lo), hi)
+        self.base_price += self.discovery_gain * (target - self.base_price)
 
     def job_cost(self, t: float, duration: float, user: str = "",
                  utilization: float = 0.0) -> float:
@@ -81,6 +116,12 @@ class Bid:
     available_slots: int
     est_rate: float                 # jobs/hour this resource can sustain
     valid_until: float
+    # non-zero = this bid is a rival's resale listing (the reservation
+    # id on the book).  It prices like any other bid, but locking it in
+    # means BUYING the listing (SecondaryMarket.buy), never reserving
+    # fresh capacity at the all-in rate — the premium belongs to the
+    # seller, not the owner
+    resale_rid: int = 0
 
 
 class AdmissionError(Exception):
@@ -121,6 +162,10 @@ class TradeServer:
         self.patron_spend_threshold = patron_spend_threshold
         self.patron_quota_bonus = patron_quota_bonus
         self.reservations: List[Reservation] = []
+        # resale book this domain's server quotes from (attached by the
+        # marketplace when the secondary market is enabled): listings
+        # merge into solicit_bids as just another price source
+        self.secondary = None
         self._next_rid = 1
         self._rid_step = 1       # federation strides this for unique ids
         # monotone stamp bumped on every reservation-book mutation:
@@ -185,7 +230,25 @@ class TradeServer:
                 est_rate=rate,
                 valid_until=t + self.bid_validity,
             ))
-        return sorted(bids, key=lambda b: b.chip_hour_price)
+        if self.secondary is not None:
+            # rival brokers' live resale listings answer the tender too:
+            # one slot each, priced at the buyer's true all-in rate
+            # (owner usage at the locked price + the seller's premium)
+            for lst in self.secondary.offers_at_site(self.site, t,
+                                                     exclude=user):
+                if lst.resource not in self.directory:
+                    continue
+                spec = self.directory.spec(lst.resource)
+                dur = est_job_seconds(spec)
+                bids.append(Bid(
+                    resource=lst.resource,
+                    chip_hour_price=lst.all_in_rate,
+                    available_slots=1,
+                    est_rate=(HOUR / dur) if dur > 0 else 0.0,
+                    valid_until=min(t + self.bid_validity, lst.end),
+                    resale_rid=lst.reservation_id,
+                ))
+        return sorted(bids, key=lambda b: (b.chip_hour_price, b.resource))
 
     def _user_quota(self, user: str) -> Optional[int]:
         if self.max_reservations_per_user is None:
@@ -248,6 +311,33 @@ class TradeServer:
             self.book_version += 1
             return True
         return False
+
+    def transfer(self, reservation_id: int, buyer: str, t: float
+                 ) -> Optional[Reservation]:
+        """Secondary-market fill: the reservation changes hands but not
+        shape — same window, same resource, same locked price, so the
+        owner's capacity promise is untouched.  The buyer must clear the
+        same per-user admission quota a fresh reservation would (a
+        resale must never be a quota side-door).  Returns the
+        transferred reservation, or None if it expired/was cancelled."""
+        self._prune(t)
+        for r in self.reservations:
+            if r.reservation_id != reservation_id:
+                continue
+            if r.user == buyer:
+                return r
+            quota = self._user_quota(buyer)
+            if quota is not None:
+                active = sum(1 for x in self.reservations
+                             if x.user == buyer and x.end > t)
+                if active >= quota:
+                    raise AdmissionError(
+                        f"user {buyer!r} holds {active} active reservations "
+                        f"(quota {quota}) — transfer refused")
+            r.user = buyer
+            self.book_version += 1
+            return r
+        return None
 
     def reserved_price(self, resource: str, user: str, t: float
                        ) -> Optional[float]:
@@ -346,6 +436,13 @@ class TradeFederation:
         reserving or bidding there is over."""
         server = self.servers.pop(site)
         self._departed[site] = server
+        # mirror add_server: the federation-wide validity window is the
+        # max over LIVE members.  Without this, a departed long-validity
+        # domain kept stretching how long the federation honored sealed
+        # bids — stale state from a site that can no longer trade.
+        if self.servers:
+            self.bid_validity = max(s.bid_validity
+                                    for s in self.servers.values())
         return server
 
     def add_server(self, site: str, server: TradeServer) -> None:

@@ -48,6 +48,7 @@ from repro.core.parametric import NimrodG
 from repro.core.resources import (ResourceDirectory, ResourceSpec,
                                   gusto_like_testbed)
 from repro.core.scheduler import SchedulerConfig
+from repro.core.secondary import ClearingHistory, SecondaryMarket
 from repro.core.simulator import ChurnProcess, FailureProcess, Simulator
 
 HOUR = 3600.0
@@ -116,6 +117,11 @@ class MarketReport:
     churn_trace: List[Tuple[float, str, str]] = dataclasses.field(
         default_factory=list)                # (t, leave|join, site)
     gis_refreshes: int = 0                   # broker snapshot fetches
+    # secondary-market telemetry (all zero when the market is off)
+    resale_enabled: bool = False
+    resales: int = 0                         # listings filled
+    resale_volume: float = 0.0               # G$ of lumps seller-ward
+    wasted_spend: float = 0.0                # G$ of idle/commitment fees
 
     def summary(self) -> str:
         lines = [f"marketplace seed={self.seed}: {self.n_users} users on "
@@ -135,6 +141,11 @@ class MarketReport:
                 f"{self.evictions} in-flight evictions, "
                 f"{self.resource_losses} dispatches burned on stale views, "
                 f"refunds={self.refunds:.1f}G$")
+        if self.resale_enabled or self.wasted_spend:
+            lines.append(
+                f"  secondary: resale={'on' if self.resale_enabled else 'off'}"
+                f", {self.resales} fills, volume={self.resale_volume:.1f}G$, "
+                f"wasted-contract spend={self.wasted_spend:.1f}G$")
         return "\n".join(lines)
 
     def stable_repr(self) -> str:
@@ -154,6 +165,13 @@ class MarketReport:
             f"{o}:{v!r}" for o, v in sorted(self.owner_revenue.items())))
         parts.append(f"churn={self.churn_trace!r};ev={self.evictions}"
                      f";refunds={self.refunds!r}")
+        if self.resale_enabled or self.resales or self.wasted_spend:
+            # only emitted when the secondary market ran: default-market
+            # serializations stay byte-identical to the pre-PR-5 ones
+            parts.append(f"secondary={self.resale_enabled}"
+                         f";fills={self.resales}"
+                         f";vol={self.resale_volume!r}"
+                         f";wasted={self.wasted_spend!r}")
         parts.append("trace=" + ",".join(
             f"({t!r},{p!r})" for t, p in self.price_trace))
         return "\n".join(parts)
@@ -183,7 +201,12 @@ class Marketplace:
                  churn_mean_uptime_h: float = 8.0,
                  churn_mean_downtime_h: float = 2.0,
                  churn_min_sites: int = 1,
-                 churn_rebate: float = 0.25):
+                 churn_rebate: float = 0.25,
+                 release_fee: float = 0.0,
+                 resale: bool = False,
+                 ask_fraction: float = 0.5,
+                 discovery_gain: float = 0.0,
+                 discovery_band: float = 0.5):
         self.seed = seed
         self.sim = Simulator()
         self.directory = ResourceDirectory()
@@ -193,7 +216,9 @@ class Marketplace:
         self.schedules: Dict[str, PriceSchedule] = {
             name: PriceSchedule(self.directory.spec(name),
                                 demand_elasticity=demand_elasticity,
-                                spot_amplitude=spot_amplitude)
+                                spot_amplitude=spot_amplitude,
+                                discovery_gain=discovery_gain,
+                                discovery_band=discovery_band)
             for name in self.directory.all_names()}
         # the producer side of the economy: every settlement lands in
         # the bank as the owning domain's revenue
@@ -206,9 +231,26 @@ class Marketplace:
             bank=self.bank)
         self.trade = TradeFederation.from_directory(
             self.directory, self.schedules, **self._server_kw)
+        # realized-trade price log: clearing rounds and resale fills
+        # append here; schedules with discovery_gain > 0 learn from the
+        # clearing rounds (fills are user-to-user and don't nudge)
+        self.history = ClearingHistory()
         self.auction_house = AuctionHouse(
             self.trade, round_interval=auction_round,
-            window=auction_window, idle_discount=idle_discount)
+            window=auction_window, idle_discount=idle_discount,
+            history=self.history)
+        # secondary capacity market: with release_fee > 0 idle windows
+        # handed back cost their holder the commitment fee; with resale
+        # they can be listed and transferred to rival brokers instead
+        self.secondary: Optional[SecondaryMarket] = None
+        if resale or release_fee > 0.0:
+            self.secondary = SecondaryMarket(
+                self.trade, self.bank, release_fee=release_fee,
+                resale=resale, ask_fraction=ask_fraction,
+                history=self.history)
+            if resale:
+                for server in self.trade.servers.values():
+                    server.secondary = self.secondary
         # the information layer: brokers discover through this, never by
         # reading the directory — so what they know is heartbeat-stale
         # and TTL-cached, and membership can churn under them
@@ -256,14 +298,20 @@ class Marketplace:
                                strategy=user.strategy, user=user.name)
         # an "auction" user negotiates (double auction + contracts) on
         # top of the cost-optimizing allocation loop
-        broker = (AuctionBroker(self.auction_house, user.name)
+        broker = (AuctionBroker(self.auction_house, user.name,
+                                secondary=self.secondary)
                   if user.strategy == "auction" else None)
         engine = NimrodG(user.name, jobs, req, self.directory, self.trade,
                          dispatcher, sim=self.sim,
                          sched_cfg=sched_cfg or SchedulerConfig(),
                          seed=self.seed, stop_sim_when_done=False,
                          auction=broker, bank=self.bank,
+                         secondary=(self.secondary
+                                    if self.secondary is not None
+                                    and self.secondary.resale else None),
                          gis=self.gis, gis_ttl=self.gis_ttl)
+        if self.secondary is not None:
+            self.secondary.register_user(user.name, engine.ledger)
         self.users.append(user)
         self.engines.append(engine)
         return engine
@@ -303,20 +351,49 @@ class Marketplace:
         #    consumer's ledger is credited the same amount: the books
         #    still reconcile to the cent)
         for user, c, remaining in self.auction_house.remove_site(site, t):
-            amt = self.churn_rebate * remaining
-            engine = self._engine_for(user)
-            if amt > 0.0 and engine is not None:
-                engine.ledger.settle(0.0, -amt)
-                self.bank.record(t=t, user=user, owner=site,
-                                 resource=c.resource, amount=-amt,
-                                 kind="refund")
-                self.refunds += amt
+            holders: Dict[int, str] = {}
+            if self.secondary is not None:
+                # a listing over a voided reservation dies with it, fee-
+                # free and at void time (never rediscovered post-expiry
+                # as "unsold" — the breach rebate settles this loss);
+                # and a window that was RESOLD belongs to its buyer now,
+                # so the rebate for that slice must follow it
+                for rid in c.reservation_ids:
+                    self.secondary.drop(rid)
+                    buyer = self.secondary.buyer_of(rid)
+                    if buyer is not None and buyer != user:
+                        holders[rid] = buyer
+            if not holders:
+                self._pay_rebate(user, site, c.resource, t,
+                                 self.churn_rebate * remaining)
+                continue
+            # per-window split: each reservation carries an equal share
+            # of the contract's remaining value (max_commitment is
+            # price x chips x slots x left — one slot each)
+            per_rid = remaining / max(len(c.reservation_ids), 1)
+            for rid in c.reservation_ids:
+                self._pay_rebate(holders.get(rid, user), site, c.resource,
+                                 t, self.churn_rebate * per_rid)
         # 4. the domain's trade server leaves the federation (it stays
         #    behind as a read-only price board for stale views)
         self.trade.remove_server(site)
         self.gis.deregister_trade_server(site)
         self.churn_trace.append((t, "leave", site))
         return True
+
+    def _pay_rebate(self, user: str, site: str, resource: str, t: float,
+                    amt: float) -> None:
+        """Breach rebate for one voided window, credited to whoever
+        holds it (the contract's broker, or the buyer of a resold
+        reservation) — ledger and bank move together, so the books
+        still reconcile to the cent."""
+        engine = self._engine_for(user)
+        if amt > 0.0 and engine is not None:
+            engine.ledger.settle(0.0, -amt)
+            self.bank.record(t=t, user=user, owner=site,
+                             resource=resource, amount=-amt,
+                             kind="refund")
+            self.refunds += amt
 
     def _site_joins(self, site: str) -> None:
         t = self.sim.now
@@ -325,6 +402,8 @@ class Marketplace:
         server = TradeServer(self.directory,
                              {n: self.schedules[n] for n in names},
                              site=site, **self._server_kw)
+        if self.secondary is not None and self.secondary.resale:
+            server.secondary = self.secondary
         self.trade.add_server(site, server)
         self.auction_house.add_site(site, server)
         self.gis.register_trade_server(site, server)
@@ -346,6 +425,10 @@ class Marketplace:
     def _watch(self, sample_interval: float, horizon: float) -> None:
         t = self.sim.now
         self.price_trace.append((t, self.mean_quote(t)))
+        if self.secondary is not None:
+            # housekeeping on the sim clock: expire unsold listings
+            # (charging their commitment fees) and drop dangling ones
+            self.secondary.sweep(t)
         if all(e.finished for e in self.engines):
             # nobody is trading anymore: the heartbeat pump and clearing
             # rounds leave the heap with the brokers, then the clock stops
@@ -387,6 +470,15 @@ class Marketplace:
         for engine in self.engines:
             if not engine.finished:
                 engine.finish(stall="horizon_reached")
+        if self.secondary is not None:
+            # close the resale book: whatever never sold pays its fee
+            # now, and the reports re-read the ledgers so late fees and
+            # lump refunds show up in each user's final spend
+            self.secondary.finalize(self.sim.now)
+            for engine in self.engines:
+                engine.report.total_cost = engine.ledger.settled
+                engine.report.within_budget = (
+                    engine.ledger.settled <= engine.req.budget + 1e-6)
         return self._report()
 
     # ------------------------------------------------------------------
@@ -426,7 +518,15 @@ class Marketplace:
             refunds=self.refunds,
             churn_trace=list(self.churn_trace),
             gis_refreshes=sum(e.gis_client.refreshes for e in self.engines
-                              if e.gis_client is not None))
+                              if e.gis_client is not None),
+            resale_enabled=(self.secondary is not None
+                            and self.secondary.resale),
+            resales=(len(self.secondary.fills)
+                     if self.secondary is not None else 0),
+            resale_volume=(self.secondary.resale_volume
+                           if self.secondary is not None else 0.0),
+            wasted_spend=(self.secondary.wasted_spend
+                          if self.secondary is not None else 0.0))
 
 
 # ---------------------------------------------------------------------------

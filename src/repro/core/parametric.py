@@ -80,7 +80,7 @@ class NimrodG:
                  journal: Optional[Journal] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
                  seed: int = 0, stop_sim_when_done: bool = True,
-                 auction=None, bank=None,
+                 auction=None, bank=None, secondary=None,
                  gis: Optional[GridInformationService] = None,
                  gis_ttl: float = 600.0):
         self.experiment = experiment
@@ -93,9 +93,12 @@ class NimrodG:
         self.cfg = sched_cfg
         self.seed = seed
         # negotiated-economy hooks: an AuctionBroker bidding for this
-        # engine (strategy="auction") and the grid-wide revenue bank
+        # engine (strategy="auction"), the grid-wide revenue bank, and
+        # the resale book (rival brokers' listed reservations are one
+        # more price source the dispatch path drains before paying spot)
         self.auction = auction
         self.bank = bank
+        self.secondary = secondary
         # discovery layer: with a GIS the broker plans against a cached,
         # TTL-stale snapshot (and pays for its staleness in burned
         # dispatches); without one it reads the directory — the legacy
@@ -275,27 +278,48 @@ class NimrodG:
         return len(self.jobs) - len(self._done_ids)
 
     def _quote_memo(self, cache: Dict[str, Tuple[Tuple, Any]],
-                    resource: str, compute: Callable[[float], Any]) -> Any:
+                    resource: str, compute: Callable[[float], Any],
+                    with_secondary: bool = False) -> Any:
         """Per-resource quote memo.  A quote is a pure function of
         (t, queue utilization, reservation book), so the cached value is
         reused until any of the three stamps moves; ``compute(t)`` may
         itself prune the book (bumping its stamp), so the entry is keyed
         on the post-call state."""
         cached = cache.get(resource)
+        # the resale-book stamp participates only where the value reads
+        # the resale book (_price): spot quotes and locked lists don't,
+        # and must not recompute every time a listing moves
+        sv = (self.secondary.version
+              if with_secondary and self.secondary is not None else 0)
         key = (self._now(), self.directory.status(resource).version,
-               self.trade.price_version(resource))
+               self.trade.price_version(resource), sv)
         if cached is not None and cached[0] == key:
             return cached[1]
         value = compute(key[0])
         key = (key[0], self.directory.status(resource).version,
-               self.trade.price_version(resource))
+               self.trade.price_version(resource), sv)
         cache[resource] = (key, value)
         return value
+
+    def _effective_with_resale(self, resource: str, t: float) -> float:
+        """Effective price with rivals' resale listings merged in as one
+        more price source — the advisor ranks the cheaper of the two.
+        Runs inside the quote memo: its key already carries
+        ``SecondaryMarket.version``, so the listing scan reruns exactly
+        when the resale book moved."""
+        base = self.trade.effective_price(resource, self.req.user, t)
+        if self.secondary is not None:
+            rate = self.secondary.best_rate(resource, t,
+                                            exclude=self.req.user)
+            if rate is not None and rate < base:
+                return rate
+        return base
 
     def _price(self, resource: str) -> float:
         return self._quote_memo(
             self._price_cache, resource,
-            lambda t: self.trade.effective_price(resource, self.req.user, t))
+            lambda t: self._effective_with_resale(resource, t),
+            with_secondary=True)
 
     def _spot(self, resource: str) -> float:
         return self._quote_memo(
@@ -442,6 +466,27 @@ class NimrodG:
         self.report.peak_allocation = max(self.report.peak_allocation,
                                           len(self.allocated))
 
+        if self.auction is not None and self.auction.secondary is not None:
+            # the re-plan just decided which resources carry the backlog;
+            # contracted windows on resources it left behind are idle —
+            # resell them (or hand them back for the fee) instead of
+            # sitting on paid-for capacity nobody here will use
+            for rid in self.auction.shed_idle(t, keep=self.allocated):
+                self._log("RESALE_SHED", rid=rid)
+        if self.secondary is not None:
+            for r in sorted(self.allocated):
+                # a re-allocated resource reclaims this broker's own
+                # unsold listings there first — a window back in use is
+                # not idle, and must neither sell nor pay the expiry fee
+                if self.secondary.reclaim(r, self.req.user, t):
+                    self._log("RESALE_RECLAIM", resource=r)
+                # then drain rivals' offers at planning time: a broker
+                # paying spot on an allocated resource takes over a
+                # cheaper listed window even while the queue is
+                # momentarily full — the transferred reservation
+                # reprices its NEXT dispatch there
+                self._maybe_take_resale(r)
+
         self._fill_slots()
         self._check_stragglers()
         self._tick_count += 1
@@ -506,11 +551,40 @@ class NimrodG:
         pend = [self.jobs[jid] for _, jid in self._pending_sorted[:len(slots)]]
         for job, resource in zip(pend, slots):
             est = self.views[resource].est_job_seconds
+            if self.secondary is not None:
+                self._maybe_take_resale(resource)
             price = self._dispatch_price(resource)
             cost = price * self.directory.spec(resource).chips * est / HOUR
             if not self.advisor.may_commit(cost, remaining, self.ledger):
                 continue
             self._dispatch(job, resource, cost, price=price)
+
+    def _maybe_take_resale(self, resource: str) -> None:
+        """Drain the cheapest resale offer on ``resource`` before paying
+        spot: when a rival's listed reservation is all-in cheaper than
+        the live quote, buy it — the reservation transfers to this
+        broker and every dispatch there while the window lasts draws it
+        at the locked price.  Holdings are capped at the queue's
+        concurrency: a reservation beyond ``slots`` could never price a
+        job and would be pure waste."""
+        t = self._now()
+        offer = self.secondary.best_offer(resource, t,
+                                          exclude=self.req.user)
+        if offer is None or offer.all_in_rate >= self._spot(resource) - 1e-12:
+            return
+        spec = self.directory.spec(resource)
+        if self.trade.reserved_slots(resource, self.req.user, t) >= spec.slots:
+            return
+        lump = offer.lump(t)
+        # the lump is a capacity purchase, not a per-job commitment: it
+        # settles immediately, so plain budget headroom is the guard
+        if not self.ledger.can_commit(lump):
+            return
+        r = self.secondary.buy(offer.reservation_id, self.req.user, t)
+        if r is not None:
+            self._log("RESALE_BUY", resource=resource,
+                      rid=r.reservation_id, lump=lump,
+                      rate=offer.all_in_rate)
 
     def _dispatch(self, job: Job, resource: str, committed: float,
                   price: Optional[float] = None) -> None:

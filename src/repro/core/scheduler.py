@@ -262,16 +262,31 @@ def negotiate_contract(t: float, req: UserRequirements, n_jobs: int,
     for b in chosen:
         share = (b.est_rate / HOUR) / acc * n_jobs
         spec = trade.directory.spec(b.resource)
-        cost += share * (b.chip_hour_price * spec.chips
-                         * (HOUR / max(b.est_rate, 1e-9)) * spec.slots / HOUR)
+        # amortized per-job cost: the whole resource bills
+        # chip_hour_price * chips per hour and sustains est_rate
+        # jobs/hour, so one job costs price * chips / est_rate.
+        # (est_rate already counts every slot — multiplying by
+        # spec.slots again overstated the quote by the slot count and
+        # made feasible contracts look budget-infeasible.)  This is the
+        # resource-level price of the farm's chip-hours; note the
+        # engine's per-dispatch settlement bills each concurrent job
+        # the full chip complement, so on a slots>1 queue the two
+        # conventions differ — everywhere both run today (gusto-style
+        # testbeds) slots == 1 and they agree exactly.
+        cost += share * b.chip_hour_price * spec.chips / max(b.est_rate, 1e-9)
     feasible = feasible_time and cost <= req.budget
     rids: Tuple[int, ...] = ()
     if feasible and accept:
         at = t if accept_at is None else accept_at
+        # resale-backed bids (resale_rid != 0) price the quote but are
+        # not reservable here: locking one in means buying the listing
+        # on the secondary market, never reserving fresh capacity at
+        # the all-in rate (that would pay the seller's premium to the
+        # owner — or crash on a queue the listing already fills)
         rids = tuple(
             trade.reserve(
                 b.resource, req.user, at, req.deadline, at,
                 locked_price=(b.chip_hour_price
                               if at <= b.valid_until else None)
-            ).reservation_id for b in chosen)
+            ).reservation_id for b in chosen if not b.resale_rid)
     return ContractQuote(feasible, completion, cost, len(chosen), rids)

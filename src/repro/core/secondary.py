@@ -1,0 +1,442 @@
+"""Secondary capacity market + clearing-history price discovery.
+
+Two follow-ups to the GRACE economy close the loop the primary market
+leaves open (cs/0111048 makes supply-and-demand-driven price adjustment
+the core mechanism; cs/0203019 models resale of reserved capacity
+between brokers):
+
+* **Resale.**  A broker whose deadline/budget re-plan leaves contracted
+  reservations idle can *list* them on its domain's trade server
+  instead of tearing them up.  The ask is a remaining-window pro-rata
+  of the locked price (``ask_fraction`` of it, billed only for the
+  window still ahead at fill time).  Other brokers see live listings
+  merged into ``solicit_bids``/``effective_price`` as just another
+  price source; a fill transfers the ``Reservation`` to the buyer
+  (``TradeServer.transfer`` — admission quotas still enforced), the
+  buyer keeps paying the *owner* the original locked price per use,
+  and the lump the buyer pays the *seller* is mirrored through
+  ``GridBank`` as a matched charge/refund pair (net zero to the owner,
+  so every ledger still reconciles exactly).
+
+* **Commitment fees.**  Advance reservations are commitments: with
+  ``release_fee > 0``, a holder who hands a window back unexpired pays
+  the owner ``release_fee`` x the remaining window's value at the
+  locked price (bank kind ``"idle"``).  A listing that never sells
+  pays the same fee over its listed-idle span.  The sum of these fees
+  is the market's *wasted-contract spend* — the number resale exists
+  to shrink.
+
+* **Price discovery.**  Every auction clearing round and every resale
+  fill appends to a per-resource ``ClearingHistory``; a
+  ``PriceSchedule`` constructed with ``discovery_gain > 0`` EMA-nudges
+  its posted base price toward the price level those trades imply
+  (drift bounded to ``discovery_band`` around the original base).
+  Owners' posted schedules thereby converge toward what capacity
+  actually clears at.
+
+Everything is deterministic on the virtual clock: listings iterate in
+reservation-id order, fills and fees fire only from simulator events,
+and no wall clock or RNG is consulted.  All of it is opt-in — with the
+default knobs (``release_fee=0``, ``resale=False``,
+``discovery_gain=0``) nothing here runs and the primary market is
+bit-for-bit unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.economy import (AdmissionError, Reservation, TradeFederation,
+                                TradeServer)
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Clearing:
+    """One realized trade price on one resource: what the market said
+    capacity there was worth at ``t`` (and what the owner was posting
+    at that moment — the gap discovery is trying to close)."""
+    t: float
+    resource: str
+    price: float                    # chip-hour price the trade cleared at
+    posted: float                   # owner's forward quote at the same t
+    source: str                     # "auction" | "resale"
+
+
+class ClearingHistory:
+    """Per-resource append-only log of clearing events.
+
+    The ``AuctionHouse`` appends each site round's matched resources at
+    the uniform clearing price; the ``SecondaryMarket`` appends each
+    fill at its all-in rate.  ``PriceSchedule.observe_clearing`` feeds
+    off the same clearing-round events; this log is the audit trail,
+    and ``gap_by_observation`` is the bench's posted-vs-clearing
+    convergence measure."""
+
+    def __init__(self):
+        self.entries: List[Clearing] = []
+        self._by_resource: Dict[str, List[Clearing]] = {}
+
+    def append(self, t: float, resource: str, price: float, posted: float,
+               source: str) -> None:
+        c = Clearing(t=t, resource=resource, price=price, posted=posted,
+                     source=source)
+        self.entries.append(c)
+        self._by_resource.setdefault(resource, []).append(c)
+
+    def for_resource(self, resource: str) -> List[Clearing]:
+        return list(self._by_resource.get(resource, ()))
+
+    def last_price(self, resource: str) -> Optional[float]:
+        hist = self._by_resource.get(resource)
+        return hist[-1].price if hist else None
+
+    def gap_by_observation(self, source: str = "auction") -> List[float]:
+        """Mean relative |posted - clearing| / posted gap at each
+        resource's k-th clearing of the given ``source``, averaged
+        across resources.  This is the discovery loop's own axis: with
+        ``discovery_gain > 0`` every observation EMA-steps a resource's
+        posted base toward what it cleared at, so the sequence shrinks
+        (weakly) monotonically; with the gain at zero it is flat."""
+        per: Dict[str, int] = {}
+        buckets: List[List[float]] = []
+        for c in self.entries:
+            if c.source != source or c.posted <= 0:
+                continue
+            k = per.get(c.resource, 0)
+            per[c.resource] = k + 1
+            while len(buckets) <= k:
+                buckets.append([])
+            buckets[k].append(abs(c.posted - c.price) / c.posted)
+        return [sum(b) / len(b) for b in buckets]
+
+
+@dataclasses.dataclass
+class ResaleListing:
+    """One reservation up for resale.  The ask is quoted as a chip-hour
+    *rate* premium; the lump a buyer actually pays is that rate over the
+    window still remaining at fill time (remaining-window pro-rata) —
+    a listing that sells late sells cheap."""
+    reservation_id: int
+    seller: str
+    resource: str
+    site: str
+    chips: int
+    listed_at: float
+    end: float                      # reservation window end
+    locked_price: float             # what the buyer keeps paying the owner
+    ask_rate: float                 # chip-hour premium paid to the seller
+
+    @property
+    def all_in_rate(self) -> float:
+        """The buyer's true chip-hour rate: owner usage at the locked
+        price plus the seller's premium — the number advisors rank
+        against the spot quote."""
+        return self.locked_price + self.ask_rate
+
+    def lump(self, t: float) -> float:
+        """G$ the buyer pays the seller for the remaining window."""
+        return self.ask_rate * self.chips * max(self.end - t, 0.0) / HOUR
+
+
+@dataclasses.dataclass(frozen=True)
+class ResaleFill:
+    """Audit record of one secondary trade."""
+    t: float
+    reservation_id: int
+    seller: str
+    buyer: str
+    resource: str
+    lump: float
+    rate: float                     # all-in chip-hour rate (price signal)
+
+
+class SecondaryMarket:
+    """Resale book + commitment-fee settlement over a trade federation.
+
+    One instance serves the whole grid (listings carry their site, and
+    transfers route to the owning domain's server).  Brokers register
+    their ledgers so every fee, charge and refund lands in both the
+    broker's ``BudgetLedger`` and the ``GridBank`` with the same
+    ``+=`` — the two stay reconcilable to the bit.
+
+    ``version`` is a monotone stamp bumped on every book mutation
+    (list, fill, drop); broker-side quote memos key on it exactly like
+    they key on ``TradeServer.book_version``.
+    """
+
+    def __init__(self, federation: TradeFederation, bank, *,
+                 release_fee: float = 0.25,
+                 resale: bool = True,
+                 ask_fraction: float = 0.5,
+                 history: Optional[ClearingHistory] = None):
+        if release_fee < 0:
+            raise ValueError("release_fee must be >= 0")
+        if ask_fraction < 0:
+            raise ValueError("ask_fraction must be >= 0")
+        self.federation = federation
+        self.bank = bank
+        self.release_fee = release_fee
+        self.resale = resale
+        self.ask_fraction = ask_fraction
+        self.history = history
+        self.listings: Dict[int, ResaleListing] = {}
+        self.fills: List[ResaleFill] = []
+        # latest holder-by-purchase per reservation id: churn rebates
+        # for a voided window must reach whoever bought it, not the
+        # broker the contract was originally struck with
+        self._buyers: Dict[int, str] = {}
+        self.version = 0
+        self.wasted_spend = 0.0         # G$ of idle/release fees, ever
+        self.resale_volume = 0.0        # G$ of lumps changing hands
+        self._ledgers: Dict[str, object] = {}
+
+    # -- wiring --------------------------------------------------------
+    def register_user(self, user: str, ledger) -> None:
+        """Attach a broker's ledger so the market can settle against it
+        (fees, lump charges, lump refunds)."""
+        self._ledgers[user] = ledger
+
+    def _settle(self, user: str, resource: str, site: str, amount: float,
+                t: float, kind: str) -> None:
+        ledger = self._ledgers.get(user)
+        if ledger is not None:
+            ledger.settle(0.0, amount)
+        if self.bank is not None:
+            self.bank.record(t=t, user=user, owner=site, resource=resource,
+                             amount=amount, kind=kind)
+
+    def _charge_fee(self, user: str, resource: str, site: str,
+                    amount: float, t: float) -> float:
+        if amount <= 0.0:
+            return 0.0
+        self._settle(user, resource, site, amount, t, kind="idle")
+        self.wasted_spend += amount
+        return amount
+
+    def _fee(self, locked_price: float, chips: int, span: float) -> float:
+        """The commitment fee on ``span`` seconds of a reserved window
+        handed back (or idled) unexpired — the ONE definition both the
+        release path and the expired-unsold path charge."""
+        return self.release_fee * locked_price * chips * max(span, 0.0) / HOUR
+
+    def _locate(self, reservation_id: int
+                ) -> Optional[Tuple[str, TradeServer, Reservation]]:
+        """Find a live reservation anywhere in the federation (ids are
+        federation-unique, so the first hit is the only hit).  A linear
+        scan on purpose: reservation books are pruned on access (the
+        PR-2 invariant bounds them at O(live windows)), and shed/sweep
+        run per re-plan / per watch sample, not per quote — the broker
+        hot path never comes through here."""
+        for site, server in self.federation.servers.items():
+            for r in server.reservations:
+                if r.reservation_id == reservation_id:
+                    return site, server, r
+        return None
+
+    # -- seller side ---------------------------------------------------
+    def shed(self, reservation_id: int, seller: str, t: float) -> str:
+        """The holder no longer needs this reservation.  With resale it
+        goes on the book; without, it is released on the spot for the
+        commitment fee.  Returns "listed" | "released" | "gone"."""
+        if reservation_id in self.listings:
+            return "listed"             # idempotent: already on the book
+        loc = self._locate(reservation_id)
+        if loc is None:
+            return "gone"               # voided/expired/transferred away
+        site, server, r = loc
+        if r.user != seller or r.end <= t:
+            return "gone"
+        if self.resale:
+            self.listings[reservation_id] = ResaleListing(
+                reservation_id=reservation_id, seller=seller,
+                resource=r.resource, site=site,
+                chips=server.directory.spec(r.resource).chips,
+                listed_at=t, end=r.end, locked_price=r.locked_price,
+                ask_rate=self.ask_fraction * r.locked_price)
+            self.version += 1
+            return "listed"
+        self.release(reservation_id, seller, t)
+        return "released"
+
+    def release(self, reservation_id: int, holder: str, t: float) -> float:
+        """Cancel an unexpired reservation and charge the holder the
+        commitment fee on the window handed back.  Returns the fee."""
+        loc = self._locate(reservation_id)
+        if loc is None:
+            return 0.0
+        site, server, r = loc
+        if r.user != holder:
+            return 0.0
+        server.cancel(reservation_id)
+        self.listings.pop(reservation_id, None)
+        self.version += 1
+        fee = self._fee(r.locked_price,
+                        server.directory.spec(r.resource).chips,
+                        r.end - t)
+        return self._charge_fee(holder, r.resource, site, fee, t)
+
+    def reclaim(self, resource: str, holder: str, t: float) -> int:
+        """The holder's re-plan wants ``resource`` back: pull their own
+        unsold listings on it off the book, fee-free — the window is in
+        use again, not idle, so neither a fill nor the expiry fee may
+        take it from under them.  Returns the number of listings
+        reclaimed."""
+        mine = [rid for rid, l in self.listings.items()
+                if l.resource == resource and l.seller == holder]
+        for rid in mine:
+            del self.listings[rid]
+        if mine:
+            self.version += 1
+        return len(mine)
+
+    def buyer_of(self, reservation_id: int) -> Optional[str]:
+        """Who holds this reservation by purchase (None if it never
+        traded hands)."""
+        return self._buyers.get(reservation_id)
+
+    def drop(self, reservation_id: int) -> bool:
+        """Remove a listing without a fee or a fill — the event-driven
+        path for reservations voided under their listing (a churning
+        site's contracts): the capacity was taken from the holder, not
+        idled by them.  Exact and sweep-timing-independent — a void
+        discovered only after the window's end must not look like an
+        expired-unsold listing."""
+        if self.listings.pop(reservation_id, None) is None:
+            return False
+        self.version += 1
+        return True
+
+    # -- buyer side ----------------------------------------------------
+    def offers_for(self, resource: str, t: float, *,
+                   exclude: str = "") -> List[ResaleListing]:
+        """Live listings on ``resource`` a buyer could fill right now,
+        cheapest all-in rate first (ties broken by reservation id)."""
+        out = [l for l in self.listings.values()
+               if l.resource == resource and l.seller != exclude
+               and l.end > t and l.site in self.federation.servers]
+        # (all_in_rate, reservation_id) is a total order — rids are
+        # federation-unique — so one sort fully determines the book view
+        return sorted(out, key=lambda l: (l.all_in_rate, l.reservation_id))
+
+    def offers_at_site(self, site: Optional[str], t: float, *,
+                       exclude: str = "") -> List[ResaleListing]:
+        """Live listings one domain's trade server should merge into its
+        sealed-bid answers (``site=None`` = the whole grid)."""
+        return [l for rid, l in sorted(self.listings.items())
+                if (site is None or l.site == site) and l.seller != exclude
+                and l.end > t and l.site in self.federation.servers]
+
+    def best_offer(self, resource: str, t: float, *,
+                   exclude: str = "") -> Optional[ResaleListing]:
+        offers = self.offers_for(resource, t, exclude=exclude)
+        return offers[0] if offers else None
+
+    def best_rate(self, resource: str, t: float, *,
+                  exclude: str = "") -> Optional[float]:
+        offer = self.best_offer(resource, t, exclude=exclude)
+        return offer.all_in_rate if offer is not None else None
+
+    def buy(self, reservation_id: int, buyer: str, t: float
+            ) -> Optional[Reservation]:
+        """Fill a listing: transfer the reservation to the buyer and
+        move the lump seller-ward through the bank.  Returns the (now
+        buyer-held) reservation, or None if the fill is impossible
+        (listing gone, site departed, buyer over quota)."""
+        listing = self.listings.get(reservation_id)
+        if listing is None or listing.seller == buyer or listing.end <= t:
+            return None
+        server = self.federation.servers.get(listing.site)
+        if server is None:
+            # domain left the grid under the listing: nothing to deliver
+            del self.listings[reservation_id]
+            self.version += 1
+            return None
+        try:
+            r = server.transfer(reservation_id, buyer, t)
+        except AdmissionError:
+            return None
+        if r is None:
+            # reservation vanished (voided contract, pruned window)
+            del self.listings[reservation_id]
+            self.version += 1
+            return None
+        lump = listing.lump(t)
+        # matched pair through the SAME owner: buyer charge + seller
+        # refund net to zero domain revenue, and each side's ledger
+        # moves by exactly its bank entry — reconciliation stays exact
+        self._settle(buyer, listing.resource, listing.site, lump, t,
+                     kind="resale")
+        self._settle(listing.seller, listing.resource, listing.site, -lump,
+                     t, kind="resale")
+        del self.listings[reservation_id]
+        self.version += 1
+        self.resale_volume += lump
+        self._buyers[reservation_id] = buyer
+        fill = ResaleFill(t=t, reservation_id=reservation_id,
+                          seller=listing.seller, buyer=buyer,
+                          resource=listing.resource, lump=lump,
+                          rate=listing.all_in_rate)
+        self.fills.append(fill)
+        # the fill is a realized trade: log it for the audit trail and
+        # the bench's price traces.  It does NOT nudge the owner's
+        # schedule — the lump is a user-to-user payment the owner is no
+        # party to; owners learn from their own clearing rounds
+        if self.history is not None:
+            sched = server.schedules.get(listing.resource)
+            posted = (sched.chip_hour_price(t) if sched is not None
+                      else listing.all_in_rate)
+            self.history.append(t, listing.resource, listing.all_in_rate,
+                                posted, "resale")
+        return r
+
+    # -- lifecycle -----------------------------------------------------
+    def sweep(self, t: float) -> float:
+        """Periodic housekeeping on the sim clock: expire listings whose
+        window lapsed unsold (the seller pays the commitment fee over
+        the listed-idle span) and drop listings whose reservation no
+        longer exists (churn voided it — the breach rebate already
+        compensated the holder; no fee on capacity that vanished).
+        Returns the fees charged."""
+        fees = 0.0
+        for rid in sorted(self.listings):
+            listing = self.listings[rid]
+            if t >= listing.end:
+                fees += self._expire(listing, t)
+                continue
+            server = self.federation.servers.get(listing.site)
+            if server is None:
+                continue            # departed: kept dormant until rejoin
+            if not any(r.reservation_id == rid for r in server.reservations):
+                del self.listings[rid]
+                self.version += 1
+        return fees
+
+    def finalize(self, t: float) -> float:
+        """End of the run: every listing still on the book goes unsold —
+        settle their fees so the books close."""
+        fees = self.sweep(t)
+        for rid in sorted(self.listings):
+            fees += self._expire(self.listings[rid], t)
+        return fees
+
+    def _expire(self, listing: ResaleListing, t: float) -> float:
+        """Unsold: the window sat committed and idle from listing to its
+        end — the same fee a straight release at listing time would
+        have paid.  A reservation that vanished BEFORE its window ended
+        (churn voided the contract under the listing) charges nothing:
+        the capacity was taken from the holder, not idled by them, and
+        the breach rebate already settled that loss."""
+        del self.listings[listing.reservation_id]
+        self.version += 1
+        server = (self.federation.servers.get(listing.site)
+                  or self.federation._departed.get(listing.site))
+        cancelled = (server.cancel(listing.reservation_id)
+                     if server is not None else False)
+        if t < listing.end and not cancelled:
+            return 0.0
+        fee = self._fee(listing.locked_price, listing.chips,
+                        listing.end - listing.listed_at)
+        return self._charge_fee(listing.seller, listing.resource,
+                                listing.site, fee, t)

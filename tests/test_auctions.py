@@ -362,6 +362,35 @@ def test_federating_used_servers_never_rewinds_reservation_ids():
     assert fed.reserved_price("a0", "u", 0.5 * HOUR) is not None  # untouched
 
 
+def test_remove_server_recomputes_federation_bid_validity():
+    """Churn regression: after the longest-validity domain leaves, the
+    federation must stop honoring sealed bids for the departed site's
+    window — ``bid_validity`` is recomputed over LIVE members on
+    removal, exactly as ``add_server`` recomputes it on (re)join."""
+    d = ResourceDirectory()
+    for name, site in (("a0", "A"), ("b0", "B")):
+        d.register(_spec(name, site, 1.0))
+    sa = TradeServer(d, {"a0": PriceSchedule(d.spec("a0"))}, site="A",
+                     bid_validity=HOUR)
+    sb = TradeServer(d, {"b0": PriceSchedule(d.spec("b0"))}, site="B",
+                     bid_validity=6 * HOUR)
+    fed = TradeFederation({"A": sa, "B": sb})
+    assert fed.bid_validity == pytest.approx(6 * HOUR)
+    fed.remove_server("B")                       # longest validity churns out
+    assert fed.bid_validity == pytest.approx(HOUR)
+    # rejoin with a FRESH short-validity server: still the live max
+    sb2 = TradeServer(d, {"b0": PriceSchedule(d.spec("b0"))}, site="B",
+                      bid_validity=0.5 * HOUR)
+    fed.add_server("B", sb2)
+    assert fed.bid_validity == pytest.approx(HOUR)
+    fed.remove_server("A")                       # only sb2 (0.5h) remains
+    assert fed.bid_validity == pytest.approx(0.5 * HOUR)
+    # removing the LAST server must not blow up (max over empty): the
+    # final window simply stops shrinking
+    fed.remove_server("B")
+    assert fed.bid_validity == pytest.approx(0.5 * HOUR)
+
+
 def test_realized_revenue_extends_patron_reservation_quota():
     """Admission driven by realized revenue: an owner grants proven
     patrons extra reservation quota that strangers don't get."""

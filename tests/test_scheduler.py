@@ -155,6 +155,30 @@ def test_rates_adapt_from_measurements():
     assert all(v.completions > 0 for v in measured)
 
 
+def test_contract_quote_cost_hand_computed_multi_slot():
+    """Regression: the per-job contract cost once multiplied by
+    ``spec.slots`` twice (est_rate already counts every slot), so a
+    4-slot resource quoted 4x the true cost and feasible contracts
+    looked budget-infeasible.  Hand-computed single-resource case:
+    2 chips at 1 G$/chip-hour = 2 G$/hour for the whole resource;
+    4 slots x 1800s jobs = 8 jobs/hour; so 8 jobs cost exactly 2 G$."""
+    from repro.core import ResourceView, TradeServer
+    directory = ResourceDirectory()
+    directory.register(ResourceSpec(
+        name="quad", site="s", chips=2, slots=4, base_price=1.0,
+        peak_multiplier=1.0, mtbf_hours=float("inf")))
+    trade = TradeServer(directory,
+                        {"quad": PriceSchedule(directory.spec("quad"))})
+    views = {"quad": ResourceView(spec=directory.spec("quad"),
+                                  est_job_seconds=1800.0)}
+    req = UserRequirements(deadline=HOUR, budget=2.5, user="u")
+    quote = negotiate_contract(0.0, req, 8, trade, views)
+    assert quote.n_resources == 1
+    assert quote.est_cost == pytest.approx(2.0)      # was 8.0 pre-fix
+    assert quote.est_completion == pytest.approx(HOUR)
+    assert quote.feasible                            # 2.0 <= budget 2.5
+
+
 def test_contract_negotiation_modes():
     eng = build_engine(10)
     eng._refresh_views()

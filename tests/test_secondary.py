@@ -1,0 +1,413 @@
+"""Secondary capacity market + clearing-history price discovery.
+
+Covers the PR-5 economy loop: reservation transfer (admission quotas
+preserved), resale listing/fill with exact GridBank mirroring,
+commitment fees as the wasted-contract-spend measure, resale offers
+merged into the primary price sources, the discovery EMA on
+``PriceSchedule``, and whole-market determinism + reconciliation with
+everything switched on at once.
+"""
+import math
+
+import pytest
+
+from repro.core import (AdmissionError, BudgetLedger, ClearingHistory,
+                        GridBank, Marketplace, MarketUser, PriceSchedule,
+                        ResourceDirectory, ResourceSpec, SecondaryMarket,
+                        TradeFederation, TradeServer, mixed_auction_market)
+
+HOUR = 3600.0
+
+
+def _spec(name, site, price, slots=1, chips=1):
+    return ResourceSpec(name=name, site=site, chips=chips, slots=slots,
+                        base_price=price, peak_multiplier=1.0,
+                        mtbf_hours=float("inf"))
+
+
+def _grid(specs, **server_kw):
+    d = ResourceDirectory()
+    for s in specs:
+        d.register(s)
+    schedules = {n: PriceSchedule(d.spec(n)) for n in d.all_names()}
+    fed = TradeFederation.from_directory(d, schedules, **server_kw)
+    return d, fed
+
+
+def _market(fed, bank=None, **kw):
+    kw.setdefault("release_fee", 0.25)
+    kw.setdefault("resale", True)
+    kw.setdefault("ask_fraction", 0.2)
+    return SecondaryMarket(fed, bank if bank is not None else GridBank(),
+                           **kw)
+
+
+# ---------------------------------------------------------------------------
+# reservation transfer
+# ---------------------------------------------------------------------------
+
+def test_transfer_preserves_window_price_and_bumps_book_version():
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    server = fed.servers["X"]
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.4)
+    v0 = server.book_version
+    out = server.transfer(r.reservation_id, "bob", HOUR)
+    assert out is r                              # same reservation object
+    assert out.user == "bob"
+    assert out.locked_price == pytest.approx(0.4)
+    assert out.end == pytest.approx(4 * HOUR)
+    assert server.book_version > v0              # quote caches must refresh
+    # the buyer now draws the locked price; the seller pays spot again
+    assert fed.effective_price("m0", "bob", 2 * HOUR) == pytest.approx(0.4)
+    assert fed.effective_price("m0", "alice", 2 * HOUR) == pytest.approx(1.0)
+
+
+def test_transfer_enforces_buyer_admission_quota():
+    """A resale is not a quota side-door: the buyer must clear the same
+    per-user cap a fresh reservation would."""
+    d, fed = _grid([_spec("m0", "X", 1.0), _spec("m1", "X", 1.0)],
+                   max_reservations_per_user=1)
+    server = fed.servers["X"]
+    ra = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0)
+    fed.reserve("m1", "bob", 0.0, 4 * HOUR, 0.0)     # bob at his quota
+    with pytest.raises(AdmissionError):
+        server.transfer(ra.reservation_id, "bob", HOUR)
+    assert ra.user == "alice"                        # untouched on refusal
+    out = server.transfer(ra.reservation_id, "carol", HOUR)
+    assert out.user == "carol"
+
+
+def test_transfer_of_expired_or_cancelled_reservation_returns_none():
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    server = fed.servers["X"]
+    r = fed.reserve("m0", "alice", 0.0, HOUR, 0.0)
+    assert server.transfer(r.reservation_id, "bob", 2 * HOUR) is None
+    r2 = fed.reserve("m0", "alice", 3 * HOUR, 4 * HOUR, 2 * HOUR)
+    fed.cancel(r2.reservation_id)
+    assert server.transfer(r2.reservation_id, "bob", 2 * HOUR) is None
+
+
+# ---------------------------------------------------------------------------
+# listing, fill, and exact bank mirroring
+# ---------------------------------------------------------------------------
+
+def test_fill_transfers_reservation_and_mirrors_bank_exactly():
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0, chips=2)])
+    sec = _market(fed, bank, ask_fraction=0.5)
+    la, lb = BudgetLedger(budget=100.0), BudgetLedger(budget=100.0)
+    sec.register_user("alice", la)
+    sec.register_user("bob", lb)
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.4)
+    assert sec.shed(r.reservation_id, "alice", 0.0) == "listed"
+    lst = sec.listings[r.reservation_id]
+    assert lst.ask_rate == pytest.approx(0.2)        # 0.5 x locked
+    assert lst.all_in_rate == pytest.approx(0.6)
+    # fill at t=2h: remaining-window pro-rata = 0.2 x 2 chips x 2h = 0.8
+    out = sec.buy(r.reservation_id, "bob", 2 * HOUR)
+    assert out is not None and out.user == "bob"
+    assert lst.lump(2 * HOUR) == pytest.approx(0.8)
+    assert lb.settled == pytest.approx(0.8)          # buyer charged
+    assert la.settled == pytest.approx(-0.8)         # seller refunded
+    assert bank.user_spend("bob") == pytest.approx(0.8)
+    assert bank.user_spend("alice") == pytest.approx(-0.8)
+    assert bank.owner_revenue("X") == pytest.approx(0.0)   # net zero
+    assert bank.kind_total("resale") == pytest.approx(0.0)
+    bank.reconcile({"alice": la, "bob": lb})         # exact, no tolerance
+    assert not sec.listings                          # off the book
+    assert sec.fills and sec.fills[0].lump == pytest.approx(0.8)
+
+
+def test_buyer_cannot_fill_own_listing_and_gone_listings_fail_softly():
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    sec = _market(fed, bank)
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0)
+    sec.shed(r.reservation_id, "alice", 0.0)
+    assert sec.buy(r.reservation_id, "alice", HOUR) is None
+    fed.cancel(r.reservation_id)                 # voided under the listing
+    assert sec.buy(r.reservation_id, "bob", HOUR) is None
+    assert r.reservation_id not in sec.listings  # dropped on discovery
+
+
+def test_release_charges_commitment_fee_as_wasted_spend():
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0, chips=2)])
+    sec = _market(fed, bank, resale=False, release_fee=0.25)
+    led = BudgetLedger(budget=100.0)
+    sec.register_user("alice", led)
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.5)
+    assert sec.shed(r.reservation_id, "alice", 2 * HOUR) == "released"
+    # fee = 0.25 x 0.5 G$/ch-h x 2 chips x 2h remaining = 0.5
+    assert sec.wasted_spend == pytest.approx(0.5)
+    assert led.settled == pytest.approx(0.5)
+    assert bank.kind_total("idle") == pytest.approx(0.5)
+    assert bank.owner_revenue("X") == pytest.approx(0.5)  # owner keeps fees
+    bank.reconcile({"alice": led})
+    assert fed.servers["X"].reservations == []   # capacity handed back
+
+
+def test_unsold_listing_pays_fee_over_listed_idle_span_on_sweep():
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0, chips=1)])
+    sec = _market(fed, bank, release_fee=0.25, ask_fraction=0.2)
+    led = BudgetLedger(budget=100.0)
+    sec.register_user("alice", led)
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=1.0)
+    sec.shed(r.reservation_id, "alice", HOUR)    # listed at t=1h
+    assert sec.sweep(2 * HOUR) == pytest.approx(0.0)   # still live: no fee
+    # window lapses unsold: fee over the listed-idle span [1h, 4h)
+    fee = sec.sweep(5 * HOUR)
+    assert fee == pytest.approx(0.25 * 1.0 * 1 * 3.0)
+    assert sec.wasted_spend == pytest.approx(fee)
+    assert not sec.listings
+    bank.reconcile({"alice": led})
+
+
+def test_reclaim_pulls_own_listing_back_without_fee():
+    """A seller whose re-plan wants the resource back gets their unsold
+    listing off the book fee-free — a window back in use is not idle,
+    and must not be sellable or expiry-billed out from under them."""
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    sec = _market(fed, bank, release_fee=0.25)
+    led = BudgetLedger(budget=100.0)
+    sec.register_user("alice", led)
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.5)
+    sec.shed(r.reservation_id, "alice", HOUR)
+    v = sec.version
+    assert sec.reclaim("m0", "alice", 2 * HOUR) == 1
+    assert sec.version > v                       # quote caches refresh
+    assert not sec.listings
+    # the reservation is still alice's, still priced at the lock
+    assert fed.effective_price("m0", "alice", 3 * HOUR) == pytest.approx(0.5)
+    # and no fee ever lands: the window is in use, not idle
+    assert sec.finalize(5 * HOUR) == pytest.approx(0.0)
+    assert led.settled == pytest.approx(0.0)
+    # reclaim never touches rivals' listings
+    r2 = fed.reserve("m0", "bob", 4 * HOUR, 6 * HOUR, 3.5 * HOUR)
+    sec.shed(r2.reservation_id, "bob", 4 * HOUR)
+    assert sec.reclaim("m0", "alice", 4 * HOUR) == 0
+    assert r2.reservation_id in sec.listings
+
+
+def test_negotiate_contract_prices_resale_bids_but_never_reserves_them():
+    """A resale listing can win the contract-mode quote, but accepting
+    must not turn it into a fresh reservation: on a full queue that
+    would crash, and anywhere it would pay the seller's premium to the
+    owner.  Resale-backed bids are priced, not locked."""
+    from repro.core import ResourceView, UserRequirements, negotiate_contract
+    d, fed = _grid([_spec("m0", "X", 2.0)])      # 1 slot
+    sec = _market(fed, ask_fraction=0.2)
+    fed.servers["X"].secondary = sec
+    # the seller's listed reservation fills the only slot of the window
+    r = fed.reserve("m0", "alice", 0.0, 40 * HOUR, 0.0, locked_price=0.5)
+    sec.shed(r.reservation_id, "alice", 0.0)
+    views = {"m0": ResourceView(spec=d.spec("m0"), est_job_seconds=600.0)}
+    req = UserRequirements(deadline=30 * HOUR, budget=1e6, user="bob")
+    bids = fed.solicit_bids(0.0, "bob", lambda s: 600.0)
+    assert any(b.resale_rid for b in bids)       # the listing is on offer
+    quote = negotiate_contract(0.0, req, 10, fed.servers["X"], views,
+                               accept=True)
+    assert quote.feasible                        # and no AdmissionError
+    # nothing was double-booked: the seller's reservation is untouched
+    # and the only booked window is still theirs
+    assert [x.user for x in fed.servers["X"].reservations] == ["alice"]
+
+
+def test_voided_listing_finalizes_without_fee():
+    """Churn voids the contract under a listing: the capacity was taken
+    from the holder, not idled by them — finalize drops the listing but
+    charges no commitment fee (the breach rebate settled that loss)."""
+    bank = GridBank()
+    d, fed = _grid([_spec("m0", "X", 1.0)])
+    sec = _market(fed, bank, release_fee=0.25)
+    led = BudgetLedger(budget=100.0)
+    sec.register_user("alice", led)
+    r = fed.reserve("m0", "alice", 0.0, 8 * HOUR, 0.0)
+    sec.shed(r.reservation_id, "alice", HOUR)
+    fed.cancel(r.reservation_id)                 # the void, mid-window
+    assert sec.finalize(2 * HOUR) == pytest.approx(0.0)
+    assert sec.wasted_spend == pytest.approx(0.0)
+    assert led.settled == pytest.approx(0.0)
+    assert not sec.listings
+    # but a listing STILL LIVE at an early finalize does pay: the holder
+    # chose to idle it from listing time to its end
+    r2 = fed.reserve("m0", "alice", 2 * HOUR, 6 * HOUR, 2 * HOUR)
+    sec.shed(r2.reservation_id, "alice", 2 * HOUR)
+    fee = sec.finalize(3 * HOUR)
+    assert fee == pytest.approx(0.25 * r2.locked_price * 1 * 4.0)
+
+
+def test_resale_offers_merge_into_solicit_bids():
+    d, fed = _grid([_spec("m0", "X", 2.0)])
+    sec = _market(fed, ask_fraction=0.2)
+    fed.servers["X"].secondary = sec
+    r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.5)
+    sec.shed(r.reservation_id, "alice", 0.0)
+    bids = fed.solicit_bids(HOUR, "bob", lambda spec: 600.0)
+    prices = sorted(b.chip_hour_price for b in bids)
+    assert prices[0] == pytest.approx(0.6)       # the resale offer leads
+    assert any(b.available_slots == 1 and b.chip_hour_price
+               == pytest.approx(0.6) for b in bids)
+    # the seller never sees their own listing quoted back at them
+    own = fed.solicit_bids(HOUR, "alice", lambda spec: 600.0)
+    assert all(b.chip_hour_price != pytest.approx(0.6) for b in own)
+
+
+# ---------------------------------------------------------------------------
+# price discovery
+# ---------------------------------------------------------------------------
+
+def test_discovery_ema_nudges_posted_base_toward_clearing():
+    spec = _spec("m0", "X", 2.0)
+    ps = PriceSchedule(spec, discovery_gain=0.5, discovery_band=0.5)
+    for _ in range(40):
+        ps.observe_clearing(0.0, 1.5)            # market clears below list
+    assert ps.base_price == pytest.approx(1.5, rel=1e-6)
+    assert ps.chip_hour_price(0.0) == pytest.approx(1.5, rel=1e-6)
+
+
+def test_discovery_drift_bounded_by_band():
+    spec = _spec("m0", "X", 2.0)
+    ps = PriceSchedule(spec, discovery_gain=0.5, discovery_band=0.25)
+    for _ in range(100):
+        ps.observe_clearing(0.0, 0.01)           # absurdly low clearing
+    assert ps.base_price == pytest.approx(2.0 * 0.75, rel=1e-6)
+    for _ in range(100):
+        ps.observe_clearing(0.0, 50.0)           # absurdly high clearing
+    assert ps.base_price == pytest.approx(2.0 * 1.25, rel=1e-6)
+
+
+def test_discovery_backs_out_time_of_day_factors():
+    """A peak-hour trade must not drag the base around just because the
+    peak multiplier inflated both sides: clearing exactly AT the posted
+    peak price implies the base is already right."""
+    spec = ResourceSpec(name="m0", site="X", chips=1, base_price=2.0,
+                        peak_multiplier=3.0, mtbf_hours=float("inf"))
+    ps = PriceSchedule(spec, discovery_gain=0.5)
+    ps.observe_clearing(12 * HOUR, 6.0)          # 12:00 peak: posted is 6.0
+    assert ps.base_price == pytest.approx(2.0)
+
+
+def test_discovery_off_means_frozen_base():
+    ps = PriceSchedule(_spec("m0", "X", 2.0))    # default gain 0
+    ps.observe_clearing(0.0, 0.5)
+    assert ps.base_price == pytest.approx(2.0)
+
+
+def test_clearing_history_gap_by_observation():
+    h = ClearingHistory()
+    h.append(0.0, "a", 1.0, 2.0, "auction")      # gap 0.5
+    h.append(1.0, "a", 1.0, 1.25, "auction")     # gap 0.2
+    h.append(2.0, "b", 1.0, 1.0, "auction")      # gap 0.0
+    h.append(3.0, "a", 1.0, 1.0, "resale")       # other source: ignored
+    gaps = h.gap_by_observation()
+    assert gaps[0] == pytest.approx((0.5 + 0.0) / 2)
+    assert gaps[1] == pytest.approx(0.2)
+    assert len(h.for_resource("a")) == 3
+    assert h.last_price("a") == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# whole-market: determinism, reconciliation, the closed loop
+# ---------------------------------------------------------------------------
+
+def _resale_market(n_users=8, resale=True, gain=0.2, seed=11):
+    return mixed_auction_market(
+        n_users, n_machines=24, seed=seed, n_jobs=50,
+        est_seconds=2700.0, deadline_h=16.0, budget=10000.0,
+        auction_round=1800.0, auction_window=4 * HOUR,
+        release_fee=0.25, resale=resale, ask_fraction=0.15,
+        discovery_gain=gain)
+
+
+def test_resale_market_same_seed_byte_identical():
+    r1, r2 = _resale_market().run(), _resale_market().run()
+    assert r1.stable_repr() == r2.stable_repr()
+    assert "secondary=" in r1.stable_repr()      # the new section is pinned
+    r3 = _resale_market(seed=12).run()
+    assert r1.stable_repr() != r3.stable_repr()
+
+
+def test_resale_market_reconciles_exactly_with_all_flows():
+    """Usage settlements, kill settlements, resale lumps (both signs),
+    commitment fees and discovery-adjusted quotes all in one run — and
+    the bank still balances against every broker ledger exactly."""
+    market = _resale_market()
+    rep = market.run()
+    assert rep.total_done == rep.total_jobs
+    ledgers = {u.name: e.ledger for u, e in zip(market.users,
+                                                market.engines)}
+    total = market.bank.reconcile(ledgers)
+    assert total == pytest.approx(
+        math.fsum(l.settled for l in ledgers.values()))
+    # resale entries net to zero by construction
+    assert market.bank.kind_total("resale") == pytest.approx(0.0, abs=1e-9)
+    # the report carries what the run measured
+    assert rep.resale_enabled
+    assert rep.wasted_spend == pytest.approx(market.secondary.wasted_spend)
+    # reports were refreshed after finalize: spend equals the ledger
+    for user, engine in zip(market.users, market.engines):
+        assert engine.report.total_cost == engine.ledger.settled
+
+
+def test_resale_reduces_wasted_contract_spend_same_seed():
+    off = _resale_market(resale=False)
+    on = _resale_market(resale=True)
+    r_off, r_on = off.run(), on.run()
+    assert r_off.wasted_spend > 0.0
+    assert r_on.wasted_spend < r_off.wasted_spend
+    assert r_on.resales > 0                      # fills actually happened
+
+
+def test_discovery_gap_shrinks_monotonically_in_market_run():
+    market = _resale_market(gain=0.2)
+    market.run()
+    gaps = market.history.gap_by_observation()
+    assert len(gaps) >= 3
+    assert all(b <= a + 1e-9 for a, b in zip(gaps, gaps[1:])), gaps
+    assert gaps[-1] < gaps[0]
+
+
+def test_churn_rebate_follows_resold_window_to_its_buyer():
+    """A site departs after a resale fill: the breach rebate for the
+    voided window must reach the BUYER who holds it, not the seller who
+    already pocketed the lump."""
+    specs = [_spec("a0", "A", 1.0), _spec("b0", "B", 1.0)]
+    market = Marketplace(specs=specs, seed=0, release_fee=0.25,
+                         resale=True, ask_fraction=0.2)
+    market.add_user(MarketUser(name="seller", deadline=12 * HOUR,
+                               budget=1e4, strategy="auction", n_jobs=1))
+    market.add_user(MarketUser(name="buyer", deadline=12 * HOUR,
+                               budget=1e4, n_jobs=1))
+    c = market.auction_house._strike("seller", "a0", "A", 0.5, 1,
+                                     0.0, 8 * HOUR, via="auction")
+    rid = c.reservation_ids[0]
+    assert market.secondary.shed(rid, "seller", 0.0) == "listed"
+    assert market.secondary.buy(rid, "buyer", 0.0) is not None
+    seller_led = market.engines[0].ledger
+    buyer_led = market.engines[1].ledger
+    lump = market.secondary.fills[0].lump
+    assert buyer_led.settled == pytest.approx(lump)
+    assert market._site_leaves("A", rejoin_at=24 * HOUR)
+    # rebate = churn_rebate x remaining value, credited to the buyer
+    rebate = market.refunds
+    assert rebate > 0.0
+    assert buyer_led.settled == pytest.approx(lump - rebate)
+    assert seller_led.settled == pytest.approx(-lump)   # lump only, no rebate
+    ledgers = {"seller": seller_led, "buyer": buyer_led}
+    market.bank.reconcile(ledgers)                      # still exact
+
+
+def test_default_market_has_no_secondary_machinery():
+    """The whole subsystem is opt-in: a default marketplace carries no
+    secondary market, no fees, and an unchanged stable_repr shape (the
+    golden-equivalence hashes pin the bytes themselves)."""
+    market = Marketplace(n_machines=4, seed=0)
+    market.add_user(MarketUser(name="u", deadline=12 * HOUR, budget=1e4,
+                               n_jobs=2))
+    rep = market.run()
+    assert market.secondary is None
+    assert not rep.resale_enabled and rep.wasted_spend == 0.0
+    assert "secondary=" not in rep.stable_repr()
