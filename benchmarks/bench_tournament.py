@@ -1,0 +1,239 @@
+"""Adversarial strategy tournament: every registered strategy, one
+shared market, four scenario regimes.
+
+The strategy zoo (``repro.core.strategies``) claims each policy earns
+its keep somewhere in the economy.  This bench makes the claim
+measurable: one broker per registered strategy — identical deadline,
+budget and workload, so the *policy* is the only difference — all
+competing in the SAME market for the same machines, across four
+regimes:
+
+* **posted**  — plain posted-price grid (the PR-1 economy);
+* **auction** — frequent double-auction clearing rounds + contract-net
+  (negotiating strategies can undercut the price board);
+* **churn**   — sites leave/rejoin under a stale-TTL GIS with machine
+  failures (reputation has something to observe);
+* **resale**  — secondary market with commitment fees and price
+  discovery (scavengers have listings to drain).
+
+Each (scenario, strategy) cell reports deadline-hit and G$/job; the
+aggregate table ranks strategies by hit rate then cost.  ``GridBank``
+must reconcile exactly against every broker ledger in every scenario —
+a strategy that breaks the books fails the bench, and CI.
+
+    PYTHONPATH=src python -m benchmarks.bench_tournament           # full
+    PYTHONPATH=src python -m benchmarks.bench_tournament --smoke   # CI
+
+Results land in ``BENCH_tournament.json``.  Smoke mode shrinks the
+workload, re-checks same-seed determinism and rewrites the committed
+JSON's ``smoke`` section.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import (MarketUser, Marketplace, available_strategies)
+
+HOUR = 3600.0
+
+SEED = 17
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_tournament.json")
+
+#: per-broker workload: identical for every strategy — fairness is the
+#: whole point of the tournament
+FULL = dict(n_machines=16, n_jobs=24, deadline_h=14.0, budget=9_000.0,
+            est_seconds=1800.0)
+SMOKE = dict(n_machines=10, n_jobs=8, deadline_h=14.0, budget=3_000.0,
+             est_seconds=1800.0)
+
+#: the four regimes: (market kwargs, run kwargs, machine-pool scale).
+#: resale runs on a scarcer grid — contention is what makes brokers
+#: shed contracted windows and rivals drain the listings
+SCENARIOS = {
+    "posted": (dict(), dict(), 1.0),
+    "auction": (dict(auction_round=1800.0, auction_window=4 * HOUR),
+                dict(), 1.0),
+    "churn": (dict(gis_ttl=900.0, churn_mean_uptime_h=4.0,
+                   churn_mean_downtime_h=1.0),
+              dict(churn=True, failures=True), 1.0),
+    "resale": (dict(release_fee=0.25, resale=True, ask_fraction=0.15,
+                    discovery_gain=0.2, auction_round=1800.0,
+                    auction_window=4 * HOUR),
+               dict(), 0.75),
+}
+
+
+def build_market(scenario: str, size: dict, seed: int = SEED
+                 ) -> Marketplace:
+    """One broker per registered strategy, same deadline/budget/jobs,
+    one shared grid.  Broker name == strategy name, so reports read as
+    a leaderboard."""
+    market_kw, _, machines_frac = SCENARIOS[scenario]
+    n_machines = max(6, int(size["n_machines"] * machines_frac))
+    market = Marketplace(n_machines=n_machines, seed=seed, **market_kw)
+    for strat in available_strategies():
+        market.add_user(MarketUser(
+            name=strat, deadline=size["deadline_h"] * HOUR,
+            budget=size["budget"], strategy=strat,
+            n_jobs=size["n_jobs"], est_seconds=size["est_seconds"]))
+    return market
+
+
+def run_scenario(scenario: str, size: dict) -> dict:
+    _, run_kw, _ = SCENARIOS[scenario]
+    market = build_market(scenario, size)
+    t0 = time.time()
+    rep = market.run(**run_kw)
+    wall = time.time() - t0
+    # the acceptance criterion CI enforces: NO strategy may break the
+    # double-entry books, in ANY regime
+    ledgers = {u.name: e.ledger for u, e in zip(market.users,
+                                                market.engines)}
+    market.bank.reconcile(ledgers)
+    rows = []
+    for out in rep.outcomes:
+        rows.append({
+            "strategy": out.user,
+            "jobs": out.n_jobs, "done": out.n_done,
+            "met_deadline": bool(out.met_deadline),
+            "within_budget": bool(out.within_budget),
+            "spent": round(out.spent, 6),
+            "gdollar_per_job": (round(out.spent / out.n_done, 6)
+                                if out.n_done else None),
+            "completion_h": (round(out.completion_time / HOUR, 4)
+                             if out.completion_time != float("inf")
+                             else None),
+            "contracts": out.contracts_won,
+            "requeues": out.requeues,
+            "burned": out.resource_losses,
+        })
+    return {
+        "scenario": scenario, "wall_s": round(wall, 3),
+        "events": market.sim.events, "rows": rows,
+        "resales": rep.resales, "contracts": rep.contracts_struck,
+        "churn_events": len(rep.churn_trace),
+    }
+
+
+def aggregate(scenarios: list) -> dict:
+    """Cross-scenario leaderboard: deadline-hit rate, then G$/job."""
+    per = {}
+    for sc in scenarios:
+        for row in sc["rows"]:
+            s = per.setdefault(row["strategy"],
+                               dict(met=0, runs=0, spent=0.0, done=0,
+                                    jobs=0))
+            s["runs"] += 1
+            s["met"] += int(row["met_deadline"])
+            s["spent"] += row["spent"]
+            s["done"] += row["done"]
+            s["jobs"] += row["jobs"]
+    out = {}
+    for name, s in sorted(per.items()):
+        out[name] = {
+            "scenarios": s["runs"],
+            "deadline_hit_rate": round(s["met"] / max(s["runs"], 1), 4),
+            "gdollar_per_job": (round(s["spent"] / s["done"], 6)
+                                if s["done"] else None),
+            "done": s["done"], "jobs": s["jobs"],
+            "spent": round(s["spent"], 6),
+        }
+    return out
+
+
+def check_acceptance(scenarios: list, agg: dict, csv: bool) -> None:
+    names = available_strategies()
+    assert len(names) >= 6, f"registry too small: {names}"
+    for sc in scenarios:
+        got = sorted(r["strategy"] for r in sc["rows"])
+        assert got == names, (sc["scenario"], got)
+        for r in sc["rows"]:
+            assert r["gdollar_per_job"] is None or r["gdollar_per_job"] >= 0
+    # the regimes must actually exercise their machinery
+    by_name = {sc["scenario"]: sc for sc in scenarios}
+    if "auction" in by_name:
+        assert by_name["auction"]["contracts"] > 0, "no contracts struck"
+    if "churn" in by_name:
+        assert by_name["churn"]["churn_events"] > 0, "membership never churned"
+    if "resale" in by_name:
+        assert by_name["resale"]["resales"] > 0, "no resale fills"
+    if not csv:
+        print("\nstrategy       hit-rate   G$/job      done/jobs   spent")
+        ranked = sorted(agg.items(),
+                        key=lambda kv: (-kv[1]["deadline_hit_rate"],
+                                        kv[1]["gdollar_per_job"] or 0.0))
+        for name, s in ranked:
+            cpj = (f"{s['gdollar_per_job']:8.2f}"
+                   if s["gdollar_per_job"] is not None else "     n/a")
+            print(f"{name:14s} {s['deadline_hit_rate']:7.2f} {cpj}   "
+                  f"{s['done']:5d}/{s['jobs']:<5d} {s['spent']:10.2f}")
+
+
+def determinism_check(size: dict, csv: bool):
+    t0 = time.time()
+    r1 = build_market("resale", size).run()
+    r2 = build_market("resale", size).run()
+    wall = time.time() - t0
+    identical = r1.stable_repr() == r2.stable_repr()
+    if not csv:
+        print(f"same-seed tournament re-run byte-identical: {identical}")
+    if not identical:
+        raise AssertionError("tournament run is not seed-deterministic")
+    return [("tournament_determinism", wall * 1e6, int(identical))]
+
+
+def main(csv: bool = False, smoke: bool = False):
+    size = SMOKE if smoke else FULL
+    scenarios = []
+    if not csv:
+        print(f"tournament: {len(available_strategies())} strategies x "
+              f"{len(SCENARIOS)} scenarios, "
+              f"{size['n_jobs']} jobs each on {size['n_machines']} machines")
+    for name in SCENARIOS:
+        sc = run_scenario(name, size)
+        scenarios.append(sc)
+        if not csv:
+            met = sum(r["met_deadline"] for r in sc["rows"])
+            print(f"  {name:8s} wall={sc['wall_s']:6.2f}s "
+                  f"met={met}/{len(sc['rows'])} "
+                  f"contracts={sc['contracts']} resales={sc['resales']} "
+                  f"— books reconcile")
+    agg = aggregate(scenarios)
+    check_acceptance(scenarios, agg, csv)
+
+    if smoke:
+        doc = {}
+        if os.path.exists(OUT_PATH):
+            with open(OUT_PATH) as f:
+                doc = json.load(f)
+        doc["smoke"] = {"size": dict(size), "scenarios": scenarios,
+                        "per_strategy": agg}
+    else:
+        doc = {
+            "bench": "tournament",
+            "seed": SEED,
+            "size": dict(size),
+            "strategies": available_strategies(),
+            "scenarios": scenarios,
+            "per_strategy": agg,
+        }
+        if os.path.exists(OUT_PATH):
+            with open(OUT_PATH) as f:
+                doc["smoke"] = json.load(f).get("smoke", {})
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    if not csv:
+        print(f"wrote {OUT_PATH}")
+
+    results = [(f"tournament_{sc['scenario']}", sc["wall_s"] * 1e6,
+                sum(r["met_deadline"] for r in sc["rows"]))
+               for sc in scenarios]
+    return results + determinism_check(size, csv)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

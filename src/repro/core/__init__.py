@@ -33,6 +33,11 @@ from repro.core.secondary import (Clearing, ClearingHistory, ResaleFill,
                                   ResaleListing, SecondaryMarket)
 from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
                                   duration_model)
+from repro.core.strategies import (Strategy, StrategyContext,
+                                   available_strategies, cost_per_job,
+                                   strategy_class)
+from repro.core.strategies import create as create_strategy
+from repro.core.strategies import register as register_strategy
 from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
                                    DispatchCallbacks, Dispatcher,
                                    LocalExecutor, SimulatedExecutor,
@@ -54,9 +59,13 @@ __all__ = [
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
     "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
     "SecondaryMarket",
-    "SimulatedExecutor", "Simulator", "StagingProxy", "TradeFederation",
-    "TradeServer", "UserOutcome", "UserRequirements", "department_of",
+    "SimulatedExecutor", "Simulator", "StagingProxy", "Strategy",
+    "StrategyContext", "TradeFederation",
+    "TradeServer", "UserOutcome", "UserRequirements",
+    "available_strategies", "cost_per_job", "create_strategy",
+    "department_of",
     "duration_model", "gusto_like_testbed", "is_resource_fault",
     "load_events", "mixed_auction_market", "negotiate_contract",
-    "parse_plan", "replay", "standard_market", "substitute",
+    "parse_plan", "register_strategy", "replay", "standard_market",
+    "strategy_class", "substitute",
 ]

@@ -51,6 +51,7 @@ class GridBank:
         self._spend: Dict[str, float] = {}
         self._revenue: Dict[str, float] = {}
         self._pair: Dict[Tuple[str, str], float] = {}
+        self._owner_kind: Dict[Tuple[str, str], float] = {}
 
     # -- recording -----------------------------------------------------
     def record(self, *, t: float, user: str, owner: str, resource: str,
@@ -64,6 +65,8 @@ class GridBank:
         self._revenue[owner] = self._revenue.get(owner, 0.0) + amount
         key = (user, owner)
         self._pair[key] = self._pair.get(key, 0.0) + amount
+        ok = (owner, kind)
+        self._owner_kind[ok] = self._owner_kind.get(ok, 0.0) + amount
 
     # -- queries -------------------------------------------------------
     def users(self) -> List[str]:
@@ -99,6 +102,14 @@ class GridBank:
         for reserved-but-unused windows), and ``"resale"`` nets to zero
         by construction (every fill is a matched charge/refund pair)."""
         return math.fsum(e.amount for e in self.entries if e.kind == kind)
+
+    def owner_kind_total(self, owner: str, kind: str) -> float:
+        """Signed G$ one owner has moved under one entry kind — e.g.
+        ``owner_kind_total(site, "refund")`` is (minus) the breach
+        rebates the domain has paid back, the per-domain risk signal
+        reputation-aware brokers price resources by.  Indexed at
+        ``record`` time so every-tick reads stay O(1)."""
+        return self._owner_kind.get((owner, kind), 0.0)
 
     def total_refunds(self) -> float:
         """G$ owners have paid BACK to users (contract-breach rebates

@@ -440,11 +440,18 @@ class AuctionBroker:
     def __init__(self, house: AuctionHouse, user: str, *,
                  bid_discount: float = 1.0,
                  commit_fraction: float = 0.8,
-                 secondary=None):
+                 secondary=None,
+                 site_penalty: Optional[Callable[[str, float],
+                                                 float]] = None):
         self.house = house
         self.user = user
         self.bid_discount = bid_discount
         self.commit_fraction = commit_fraction
+        # optional risk markup per (site, t): reputation-aware bidders
+        # inflate a flaky domain's effective cost-per-job when steering
+        # the bid and shade the limit price accordingly (None = the
+        # historical behavior, exactly)
+        self.site_penalty = site_penalty
         # secondary market (repro.core.secondary): idle contracted
         # windows are listed for resale (or released for the commitment
         # fee) instead of silently cancelled
@@ -528,7 +535,10 @@ class AuctionBroker:
         # cost-per-job — the posted price the broker would otherwise pay
         # for window capacity there
         best_site, best_cpj, site_floor = "", math.inf, math.inf
+        best_markup = 0.0
         for site, server in fed.servers.items():
+            markup = (max(0.0, self.site_penalty(site, t))
+                      if self.site_penalty is not None else 0.0)
             for name in server.resources():
                 if name not in est_job_seconds:
                     continue
@@ -536,18 +546,21 @@ class AuctionBroker:
                     continue
                 q = server.forward_quote(name, t, self.user)
                 cpj = q * directory.spec(name).chips \
-                    * est_job_seconds[name] / HOUR
+                    * est_job_seconds[name] / HOUR * (1.0 + markup)
                 if cpj < best_cpj - 1e-12 or (abs(cpj - best_cpj) <= 1e-12
                                               and site < best_site):
                     best_site, best_cpj = site, cpj
                     site_floor = q
+                    best_markup = markup
         if not best_site or not math.isfinite(best_cpj):
             return None
 
         # bid the spot-equivalent value (truthful for a uniform-price
         # auction): the clearing midpoint, not the limit, sets the
-        # actual price, so wins always come in at-or-under spot
-        price = self.bid_discount * site_floor
+        # actual price, so wins always come in at-or-under spot — shaded
+        # down by the site's risk markup (capacity on a domain likely to
+        # void its contracts is worth less than its posted quote)
+        price = self.bid_discount * site_floor / (1.0 + best_markup)
         if price <= 0.0:
             return None
 

@@ -337,6 +337,11 @@ class GISClient:
         self.refreshes = 0
         self._snapshot: Optional[GISSnapshot] = None
         self._local_suspects: set = set()
+        # run-lifetime tally of dispatch-burn suspicions per resource:
+        # unlike _local_suspects it is never cleared on refresh — it is
+        # the broker's memory of how often this resource's advertised
+        # state turned out to be a lie (reputation strategies read it)
+        self._suspicion_counts: Dict[str, int] = {}
 
     def view(self, t: float) -> GISSnapshot:
         if (self._snapshot is None
@@ -353,6 +358,14 @@ class GISClient:
 
     def suspect(self, name: str) -> None:
         self._local_suspects.add(name)
+        self._suspicion_counts[name] = self._suspicion_counts.get(name,
+                                                                  0) + 1
+
+    def suspicion_count(self, name: str) -> int:
+        """How many dispatches this broker has burned on ``name`` over
+        the whole run — observed churn/failure history, as distinct
+        from the current (refresh-scoped) suspicion."""
+        return self._suspicion_counts.get(name, 0)
 
     def is_suspected(self, name: str) -> bool:
         """The broker's *belief* about ``name``: absent from the last

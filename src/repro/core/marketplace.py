@@ -50,6 +50,7 @@ from repro.core.resources import (ResourceDirectory, ResourceSpec,
 from repro.core.scheduler import SchedulerConfig
 from repro.core.secondary import ClearingHistory, SecondaryMarket
 from repro.core.simulator import ChurnProcess, FailureProcess, Simulator
+from repro.core.strategies import strategy_class
 
 HOUR = 3600.0
 
@@ -60,7 +61,7 @@ class MarketUser:
     name: str
     deadline: float                  # absolute virtual time
     budget: float                    # G$
-    strategy: str = "cost"           # cost | time | conservative | auction
+    strategy: str = "cost"           # any name in repro.core.strategies
     n_jobs: int = 50
     est_seconds: float = 1800.0      # per-job runtime on perf_factor=1
 
@@ -296,11 +297,13 @@ class Marketplace:
                 for i in range(user.n_jobs)]
         req = UserRequirements(deadline=user.deadline, budget=user.budget,
                                strategy=user.strategy, user=user.name)
-        # an "auction" user negotiates (double auction + contracts) on
-        # top of the cost-optimizing allocation loop
-        broker = (AuctionBroker(self.auction_house, user.name,
-                                secondary=self.secondary)
-                  if user.strategy == "auction" else None)
+        # strategies that negotiate (double auction + contracts) bring
+        # their own bidder; the registry decides, not a string compare
+        scls = strategy_class(user.strategy)
+        broker = (scls.make_auction_broker(self.auction_house, user.name,
+                                           secondary=self.secondary,
+                                           bank=self.bank)
+                  if scls.wants_auction_broker else None)
         engine = NimrodG(user.name, jobs, req, self.directory, self.trade,
                          dispatcher, sim=self.sim,
                          sched_cfg=sched_cfg or SchedulerConfig(),
@@ -309,7 +312,8 @@ class Marketplace:
                          secondary=(self.secondary
                                     if self.secondary is not None
                                     and self.secondary.resale else None),
-                         gis=self.gis, gis_ttl=self.gis_ttl)
+                         gis=self.gis, gis_ttl=self.gis_ttl,
+                         history=self.history)
         if self.secondary is not None:
             self.secondary.register_user(user.name, engine.ledger)
         self.users.append(user)

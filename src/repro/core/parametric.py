@@ -82,7 +82,7 @@ class NimrodG:
                  seed: int = 0, stop_sim_when_done: bool = True,
                  auction=None, bank=None, secondary=None,
                  gis: Optional[GridInformationService] = None,
-                 gis_ttl: float = 600.0):
+                 gis_ttl: float = 600.0, history=None):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -99,6 +99,7 @@ class NimrodG:
         self.auction = auction
         self.bank = bank
         self.secondary = secondary
+        self.history = history
         # discovery layer: with a GIS the broker plans against a cached,
         # TTL-stale snapshot (and pays for its staleness in burned
         # dispatches); without one it reads the directory — the legacy
@@ -110,6 +111,11 @@ class NimrodG:
         self.stop_sim_when_done = stop_sim_when_done
 
         self.advisor = ScheduleAdvisor(sched_cfg, requirements)
+        # strategies see the same economy hooks the engine trades
+        # through (all None on the bare single-user path)
+        self.advisor.bind_market(secondary=secondary, bank=bank,
+                                 history=history,
+                                 gis_client=self.gis_client)
         self.ledger = BudgetLedger(budget=requirements.budget)
         self.jobs: Dict[str, Job] = {
             s.job_id: Job(spec=s) for s in jobs}

@@ -9,7 +9,10 @@ The schedule advisor periodically re-plans against live grid state:
 3. *rate model*  — jobs/second each resource sustains: roofline-seeded
    estimate refined by an EMA of measured completions (the paper's
    "historical information, including job consumption rate");
-4. *selection*   — one of the three classic Nimrod/G strategies:
+4. *selection*   — a pluggable ``Strategy`` resolved from the registry
+   in ``repro.core.strategies`` by ``UserRequirements.strategy``.  The
+   three classic Nimrod/G policies live there (byte-identical to the
+   historical if/elif dispatch):
 
    * ``cost``          minimize G$ subject to the deadline: cheapest
                        resources first, just enough aggregate rate;
@@ -17,7 +20,10 @@ The schedule advisor periodically re-plans against live grid state:
                        add resources cheapest-per-job first while the
                        rate-weighted projected spend fits the budget;
    * ``conservative``  like ``cost`` but guarantees every unfinished job
-                       a budget share before committing a dispatch.
+                       a budget share before committing a dispatch;
+
+   alongside the economy-aware zoo (``auction``, ``reputation``,
+   ``adaptive``, ``scavenger``) — see the package docstrings.
 
 As the deadline tightens the cost strategy buys more (and more expensive)
 resources — exactly the paper's Figure 3 behaviour.
@@ -30,6 +36,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.economy import Bid, BudgetLedger, TradeServer, UserRequirements
 from repro.core.resources import ResourceDirectory, ResourceSpec
+from repro.core.strategies import Strategy, StrategyContext, create
+from repro.core.strategies import cost_per_job  # noqa: F401  (re-export)
 
 HOUR = 3600.0
 
@@ -89,10 +97,6 @@ class ResourceView:
         self.suspected = False
 
 
-def cost_per_job(view: ResourceView, price_chip_hour: float) -> float:
-    return price_chip_hour * view.spec.chips * view.est_job_seconds / HOUR
-
-
 @dataclasses.dataclass
 class AllocationDecision:
     allocate: List[str]
@@ -107,11 +111,34 @@ class AllocationDecision:
 class ScheduleAdvisor:
     """The pluggable scheduling policy (the paper exposes exactly this
     seam: "a user could build an alternative scheduler by using these
-    APIs")."""
+    APIs").  Policy lives in a ``Strategy`` resolved from the registry;
+    the advisor owns what every policy shares — live-view filtering,
+    the needed-rate computation, the canonical ranking, the
+    ``min_resources`` floor and the decision bookkeeping."""
 
-    def __init__(self, cfg: SchedulerConfig, requirements: UserRequirements):
+    def __init__(self, cfg: SchedulerConfig, requirements: UserRequirements,
+                 strategy: Optional[Strategy] = None):
         self.cfg = cfg
         self.req = requirements
+        # an unregistered strategy string fails HERE, at broker build
+        # time — not as a silent fall-through to the cost policy
+        self.strategy = (strategy if strategy is not None
+                         else create(requirements.strategy))
+        self._secondary = None
+        self._bank = None
+        self._history = None
+        self._gis_client = None
+
+    def bind_market(self, *, secondary=None, bank=None, history=None,
+                    gis_client=None) -> None:
+        """Attach the marketplace's economy hooks (resale book, grid
+        bank, clearing history, GIS client) so strategies can consult
+        them.  The single-user engine never calls this — every strategy
+        must work with the hooks at None."""
+        self._secondary = secondary
+        self._bank = bank
+        self._history = history
+        self._gis_client = gis_client
 
     # -- selection strategies ------------------------------------------------
 
@@ -140,11 +167,14 @@ class ScheduleAdvisor:
                 needed_rate=needed, projected_cost_per_job=math.inf,
                 feasible_time=False, feasible_budget=False)
 
-        if self.req.strategy == "time":
-            chosen = self._select_time_opt(ranked, live, prices,
-                                           remaining_jobs, ledger)
-        else:  # cost | conservative share the selection rule
-            chosen = self._select_cost_opt(ranked, live, prices, needed)
+        ctx = StrategyContext(
+            t=t, req=self.req, cfg=self.cfg, views=live, prices=prices,
+            remaining_jobs=remaining_jobs, ledger=ledger,
+            needed_rate=needed, current=set(current), held=set(held),
+            ranked=list(ranked), secondary=self._secondary,
+            bank=self._bank, history=self._history,
+            gis_client=self._gis_client)
+        chosen = self.strategy.select(ctx)
 
         if len(chosen) < self.cfg.min_resources:
             # prefer resources with free capacity when topping up
@@ -166,51 +196,11 @@ class ScheduleAdvisor:
             feasible_budget=(wcost * remaining_jobs <= ledger.remaining + 1e-9),
         )
 
-    def _select_cost_opt(self, ranked: Sequence[str],
-                         views: Dict[str, ResourceView],
-                         prices: Dict[str, float], needed: float) -> Set[str]:
-        chosen: Set[str] = set()
-        acc = 0.0
-        for name in ranked:
-            if acc >= needed:
-                break
-            if views[name].rate() <= 0:
-                continue             # fully contended: no free capacity
-            chosen.add(name)
-            acc += views[name].rate()
-        return chosen
-
-    def _select_time_opt(self, ranked: Sequence[str],
-                         views: Dict[str, ResourceView],
-                         prices: Dict[str, float], remaining_jobs: int,
-                         ledger: BudgetLedger) -> Set[str]:
-        chosen: Set[str] = set()
-        rate = 0.0
-        spend_rate = 0.0             # G$/s of the allocation
-        for name in ranked:
-            r = views[name].rate()
-            if r <= 0:
-                continue             # fully contended: no free capacity
-            c = cost_per_job(views[name], prices[name])
-            new_rate = rate + r
-            new_spend = spend_rate + r * c
-            projected = remaining_jobs * (new_spend / new_rate) \
-                if new_rate > 0 else math.inf
-            if projected <= ledger.remaining + 1e-9:
-                chosen.add(name)
-                rate, spend_rate = new_rate, new_spend
-        return chosen
-
     # -- per-dispatch budget guard -------------------------------------------
 
     def may_commit(self, est_cost: float, remaining_jobs: int,
                    ledger: BudgetLedger) -> bool:
-        if not ledger.can_commit(est_cost):
-            return False
-        if self.req.strategy == "conservative" and remaining_jobs > 0:
-            share = ledger.remaining / remaining_jobs
-            return est_cost <= share + 1e-9
-        return True
+        return self.strategy.may_commit(est_cost, remaining_jobs, ledger)
 
 
 # ---------------------------------------------------------------------------

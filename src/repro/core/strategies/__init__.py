@@ -1,0 +1,27 @@
+"""Pluggable broker strategies (see ``base`` for the registry API).
+
+Importing this package populates the registry with the built-in zoo:
+the three legacy Nimrod/G policies (``cost`` / ``time`` /
+``conservative``), the negotiating ``auction`` profile, and the
+economy-aware strategies built on the PR 2–5 machinery
+(``reputation``, ``adaptive``, ``scavenger``).
+"""
+from repro.core.strategies.base import (Strategy, StrategyContext,
+                                        accumulate_rate,
+                                        available_strategies, cost_per_job,
+                                        create, register, strategy_class,
+                                        unregister)
+# registration side-effects: each module @registers its class on import
+from repro.core.strategies import adaptive as _adaptive      # noqa: F401
+from repro.core.strategies import auction as _auction        # noqa: F401
+from repro.core.strategies import conservative as _cons      # noqa: F401
+from repro.core.strategies import cost as _cost              # noqa: F401
+from repro.core.strategies import reputation as _reputation  # noqa: F401
+from repro.core.strategies import scavenger as _scavenger    # noqa: F401
+from repro.core.strategies import time_opt as _time          # noqa: F401
+
+__all__ = [
+    "Strategy", "StrategyContext", "accumulate_rate",
+    "available_strategies", "cost_per_job", "create", "register",
+    "strategy_class", "unregister",
+]

@@ -1,0 +1,20 @@
+"""``auction`` — cost-style allocation plus a negotiation side-car.
+
+The allocation loop is identical to ``cost`` (negotiated contracts
+enter it through the effective prices and the ``held`` tie-break); what
+changes is the wiring: ``Marketplace.add_user`` attaches an
+``AuctionBroker`` that bids in the double auction and sheds idle
+contracted windows to the secondary market.
+"""
+from __future__ import annotations
+
+from repro.core.strategies.base import register
+from repro.core.strategies.cost import CostStrategy
+
+
+@register
+class AuctionStrategy(CostStrategy):
+    name = "auction"
+    legacy = False
+    wants_auction_broker = True
+    description = "cost selection + sealed bids into the double auction"

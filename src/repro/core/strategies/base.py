@@ -1,0 +1,172 @@
+"""Strategy plug-in seam: the paper's "a user could build an
+alternative scheduler by using these APIs", made literal.
+
+A ``Strategy`` owns the two policy decisions the broker delegates:
+
+* ``select(ctx)``   — which resources to hold this tick, given the
+  advisor's pre-computed market context;
+* ``may_commit``    — the per-dispatch budget guard (the conservative
+  policy's per-job share check lives here, not in the engine).
+
+``StrategyContext`` packages everything ``ScheduleAdvisor.decide``
+knows at re-plan time: the live (non-suspected) views, effective
+prices, the canonical cheapest-per-job ranking, the backlog, the
+ledger — plus the economy hooks PRs 2–5 added (resale book, bank,
+clearing history, GIS client) when the broker runs inside a
+marketplace.  The hooks are ``None`` on the bare single-user path, so
+every strategy must degrade gracefully without them.
+
+The registry maps ``UserRequirements.strategy`` strings to classes.
+Registering a strategy is all it takes to enter the conformance suite
+(``tests/test_strategies.py``) and the tournament bench — coverage by
+registration, not by edit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Dict, List, Optional, Sequence, Set,
+                    Type)
+
+if TYPE_CHECKING:  # import-time cycle: scheduler imports this package
+    from repro.core.economy import BudgetLedger, UserRequirements
+    from repro.core.scheduler import ResourceView, SchedulerConfig
+
+HOUR = 3600.0
+
+
+def cost_per_job(view: "ResourceView", price_chip_hour: float) -> float:
+    """G$ one job costs on ``view`` at ``price_chip_hour`` — the unit
+    every ranking below is denominated in."""
+    return price_chip_hour * view.spec.chips * view.est_job_seconds / HOUR
+
+
+@dataclasses.dataclass
+class StrategyContext:
+    """Everything a strategy may consult for one ``select`` call."""
+    t: float
+    req: "UserRequirements"
+    cfg: "SchedulerConfig"
+    views: Dict[str, "ResourceView"]     # live (non-suspected) only
+    prices: Dict[str, float]             # effective chip-hour prices
+    remaining_jobs: int
+    ledger: "BudgetLedger"
+    needed_rate: float                   # safety-margined jobs/s target
+    current: Set[str]                    # allocation entering the tick
+    held: Set[str]                       # contracted (pre-paid) resources
+    ranked: List[str]                    # canonical cheapest-per-job order
+    # economy hooks (None outside a marketplace / when the leg is off)
+    secondary: Optional[object] = None   # SecondaryMarket
+    bank: Optional[object] = None        # GridBank
+    history: Optional[object] = None     # ClearingHistory
+    gis_client: Optional[object] = None  # GISClient
+
+    def rank(self, key) -> List[str]:
+        """Re-rank the live views by a strategy-specific key.  The key
+        gets ``(ctx, name)``; ties MUST be broken deterministically, so
+        the name is always appended as the last sort component."""
+        return sorted(self.views, key=lambda n: (key(self, n), n))
+
+
+class Strategy:
+    """Base policy: subclasses override ``select`` (and optionally
+    ``may_commit`` / the auction-broker factory) and register under a
+    unique ``name`` — the string users put in
+    ``UserRequirements.strategy``."""
+
+    name: str = ""
+    #: the three original Nimrod/G policies, guarded byte-identical by
+    #: tests/test_golden_equivalence.py
+    legacy: bool = False
+    #: whether Marketplace.add_user should wire an AuctionBroker so the
+    #: engine also negotiates (double auction + contract-net)
+    wants_auction_broker: bool = False
+    description: str = ""
+
+    def select(self, ctx: StrategyContext) -> Set[str]:
+        """Return the resource names to hold this tick.  The advisor
+        applies the ``min_resources`` floor afterwards — a strategy may
+        legitimately return an empty set when nothing is worth buying."""
+        raise NotImplementedError
+
+    def may_commit(self, est_cost: float, remaining_jobs: int,
+                   ledger: "BudgetLedger") -> bool:
+        """Per-dispatch budget guard.  The ledger's ``can_commit`` is
+        the hard wall every policy must respect; subclasses may only
+        tighten it, never loosen it."""
+        return ledger.can_commit(est_cost)
+
+    @classmethod
+    def make_auction_broker(cls, house, user: str, *, secondary=None,
+                            bank=None):
+        """Factory for the engine's negotiation side-car (only called
+        when ``wants_auction_broker``).  The default is the plain
+        truthful bidder; strategies can shape bids (e.g. reputation
+        penalties) by overriding this."""
+        from repro.core.auctions import AuctionBroker
+        return AuctionBroker(house, user, secondary=secondary)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Strategy]] = {}
+
+
+def register(cls: Type[Strategy]) -> Type[Strategy]:
+    """Class decorator: add ``cls`` to the registry under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if cls.name in _REGISTRY and _REGISTRY[cls.name] is not cls:
+        raise ValueError(f"strategy {cls.name!r} already registered "
+                         f"by {_REGISTRY[cls.name].__name__}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def unregister(name: str) -> None:
+    """Remove a registry entry (tests registering throwaway strategies
+    clean up with this — production code never unregisters)."""
+    _REGISTRY.pop(name, None)
+
+
+def strategy_class(name: str) -> Type[Strategy]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def create(name: str) -> Strategy:
+    """Fresh instance per broker — strategies may keep per-broker state."""
+    return strategy_class(name)()
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared selection rules (the classic prefix accumulations)
+# ---------------------------------------------------------------------------
+
+def accumulate_rate(ranked: Sequence[str],
+                    views: Dict[str, "ResourceView"],
+                    needed: float) -> Set[str]:
+    """Walk ``ranked`` accumulating free rate until ``needed`` is met —
+    the cost-optimal rule, shared by every strategy that only changes
+    the *ordering*.  Skipping zero-rate entries (fully contended) keeps
+    the walk weakly monotone in ``needed``: a larger target can only
+    extend the chosen prefix."""
+    chosen: Set[str] = set()
+    acc = 0.0
+    for name in ranked:
+        if acc >= needed:
+            break
+        if views[name].rate() <= 0:
+            continue             # fully contended: no free capacity
+        chosen.add(name)
+        acc += views[name].rate()
+    return chosen

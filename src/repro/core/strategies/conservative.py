@@ -1,0 +1,26 @@
+"""``conservative`` — cost selection plus a per-job budget share guard.
+
+Like ``cost``, but before every dispatch it guarantees each unfinished
+job an equal share of the remaining budget: the broker never lets one
+expensive dispatch starve the backlog.  Original Nimrod/G behaviour,
+byte-for-byte.
+"""
+from __future__ import annotations
+
+from repro.core.strategies.base import register
+from repro.core.strategies.cost import CostStrategy
+
+
+@register
+class ConservativeStrategy(CostStrategy):
+    name = "conservative"
+    legacy = True
+    description = "cost selection; every job keeps its budget share"
+
+    def may_commit(self, est_cost, remaining_jobs, ledger) -> bool:
+        if not ledger.can_commit(est_cost):
+            return False
+        if remaining_jobs > 0:
+            share = ledger.remaining / remaining_jobs
+            return est_cost <= share + 1e-9
+        return True

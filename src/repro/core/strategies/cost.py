@@ -1,0 +1,23 @@
+"""``cost`` — minimize G$ subject to the deadline (paper §3).
+
+Cheapest resources per job first, just enough aggregate rate to hit the
+deadline with the safety margin.  This is the original Nimrod/G cost
+strategy, byte-for-byte: the canonical ranking is exactly the one the
+advisor precomputes, and selection is the shared prefix accumulation.
+"""
+from __future__ import annotations
+
+from typing import Set
+
+from repro.core.strategies.base import (Strategy, StrategyContext,
+                                        accumulate_rate, register)
+
+
+@register
+class CostStrategy(Strategy):
+    name = "cost"
+    legacy = True
+    description = "cheapest-per-job prefix meeting the deadline rate"
+
+    def select(self, ctx: StrategyContext) -> Set[str]:
+        return accumulate_rate(ctx.ranked, ctx.views, ctx.needed_rate)

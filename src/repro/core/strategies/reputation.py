@@ -1,0 +1,79 @@
+"""``reputation`` — discount domains by observed churn/failure history.
+
+Planning against a TTL-stale GIS view means cheap capacity on a flaky
+domain is not actually cheap: dispatches burn, in-flight work gets
+evicted, and voided contracts come back as breach refunds.  This
+strategy prices that in.  Each resource's cost-per-job is marked up by
+a risk premium built from three observations the broker already has:
+
+* its own dispatch outcomes on the resource (``ResourceView.failures``
+  vs completions — the paper's "historical information");
+* how often its GIS client had to *suspect* the resource since the run
+  started (burned dispatches on stale snapshots — churn seen from the
+  information layer);
+* the owning domain's breach record in the ``GridBank``: refunds paid
+  back as a fraction of gross revenue (a domain that keeps voiding
+  contracts is a domain that keeps leaving).
+
+Selection is then the classic cost prefix over the risk-adjusted
+ranking — so with no history (or outside a marketplace) it degrades to
+exactly ``cost``.  The auction side-car gets the same signal: its bids
+penalize flaky sites through ``AuctionBroker.site_penalty``.
+"""
+from __future__ import annotations
+
+from typing import Set
+
+from repro.core.strategies.base import (Strategy, StrategyContext,
+                                        accumulate_rate, cost_per_job,
+                                        register)
+
+
+def domain_breach_ratio(bank, site: str) -> float:
+    """Refunds the domain has paid back, as a fraction of its gross
+    take (revenue before refunds netted out).  0 with no history."""
+    if bank is None:
+        return 0.0
+    refunds = -bank.owner_kind_total(site, "refund")   # entries are < 0
+    if refunds <= 0.0:
+        return 0.0
+    gross = bank.owner_revenue(site) + refunds
+    return min(1.0, refunds / max(gross, 1e-9))
+
+
+@register
+class ReputationStrategy(Strategy):
+    name = "reputation"
+    wants_auction_broker = True
+    description = "cost ranking marked up by churn/failure reputation"
+
+    #: full risk (1.0) doubles a resource's effective cost-per-job
+    risk_premium = 1.0
+    #: each dispatch-time suspicion adds this much risk (capped at 1)
+    suspicion_weight = 0.25
+
+    def _risk(self, ctx: StrategyContext, name: str) -> float:
+        view = ctx.views[name]
+        fail = view.failures / (view.failures + view.completions + 1.0)
+        burns = 0.0
+        if ctx.gis_client is not None:
+            count = ctx.gis_client.suspicion_count(name)
+            burns = min(1.0, self.suspicion_weight * count)
+        breach = domain_breach_ratio(ctx.bank, view.spec.site)
+        return fail + burns + breach
+
+    def select(self, ctx: StrategyContext) -> Set[str]:
+        ranked = sorted(
+            ctx.views,
+            key=lambda n: (cost_per_job(ctx.views[n], ctx.prices[n])
+                           * (1.0 + self.risk_premium * self._risk(ctx, n)),
+                           n not in ctx.held, n))
+        return accumulate_rate(ranked, ctx.views, ctx.needed_rate)
+
+    @classmethod
+    def make_auction_broker(cls, house, user, *, secondary=None, bank=None):
+        from repro.core.auctions import AuctionBroker
+        penalty = ((lambda site, t: domain_breach_ratio(bank, site))
+                   if bank is not None else None)
+        return AuctionBroker(house, user, secondary=secondary,
+                             site_penalty=penalty)

@@ -1,0 +1,41 @@
+"""``scavenger`` — drain ``SecondaryMarket`` listings before paying
+spot.
+
+When resale is on, rival brokers list contracted windows they no longer
+need; the engine's dispatch path already buys a listing whenever it is
+the cheapest way onto an allocated resource.  This strategy steers the
+*allocation* there too: resources with a live resale listing (excluding
+the broker's own) rank ahead of everything else, cheapest-per-job
+within each group, and selection is the classic cost prefix over that
+ordering.  Listed capacity is someone's sunk commitment fee — buying it
+recycles paid-for slot-hours instead of minting fresh spot demand.
+Without a resale book (or with an empty one) the ranking collapses to
+the canonical order and the strategy degrades to exactly ``cost``.
+"""
+from __future__ import annotations
+
+from typing import Set
+
+from repro.core.strategies.base import (Strategy, StrategyContext,
+                                        accumulate_rate, cost_per_job,
+                                        register)
+
+
+@register
+class ScavengerStrategy(Strategy):
+    name = "scavenger"
+    description = "resale listings first, spot capacity only after"
+
+    def select(self, ctx: StrategyContext) -> Set[str]:
+        def has_listing(name: str) -> bool:
+            if ctx.secondary is None:
+                return False
+            return ctx.secondary.best_rate(name, ctx.t,
+                                           exclude=ctx.req.user) is not None
+
+        ranked = sorted(
+            ctx.views,
+            key=lambda n: (not has_listing(n),
+                           cost_per_job(ctx.views[n], ctx.prices[n]),
+                           n not in ctx.held, n))
+        return accumulate_rate(ranked, ctx.views, ctx.needed_rate)

@@ -1,0 +1,38 @@
+"""``time`` — minimize completion time subject to the budget (paper §3).
+
+Greedy in cheapest-per-job order: keep adding resources while the
+rate-weighted projected spend for the remaining backlog still fits the
+remaining budget.  Original Nimrod/G time strategy, byte-for-byte.
+"""
+from __future__ import annotations
+
+import math
+from typing import Set
+
+from repro.core.strategies.base import (Strategy, StrategyContext,
+                                        cost_per_job, register)
+
+
+@register
+class TimeStrategy(Strategy):
+    name = "time"
+    legacy = True
+    description = "maximal rate whose projected spend fits the budget"
+
+    def select(self, ctx: StrategyContext) -> Set[str]:
+        chosen: Set[str] = set()
+        rate = 0.0
+        spend_rate = 0.0             # G$/s of the allocation
+        for name in ctx.ranked:
+            r = ctx.views[name].rate()
+            if r <= 0:
+                continue             # fully contended: no free capacity
+            c = cost_per_job(ctx.views[name], ctx.prices[name])
+            new_rate = rate + r
+            new_spend = spend_rate + r * c
+            projected = ctx.remaining_jobs * (new_spend / new_rate) \
+                if new_rate > 0 else math.inf
+            if projected <= ctx.ledger.remaining + 1e-9:
+                chosen.add(name)
+                rate, spend_rate = new_rate, new_spend
+        return chosen

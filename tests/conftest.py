@@ -8,8 +8,107 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
+from repro.core import (GridBank, GridInformationService, MarketUser,  # noqa: E402
+                        Marketplace, PriceSchedule, ResourceDirectory,
+                        ResourceSpec, SecondaryMarket, TradeFederation)
+
+HOUR = 3600.0
+
 
 @pytest.fixture(scope="session")
 def local_mesh():
     from repro.launch.mesh import make_local_mesh
     return make_local_mesh()
+
+
+# ---------------------------------------------------------------------------
+# shared grid/market builders — the setup test_gis / test_secondary /
+# test_marketplace / test_strategies used to duplicate.  Plain functions
+# (importable from conftest for module-level helpers) with fixture
+# wrappers below for tests that prefer injection.
+# ---------------------------------------------------------------------------
+
+def make_spec(name, site, department="", *, price=1.0, slots=1, chips=1,
+              perf=1.0, users=()):
+    """A reliable (never-failing, flat-price) resource — the economy
+    tests' default, so price/fee arithmetic stays exact."""
+    return ResourceSpec(name=name, site=site, department=department,
+                        chips=chips, slots=slots, base_price=price,
+                        perf_factor=perf, peak_multiplier=1.0,
+                        mtbf_hours=float("inf"),
+                        authorized_users=tuple(users))
+
+
+def make_gis(specs, **gis_kw):
+    """Directory + information service with every spec registered at
+    t=0."""
+    directory = ResourceDirectory()
+    for s in specs:
+        directory.register(s)
+    gis = GridInformationService(directory, **gis_kw)
+    for s in specs:
+        gis.register(s, 0.0)
+    return directory, gis
+
+
+def make_federation(specs, **server_kw):
+    """Directory + per-site trade-server federation (flat schedules)."""
+    directory = ResourceDirectory()
+    for s in specs:
+        directory.register(s)
+    schedules = {n: PriceSchedule(directory.spec(n))
+                 for n in directory.all_names()}
+    fed = TradeFederation.from_directory(directory, schedules, **server_kw)
+    return directory, fed
+
+
+def make_secondary(fed, bank=None, **kw):
+    """A resale-enabled secondary market with the tests' default fees."""
+    kw.setdefault("release_fee", 0.25)
+    kw.setdefault("resale", True)
+    kw.setdefault("ask_fraction", 0.2)
+    return SecondaryMarket(fed, bank if bank is not None else GridBank(),
+                           **kw)
+
+
+def tight_specs(n=3, slots=1, perf=1.0):
+    """A deliberately scarce grid: n reliable identical machines."""
+    return [make_spec(f"m{i}", "x", slots=slots, chips=1, perf=perf)
+            for i in range(n)]
+
+
+def crowded_market(n_users=6, n_machines=3, seed=0, n_jobs=8,
+                   sched=None, **kw):
+    """More brokers than slots: the contention scenario."""
+    market = Marketplace(specs=tight_specs(n_machines), seed=seed, **kw)
+    for i in range(n_users):
+        market.add_user(MarketUser(
+            name=f"u{i}", deadline=30 * HOUR, budget=1e6,
+            strategy=("cost", "time")[i % 2], n_jobs=n_jobs,
+            est_seconds=1200.0), sched_cfg=sched)
+    return market
+
+
+@pytest.fixture
+def spec_factory():
+    return make_spec
+
+
+@pytest.fixture
+def gis_factory():
+    return make_gis
+
+
+@pytest.fixture
+def federation_factory():
+    return make_federation
+
+
+@pytest.fixture
+def secondary_factory():
+    return make_secondary
+
+
+@pytest.fixture
+def crowded_market_factory():
+    return crowded_market

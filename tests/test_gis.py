@@ -10,25 +10,10 @@ from repro.core import (ChurnProcess, FailureProcess, GISClient,
                         ResourceDirectory, ResourceSpec, SchedulerConfig,
                         department_of, standard_market)
 
+from conftest import make_gis as _gis
+from conftest import make_spec as _spec
+
 HOUR = 3600.0
-
-
-def _spec(name, site, department="", price=1.0, slots=1, chips=1,
-          users=()):
-    return ResourceSpec(name=name, site=site, department=department,
-                        chips=chips, slots=slots, base_price=price,
-                        peak_multiplier=1.0, mtbf_hours=float("inf"),
-                        authorized_users=users)
-
-
-def _gis(specs, **kw):
-    d = ResourceDirectory()
-    for s in specs:
-        d.register(s)
-    gis = GridInformationService(d, **kw)
-    for s in specs:
-        gis.register(s, 0.0)
-    return d, gis
 
 
 # ---------------------------------------------------------------------------

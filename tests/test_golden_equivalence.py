@@ -46,6 +46,18 @@ GOLDEN = {
         "99321471481ed18410849eb7b41991d823489f04efe9c55fa706d2444961f1ab",
 }
 
+#: captured on the pre-registry scheduler (hard-coded if/elif strategy
+#: dispatch, PR 1-5 lineage) — the extracted Strategy classes must
+#: reproduce every legacy policy byte-for-byte at default knobs
+LEGACY_GOLDEN = {
+    "cost":
+        "c3df808d91e11428e91126e051a5aea1658367a78e6de4b37da40a69dd47fa37",
+    "time":
+        "8f91481d991f7689df455c954114b54a2c2dc3bb2859d53ac0479744405acd0d",
+    "conservative":
+        "0e709b6604e6fd75926541ad7da182e2f3826e817e3764edca718bf604d2d810",
+}
+
 
 def _sha(s: str) -> str:
     return hashlib.sha256(s.encode()).hexdigest()
@@ -102,6 +114,17 @@ endtask
                             journal=Journal(jpath, fsync=False),
                             sched_cfg=SchedulerConfig(straggler_factor=1.2))
     return eng, jpath
+
+
+def _legacy_market(strategy: str):
+    return standard_market(3, n_machines=8, seed=13, n_jobs=8,
+                           strategies=(strategy,))
+
+
+@pytest.mark.parametrize("strategy", sorted(LEGACY_GOLDEN))
+def test_golden_legacy_strategy_reproduces_pre_registry_bytes(strategy):
+    rep = _legacy_market(strategy).run()
+    assert _sha(rep.stable_repr()) == LEGACY_GOLDEN[strategy]
 
 
 def test_golden_contention_market_reproduces_pre_index_bytes():
@@ -175,3 +198,7 @@ if __name__ == "__main__":
         out["journal_report"] = _sha(_canonical_report(rep))
     for k, v in out.items():
         print(f'    "{k}":\n        "{v}",')
+    print("LEGACY_GOLDEN:")
+    for strat in sorted(LEGACY_GOLDEN):
+        h = _sha(_legacy_market(strat).run().stable_repr())
+        print(f'    "{strat}":\n        "{h}",')

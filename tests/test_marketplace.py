@@ -5,26 +5,10 @@ import pytest
 from repro.core import (Marketplace, MarketUser, ResourceSpec,
                         SchedulerConfig, standard_market)
 
+from conftest import crowded_market as _crowded_market
+from conftest import tight_specs as _tight_specs
+
 HOUR = 3600.0
-
-
-def _tight_specs(n=3, slots=1, perf=1.0):
-    """A deliberately scarce grid: n reliable identical machines."""
-    return [ResourceSpec(name=f"m{i}", site="x", chips=1, slots=slots,
-                         perf_factor=perf, base_price=1.0,
-                         peak_multiplier=1.0, mtbf_hours=float("inf"))
-            for i in range(n)]
-
-
-def _crowded_market(n_users=6, n_machines=3, seed=0, n_jobs=8,
-                    sched=None, **kw):
-    market = Marketplace(specs=_tight_specs(n_machines), seed=seed, **kw)
-    for i in range(n_users):
-        market.add_user(MarketUser(
-            name=f"u{i}", deadline=30 * HOUR, budget=1e6,
-            strategy=("cost", "time")[i % 2], n_jobs=n_jobs,
-            est_seconds=1200.0), sched_cfg=sched)
-    return market
 
 
 def test_contention_loses_slot_races_and_requeues():

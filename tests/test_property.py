@@ -9,6 +9,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core import MarketUser, Marketplace, available_strategies
 from repro.core.economy import BudgetLedger, PriceSchedule
 from repro.core.plan import parse_plan
 from repro.core.resources import ResourceSpec
@@ -103,6 +104,86 @@ def test_ledger_never_negative(ops_list, budget):
     assert led.settled <= budget + 1e-6
     assert led.committed >= -1e-9
     assert led.remaining >= -1e-6
+
+
+# ---------------------------------------------------------------------------
+# the strategy zoo under market invariants (whole-market runs: keep
+# max_examples low — each example is a full simulation)
+# ---------------------------------------------------------------------------
+
+MARKET_EXAMPLES = dict(deadline=None, max_examples=5)
+
+
+def _zoo_market(seed, mix, *, budgets=None, **market_kw):
+    market = Marketplace(n_machines=5, seed=seed, **market_kw)
+    for i, strat in enumerate(mix):
+        market.add_user(MarketUser(
+            name=f"u{i}", deadline=(8.0 + 2.0 * (i % 3)) * HOUR,
+            budget=(budgets[i] if budgets else 400.0 * (1 + i % 3)),
+            strategy=strat, n_jobs=4, est_seconds=1200.0))
+    return market
+
+
+def _ledgers(market):
+    return {u.name: e.ledger
+            for u, e in zip(market.users, market.engines)}
+
+
+@given(st.integers(0, 10_000),
+       st.lists(st.sampled_from(available_strategies()),
+                min_size=2, max_size=4))
+@settings(**MARKET_EXAMPLES)
+def test_bank_reconciles_for_any_strategy_mix(seed, mix):
+    """Double-entry closure is strategy-independent: whatever policies
+    share the market, broker spend equals bank-recorded owner income
+    exactly (reconcile raises otherwise)."""
+    market = _zoo_market(seed, mix)
+    market.run()
+    total = market.bank.reconcile(_ledgers(market))
+    assert total == pytest.approx(
+        sum(e.ledger.settled for e in market.engines))
+
+
+@given(st.integers(0, 10_000),
+       st.lists(st.sampled_from(available_strategies()),
+                min_size=2, max_size=4),
+       st.booleans(), st.booleans())
+@settings(**MARKET_EXAMPLES)
+def test_spend_bounded_under_churn_and_resale(seed, mix, churn, resale):
+    """No broker's settled spend exceeds its budget, whatever the
+    interleaving of churn departures, failures, commitment fees,
+    rebates and resale fills — the per-dispatch commit guard is the
+    hard wall, and fee/refund flows never tunnel through it."""
+    market_kw = dict(gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                     churn_mean_downtime_h=1.0)
+    if resale:
+        market_kw.update(release_fee=0.25, resale=True,
+                         ask_fraction=0.15, auction_round=1800.0)
+    budgets = [30.0 * (1 + i % 4) for i in range(len(mix))]
+    market = _zoo_market(seed, mix, budgets=budgets, **market_kw)
+    market.run(churn=churn, failures=True)
+    market.bank.reconcile(_ledgers(market))
+    for user, eng in zip(market.users, market.engines):
+        assert eng.ledger.settled <= user.budget + 1e-6, (
+            user.strategy, eng.ledger.settled, user.budget)
+
+
+@given(st.integers(0, 10_000))
+@settings(deadline=None, max_examples=3)
+def test_same_seed_tournament_byte_identical(seed):
+    """A full all-strategies tournament round (auctions + churn +
+    failures + resale live) replays byte-for-byte from the seed."""
+    zoo = available_strategies()
+    market_kw = dict(release_fee=0.25, resale=True, ask_fraction=0.15,
+                     auction_round=1800.0, gis_ttl=900.0)
+
+    def play():
+        market = _zoo_market(seed, zoo, **market_kw)
+        rep = market.run(churn=True, failures=True)
+        market.bank.reconcile(_ledgers(market))
+        return rep.stable_repr()
+
+    assert play() == play()
 
 
 # ---------------------------------------------------------------------------

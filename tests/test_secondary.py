@@ -13,33 +13,13 @@ import pytest
 
 from repro.core import (AdmissionError, BudgetLedger, ClearingHistory,
                         GridBank, Marketplace, MarketUser, PriceSchedule,
-                        ResourceDirectory, ResourceSpec, SecondaryMarket,
-                        TradeFederation, TradeServer, mixed_auction_market)
+                        ResourceSpec, mixed_auction_market)
+
+from conftest import make_federation as _grid
+from conftest import make_secondary as _market
+from conftest import make_spec as _spec
 
 HOUR = 3600.0
-
-
-def _spec(name, site, price, slots=1, chips=1):
-    return ResourceSpec(name=name, site=site, chips=chips, slots=slots,
-                        base_price=price, peak_multiplier=1.0,
-                        mtbf_hours=float("inf"))
-
-
-def _grid(specs, **server_kw):
-    d = ResourceDirectory()
-    for s in specs:
-        d.register(s)
-    schedules = {n: PriceSchedule(d.spec(n)) for n in d.all_names()}
-    fed = TradeFederation.from_directory(d, schedules, **server_kw)
-    return d, fed
-
-
-def _market(fed, bank=None, **kw):
-    kw.setdefault("release_fee", 0.25)
-    kw.setdefault("resale", True)
-    kw.setdefault("ask_fraction", 0.2)
-    return SecondaryMarket(fed, bank if bank is not None else GridBank(),
-                           **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +27,7 @@ def _market(fed, bank=None, **kw):
 # ---------------------------------------------------------------------------
 
 def test_transfer_preserves_window_price_and_bumps_book_version():
-    d, fed = _grid([_spec("m0", "X", 1.0)])
+    d, fed = _grid([_spec("m0", "X", price=1.0)])
     server = fed.servers["X"]
     r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.4)
     v0 = server.book_version
@@ -65,7 +45,7 @@ def test_transfer_preserves_window_price_and_bumps_book_version():
 def test_transfer_enforces_buyer_admission_quota():
     """A resale is not a quota side-door: the buyer must clear the same
     per-user cap a fresh reservation would."""
-    d, fed = _grid([_spec("m0", "X", 1.0), _spec("m1", "X", 1.0)],
+    d, fed = _grid([_spec("m0", "X", price=1.0), _spec("m1", "X", price=1.0)],
                    max_reservations_per_user=1)
     server = fed.servers["X"]
     ra = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0)
@@ -78,7 +58,7 @@ def test_transfer_enforces_buyer_admission_quota():
 
 
 def test_transfer_of_expired_or_cancelled_reservation_returns_none():
-    d, fed = _grid([_spec("m0", "X", 1.0)])
+    d, fed = _grid([_spec("m0", "X", price=1.0)])
     server = fed.servers["X"]
     r = fed.reserve("m0", "alice", 0.0, HOUR, 0.0)
     assert server.transfer(r.reservation_id, "bob", 2 * HOUR) is None
@@ -93,7 +73,7 @@ def test_transfer_of_expired_or_cancelled_reservation_returns_none():
 
 def test_fill_transfers_reservation_and_mirrors_bank_exactly():
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0, chips=2)])
+    d, fed = _grid([_spec("m0", "X", price=1.0, chips=2)])
     sec = _market(fed, bank, ask_fraction=0.5)
     la, lb = BudgetLedger(budget=100.0), BudgetLedger(budget=100.0)
     sec.register_user("alice", la)
@@ -120,7 +100,7 @@ def test_fill_transfers_reservation_and_mirrors_bank_exactly():
 
 def test_buyer_cannot_fill_own_listing_and_gone_listings_fail_softly():
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0)])
+    d, fed = _grid([_spec("m0", "X", price=1.0)])
     sec = _market(fed, bank)
     r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0)
     sec.shed(r.reservation_id, "alice", 0.0)
@@ -132,7 +112,7 @@ def test_buyer_cannot_fill_own_listing_and_gone_listings_fail_softly():
 
 def test_release_charges_commitment_fee_as_wasted_spend():
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0, chips=2)])
+    d, fed = _grid([_spec("m0", "X", price=1.0, chips=2)])
     sec = _market(fed, bank, resale=False, release_fee=0.25)
     led = BudgetLedger(budget=100.0)
     sec.register_user("alice", led)
@@ -149,7 +129,7 @@ def test_release_charges_commitment_fee_as_wasted_spend():
 
 def test_unsold_listing_pays_fee_over_listed_idle_span_on_sweep():
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0, chips=1)])
+    d, fed = _grid([_spec("m0", "X", price=1.0, chips=1)])
     sec = _market(fed, bank, release_fee=0.25, ask_fraction=0.2)
     led = BudgetLedger(budget=100.0)
     sec.register_user("alice", led)
@@ -169,7 +149,7 @@ def test_reclaim_pulls_own_listing_back_without_fee():
     listing off the book fee-free — a window back in use is not idle,
     and must not be sellable or expiry-billed out from under them."""
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0)])
+    d, fed = _grid([_spec("m0", "X", price=1.0)])
     sec = _market(fed, bank, release_fee=0.25)
     led = BudgetLedger(budget=100.0)
     sec.register_user("alice", led)
@@ -197,7 +177,7 @@ def test_negotiate_contract_prices_resale_bids_but_never_reserves_them():
     would crash, and anywhere it would pay the seller's premium to the
     owner.  Resale-backed bids are priced, not locked."""
     from repro.core import ResourceView, UserRequirements, negotiate_contract
-    d, fed = _grid([_spec("m0", "X", 2.0)])      # 1 slot
+    d, fed = _grid([_spec("m0", "X", price=2.0)])      # 1 slot
     sec = _market(fed, ask_fraction=0.2)
     fed.servers["X"].secondary = sec
     # the seller's listed reservation fills the only slot of the window
@@ -220,7 +200,7 @@ def test_voided_listing_finalizes_without_fee():
     from the holder, not idled by them — finalize drops the listing but
     charges no commitment fee (the breach rebate settled that loss)."""
     bank = GridBank()
-    d, fed = _grid([_spec("m0", "X", 1.0)])
+    d, fed = _grid([_spec("m0", "X", price=1.0)])
     sec = _market(fed, bank, release_fee=0.25)
     led = BudgetLedger(budget=100.0)
     sec.register_user("alice", led)
@@ -240,7 +220,7 @@ def test_voided_listing_finalizes_without_fee():
 
 
 def test_resale_offers_merge_into_solicit_bids():
-    d, fed = _grid([_spec("m0", "X", 2.0)])
+    d, fed = _grid([_spec("m0", "X", price=2.0)])
     sec = _market(fed, ask_fraction=0.2)
     fed.servers["X"].secondary = sec
     r = fed.reserve("m0", "alice", 0.0, 4 * HOUR, 0.0, locked_price=0.5)
@@ -260,7 +240,7 @@ def test_resale_offers_merge_into_solicit_bids():
 # ---------------------------------------------------------------------------
 
 def test_discovery_ema_nudges_posted_base_toward_clearing():
-    spec = _spec("m0", "X", 2.0)
+    spec = _spec("m0", "X", price=2.0)
     ps = PriceSchedule(spec, discovery_gain=0.5, discovery_band=0.5)
     for _ in range(40):
         ps.observe_clearing(0.0, 1.5)            # market clears below list
@@ -269,7 +249,7 @@ def test_discovery_ema_nudges_posted_base_toward_clearing():
 
 
 def test_discovery_drift_bounded_by_band():
-    spec = _spec("m0", "X", 2.0)
+    spec = _spec("m0", "X", price=2.0)
     ps = PriceSchedule(spec, discovery_gain=0.5, discovery_band=0.25)
     for _ in range(100):
         ps.observe_clearing(0.0, 0.01)           # absurdly low clearing
@@ -291,7 +271,7 @@ def test_discovery_backs_out_time_of_day_factors():
 
 
 def test_discovery_off_means_frozen_base():
-    ps = PriceSchedule(_spec("m0", "X", 2.0))    # default gain 0
+    ps = PriceSchedule(_spec("m0", "X", price=2.0))    # default gain 0
     ps.observe_clearing(0.0, 0.5)
     assert ps.base_price == pytest.approx(2.0)
 
@@ -374,7 +354,7 @@ def test_churn_rebate_follows_resold_window_to_its_buyer():
     """A site departs after a resale fill: the breach rebate for the
     voided window must reach the BUYER who holds it, not the seller who
     already pocketed the lump."""
-    specs = [_spec("a0", "A", 1.0), _spec("b0", "B", 1.0)]
+    specs = [_spec("a0", "A", price=1.0), _spec("b0", "B", price=1.0)]
     market = Marketplace(specs=specs, seed=0, release_fee=0.25,
                          resale=True, ask_fraction=0.2)
     market.add_user(MarketUser(name="seller", deadline=12 * HOUR,

@@ -1,0 +1,202 @@
+"""Per-strategy conformance suite.
+
+Every entry in the strategy registry is run through the same battery —
+budget safety, deadline-pressure monotonicity, determinism — by
+parametrizing over ``available_strategies()``.  A new strategy gains
+this coverage the moment it is ``@register``-ed; nothing here names the
+built-in zoo explicitly (the registry-shape test below is the one
+exception, and it only asserts a lower bound plus the legacy flags).
+"""
+import pytest
+
+from conftest import make_spec
+from repro.core import (BudgetLedger, MarketUser, Marketplace,
+                        ScheduleAdvisor, SchedulerConfig,
+                        UserRequirements, available_strategies,
+                        strategy_class)
+from repro.core.scheduler import ResourceView
+from repro.core.strategies import (Strategy, accumulate_rate, create,
+                                   register, unregister)
+
+HOUR = 3600.0
+
+ALL_STRATEGIES = available_strategies()
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a deterministic advisor-level grid and tiny shared markets
+# ---------------------------------------------------------------------------
+
+def _views(n: int = 8):
+    """A fixed heterogeneous grid: varied price, speed and chip count so
+    rankings are non-trivial, with deliberately non-monotone quote order."""
+    views, prices = {}, {}
+    for i in range(n):
+        name = f"r{i}"
+        spec = make_spec(name, f"s{i % 3}", chips=1 + i % 3,
+                         perf=0.5 + 0.25 * i, price=0.5 + 0.3 * i)
+        views[name] = ResourceView(spec=spec,
+                                   est_job_seconds=900.0 + 200.0 * i)
+        prices[name] = 0.4 + 0.35 * ((i * 7) % 5)
+    return views, prices
+
+
+def _advisor(name: str, deadline_h: float = 12.0,
+             budget: float = 500.0) -> ScheduleAdvisor:
+    return ScheduleAdvisor(
+        SchedulerConfig(),
+        UserRequirements(deadline=deadline_h * HOUR, budget=budget,
+                         strategy=name, user="probe"))
+
+
+def _market(strategy: str, *, budget: float, seed: int = 0,
+            n_jobs: int = 6, **market_kw) -> Marketplace:
+    """The strategy under test vs a fixed ``cost`` rival on a small
+    shared grid — contention without tournament-scale runtime."""
+    market = Marketplace(n_machines=6, seed=seed, **market_kw)
+    market.add_user(MarketUser(name="probe", deadline=10.0 * HOUR,
+                               budget=budget, strategy=strategy,
+                               n_jobs=n_jobs, est_seconds=1200.0))
+    market.add_user(MarketUser(name="rival", deadline=12.0 * HOUR,
+                               budget=5_000.0, strategy="cost",
+                               n_jobs=n_jobs, est_seconds=1200.0))
+    return market
+
+
+def _reconcile(market: Marketplace) -> None:
+    market.bank.reconcile({u.name: e.ledger
+                           for u, e in zip(market.users, market.engines)})
+
+
+# ---------------------------------------------------------------------------
+# the conformance battery: every registered strategy, same bar
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+class TestStrategyConformance:
+
+    def test_budget_never_exceeded(self, name):
+        """A starved broker may stall, but its settled spend never
+        crosses the budget line — the ledger guard holds regardless of
+        how aggressive the policy is."""
+        budget = 35.0
+        market = _market(name, budget=budget)
+        market.run()
+        probe = market.engines[0]
+        assert probe.ledger.settled <= budget + 1e-6
+        _reconcile(market)
+
+    def test_deadline_pressure_monotone(self, name):
+        """Paper Figure 3 as a per-strategy law: shrinking time-to-
+        deadline never *reduces* the resource count the policy asks
+        for.  (Budget-first policies may plateau; they must not dip.)"""
+        views, prices = _views()
+        ledger = BudgetLedger(budget=1e6)
+
+        def n_alloc(deadline_h):
+            adv = _advisor(name, deadline_h=deadline_h, budget=1e6)
+            return len(adv.decide(0.0, views, prices, 60, ledger,
+                                  set()).allocate)
+
+        counts = [n_alloc(h) for h in (48.0, 12.0, 3.0, 1.0)]
+        assert all(later >= earlier
+                   for earlier, later in zip(counts, counts[1:])), counts
+
+    def test_decide_deterministic(self, name):
+        """Same advisor, same inputs, same decision — no hidden state
+        or iteration-order dependence in the policy."""
+        views, prices = _views()
+        ledger = BudgetLedger(budget=800.0)
+        adv = _advisor(name)
+        d1 = adv.decide(0.0, views, prices, 40, ledger, set())
+        d2 = adv.decide(0.0, views, prices, 40, ledger, set())
+        assert d1.allocate == d2.allocate
+        assert d1.release == d2.release
+        assert d1.projected_rate == d2.projected_rate
+        assert d1.projected_cost_per_job == d2.projected_cost_per_job
+
+    def test_same_seed_market_byte_identical(self, name):
+        """Whole-market determinism with every economy hook live
+        (auctions, churn, failures, resale) — reruns are byte-equal."""
+        rich = dict(release_fee=0.25, resale=True, ask_fraction=0.15,
+                    auction_round=1800.0, gis_ttl=900.0)
+        run_kw = dict(churn=True, failures=True)
+        r1 = _market(name, budget=200.0, seed=4, **rich).run(**run_kw)
+        r2 = _market(name, budget=200.0, seed=4, **rich).run(**run_kw)
+        assert r1.stable_repr() == r2.stable_repr()
+
+
+# ---------------------------------------------------------------------------
+# registry shape and the commit-guard seam
+# ---------------------------------------------------------------------------
+
+def test_registry_holds_the_zoo():
+    assert len(ALL_STRATEGIES) >= 6
+    assert {"cost", "time", "conservative", "auction", "reputation",
+            "adaptive", "scavenger"} <= set(ALL_STRATEGIES)
+    legacy = {n for n in ALL_STRATEGIES if strategy_class(n).legacy}
+    assert legacy == {"cost", "time", "conservative"}
+
+
+def test_create_returns_fresh_instances():
+    a, b = create("cost"), create("cost")
+    assert type(a) is type(b)
+    assert a is not b
+
+
+def test_unknown_strategy_fails_at_build_time():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        strategy_class("definitely-not-registered")
+    # the advisor surfaces the same error at construction, not silently
+    # falling through to the cost policy as the old if/elif chain did
+    with pytest.raises(KeyError, match="definitely-not-registered"):
+        ScheduleAdvisor(SchedulerConfig(),
+                        UserRequirements(deadline=HOUR, budget=10.0,
+                                         strategy="definitely-not-registered"))
+
+
+def test_duplicate_name_rejected():
+    class Impostor(Strategy):
+        name = "cost"
+
+        def select(self, ctx):  # pragma: no cover - never called
+            return set()
+
+    with pytest.raises(ValueError, match="already registered"):
+        register(Impostor)
+
+
+def test_conservative_commit_guard_via_advisor():
+    """may_commit flows through the strategy: conservative reserves a
+    per-unfinished-job budget share, cost only checks the ledger."""
+    ledger = BudgetLedger(budget=100.0)
+    conservative = _advisor("conservative", budget=100.0)
+    assert conservative.may_commit(9.0, 10, ledger)
+    assert not conservative.may_commit(11.0, 10, ledger)
+    assert _advisor("cost", budget=100.0).may_commit(11.0, 10, ledger)
+
+
+def test_registration_is_all_it_takes():
+    """A brand-new strategy participates in a full market run (and the
+    conformance battery, on the next collection) by registration alone —
+    no scheduler, marketplace or bench edits."""
+
+    @register
+    class EagerToy(Strategy):
+        name = "toy-eager"
+        description = "cost ranking, double the needed rate"
+
+        def select(self, ctx):
+            return accumulate_rate(ctx.ranked, ctx.views,
+                                   2.0 * ctx.needed_rate)
+
+    try:
+        assert "toy-eager" in available_strategies()
+        market = _market("toy-eager", budget=2_000.0)
+        report = market.run()
+        _reconcile(market)
+        probe = next(o for o in report.outcomes if o.user == "probe")
+        assert probe.n_done == probe.n_jobs
+    finally:
+        unregister("toy-eager")
+    assert "toy-eager" not in available_strategies()
