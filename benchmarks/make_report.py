@@ -1,10 +1,19 @@
 """Regenerate EXPERIMENTS.md from the dry-run cache + perf iteration log.
 
     PYTHONPATH=src python -m benchmarks.make_report
+
+Or render the observability dashboard from an exported market trace —
+price curve, deadline-hit waterfall, and GridBank flow summary, all
+reconstructed from the Chrome trace-event JSON alone (no market objects
+needed; any file written by ``export_chrome_trace`` works):
+
+    PYTHONPATH=src python -m benchmarks.make_report --market-trace out.json
 """
+import argparse
 import json
+import math
 import os
-from collections import defaultdict
+from collections import Counter, defaultdict
 
 CELLS = "benchmarks/results/dryrun_cells.jsonl"
 PERF = "benchmarks/results/perf_iterations.jsonl"
@@ -46,6 +55,138 @@ def dedup(rows, keyf):
     for r in rows:
         seen[keyf(r)] = r
     return list(seen.values())
+
+
+# ---------------------------------------------------------------------------
+# --market-trace: dashboard from an exported Chrome trace alone
+# ---------------------------------------------------------------------------
+
+HOUR_US = 3600.0 * 1e6
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def _sparkline(samples, width=64):
+    """Bucket (ts, value) samples into ``width`` columns and render a
+    unicode sparkline; empty buckets hold the last seen value."""
+    if not samples:
+        return "", 0.0, 0.0
+    samples = sorted(samples)
+    t0, t1 = samples[0][0], samples[-1][0]
+    span = (t1 - t0) or 1.0
+    buckets = [[] for _ in range(width)]
+    for ts, v in samples:
+        i = min(int((ts - t0) / span * width), width - 1)
+        buckets[i].append(v)
+    vals, last = [], samples[0][1]
+    for b in buckets:
+        if b:
+            last = math.fsum(b) / len(b)
+        vals.append(last)
+    lo, hi = min(vals), max(vals)
+    rng = (hi - lo) or 1.0
+    line = "".join(SPARK[min(int((v - lo) / rng * len(SPARK)),
+                             len(SPARK) - 1)] for v in vals)
+    return line, lo, hi
+
+
+def market_dashboard(path):
+    """Render the market dashboard from a Chrome trace file: the inputs
+    are ``price.mean_quote`` counter samples, ``broker_finish``
+    instants, attempt-span outcomes, and the ``otherData`` metrics
+    snapshot — everything the exporter wrote, nothing else."""
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    evs = [e for e in doc.get("traceEvents", []) if e.get("ph") != "M"]
+    other = doc.get("otherData", {})
+    metrics = other.get("metrics", {})
+
+    L = []
+    A = L.append
+    span_us = max((e["ts"] for e in evs), default=0.0)
+    A(f"# Market dashboard — {other.get('run', '?')}")
+    A(f"trace: {len(evs)} events over {span_us / HOUR_US:.1f} sim-hours"
+      + (f", dropped {other['dropped']}" if other.get("dropped") else ""))
+
+    # -------- price curve (posted-price quote over sim time) --------
+    quotes = [(e["ts"], e["args"]["value"]) for e in evs
+              if e["ph"] == "C" and e["name"] == "price.mean_quote"]
+    A("\n## Price curve — mean grid quote (G$/chip-h)")
+    if quotes:
+        line, lo, hi = _sparkline(quotes)
+        t_lo, t_hi = quotes[0][0] / HOUR_US, quotes[-1][0] / HOUR_US
+        A(f"```\n{hi:7.3f} ┐\n        {line}\n{lo:7.3f} ┘  "
+          f"t = {t_lo:.1f}h .. {t_hi:.1f}h"
+          f"   (demand multiplier {hi / lo if lo else 0:.2f}x)\n```")
+    else:
+        A("*(no price samples in this trace)*")
+
+    # -------- deadline-hit waterfall (one bar per broker) --------
+    fins = sorted((e for e in evs if e["name"] == "broker_finish"),
+                  key=lambda e: (e["ts"], e["args"]["user"]))
+    A("\n## Deadline waterfall — broker finishes")
+    if fins:
+        horizon = max(e["ts"] / HOUR_US + max(e["args"]["slack_h"], 0.0)
+                      for e in fins) or 1.0
+        width = 36
+        A("```")
+        for e in fins:
+            a = e["args"]
+            fin_h = e["ts"] / HOUR_US
+            dl_h = fin_h + a["slack_h"]
+            n_fin = max(min(int(round(fin_h / horizon * width)), width), 1)
+            n_dl = max(min(int(round(dl_h / horizon * width)), width),
+                       n_fin)
+            bar = "█" * n_fin + "·" * (n_dl - n_fin) + \
+                  " " * (width - n_dl)
+            met = "✓" if a["met_deadline"] else "✗"
+            stall = f"  [{a['stall']}]" if a.get("stall") else ""
+            A(f"{a['user']:>8s} {a['strategy']:<12s} |{bar}| "
+              f"{fin_h:6.1f}h {met} slack {a['slack_h']:+6.1f}h  "
+              f"{a['done']}/{a['jobs']} jobs  "
+              f"{a['spent']:.0f}/{a['budget']:.0f} G${stall}")
+        A("█ = run time to finish, · = unused slack before the deadline")
+        A("```")
+        met_n = sum(1 for e in fins if e["args"]["met_deadline"])
+        A(f"{met_n}/{len(fins)} brokers met their deadline")
+    else:
+        A("*(no broker_finish instants in this trace)*")
+
+    # -------- attempt funnel (span outcomes) --------
+    outcomes = Counter(e["args"]["outcome"] for e in evs
+                       if e["ph"] == "e" and e["name"] == "attempt"
+                       and "outcome" in e.get("args", {}))
+    if outcomes:
+        A("\n## Dispatch-attempt funnel")
+        total = sum(outcomes.values())
+        for name, n in outcomes.most_common():
+            A(f"* {name}: {n} ({n / total:.0%})")
+
+    # -------- GridBank flow summary --------
+    A("\n## GridBank flow")
+    spend = metrics.get("bank.total_spend_gd")
+    rev = metrics.get("bank.total_revenue_gd")
+    if spend is None:
+        A("*(no bank metrics in this trace)*")
+    else:
+        A(f"* total spend: **{spend:.2f} G$** — total owner revenue: "
+          f"**{rev:.2f} G$** (delta {spend - rev:+.2e})")
+        if "bank.settlements" in metrics:
+            A(f"* settlements recorded: {metrics['bank.settlements']:.0f}")
+        by_kind = metrics.get("bank.revenue_by_kind_gd")
+        if by_kind:
+            A("\n| revenue stream | G$ |")
+            A("|---|---|")
+            for label in sorted(by_kind):
+                A(f"| {label} | {by_kind[label]:.2f} |")
+            A(f"| **total** | **{math.fsum(by_kind.values()):.2f}** |")
+    att = metrics.get("broker.attempts_per_job")
+    if isinstance(att, dict) and att.get("count"):
+        A(f"\nattempts/job: mean {att['sum'] / att['count']:.2f} "
+          f"(n={att['count']}, max {att['max']:.0f})")
+    eps = metrics.get("market.events_per_sec")
+    if eps:
+        A(f"sim throughput when captured: {eps:,.0f} events/s")
+    return "\n".join(L)
 
 
 def main():
@@ -287,4 +428,12 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--market-trace", metavar="TRACE_JSON", default=None,
+                    help="render the observability dashboard from an "
+                         "exported Chrome trace instead of EXPERIMENTS.md")
+    args = ap.parse_args()
+    if args.market_trace:
+        print(market_dashboard(args.market_trace))
+    else:
+        main()

@@ -17,7 +17,8 @@ def main() -> None:
     from benchmarks import (bench_auctions, bench_figure3, bench_gis,
                             bench_kernels, bench_marketplace,
                             bench_roofline, bench_scale, bench_scheduler,
-                            bench_secondary, bench_tournament)
+                            bench_secondary, bench_telemetry,
+                            bench_tournament)
     mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
             ("scheduler tables (strategies / scale / faults)",
              bench_scheduler),
@@ -32,6 +33,8 @@ def main() -> None:
              bench_secondary),
             ("strategy tournament (registry zoo x 4 market regimes)",
              bench_tournament),
+            ("telemetry (tracer overhead, traced vs untraced)",
+             bench_telemetry),
             ("kernels (pallas vs oracle)", bench_kernels),
             ("roofline (dry-run 3-term table)", bench_roofline)]
     # moe crossover needs 512 placeholder devices; include only when the

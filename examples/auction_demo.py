@@ -11,16 +11,25 @@ Three acts, all on one seeded virtual clock:
 3. the GridBank's owner revenue statement — every grid-dollar spent by
    a broker reconciles to a grid-dollar earned by a domain.
 
-    PYTHONPATH=src python examples/auction_demo.py
+    PYTHONPATH=src python examples/auction_demo.py [--trace out.json]
 """
-from repro.core import NegotiationTimeout, mixed_auction_market
+import argparse
+
+from repro.core import (NegotiationTimeout, Tracer, export_chrome_trace,
+                        mixed_auction_market)
 
 HOUR = 3600.0
 
 
 def main():
+    ap = argparse.ArgumentParser(description="negotiated-economy demo")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="export a Perfetto-loadable Chrome trace here")
+    args = ap.parse_args()
+    tracer = Tracer() if args.trace else None
+
     market = mixed_auction_market(8, n_machines=12, seed=42, n_jobs=16,
-                                  demand_elasticity=1.0)
+                                  demand_elasticity=1.0, tracer=tracer)
     report = market.run()
 
     print("=== act 1: auction brokers vs the price board ===")
@@ -56,6 +65,10 @@ def main():
     total = market.bank.reconcile(
         {u.name: e.ledger for u, e in zip(market.users, market.engines)})
     print(f"books balance: {total:.2f} G$ spent == {total:.2f} G$ earned")
+    if tracer is not None:
+        export_chrome_trace(tracer, args.trace, run_name="auction_demo")
+        print(f"wrote {args.trace} ({tracer.n_events()} trace events) — "
+              f"open at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

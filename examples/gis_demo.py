@@ -9,20 +9,29 @@ in flight on a departing site fail over (no attempt burned), voided
 contracts are refunded through the bank, and stale views keep sending
 work at corpses until a burned dispatch or a refresh teaches better.
 
-    PYTHONPATH=src python examples/gis_demo.py
+    PYTHONPATH=src python examples/gis_demo.py [--trace out.json]
 """
-from repro.core import mixed_auction_market
+import argparse
+
+from repro.core import Tracer, export_chrome_trace, mixed_auction_market
 
 HOUR = 3600.0
 
 
 def main():
+    ap = argparse.ArgumentParser(description="GIS churn demo")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="export a Perfetto-loadable Chrome trace here")
+    args = ap.parse_args()
+    tracer = Tracer() if args.trace else None
+
     market = mixed_auction_market(6, n_machines=12, seed=17, n_jobs=15,
                              demand_elasticity=1.0,
                              gis_ttl=900.0,             # 15-min stale views
                              heartbeat_interval=300.0,  # 5-min beats
                              churn_mean_uptime_h=4.0,
-                             churn_mean_downtime_h=1.5)
+                             churn_mean_downtime_h=1.5,
+                             tracer=tracer)
     gis = market.gis
     print("GIS hierarchy (enterprise -> departments):")
     for site, depts in gis.levels().items():
@@ -49,6 +58,11 @@ def main():
           f"{report.refunds:.2f}G$ refunded for broken contracts")
     assert report.total_done == report.total_jobs or any(
         o.stall_reason or not o.met_deadline for o in report.outcomes)
+    if tracer is not None:
+        export_chrome_trace(tracer, args.trace, run_name="gis_demo")
+        print(f"wrote {args.trace} ({tracer.n_events()} trace events, "
+              f"churn on the site tracks) — open at "
+              f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

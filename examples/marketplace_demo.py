@@ -7,17 +7,27 @@ pricing (GRACE supply-and-demand) makes the crowded grid expensive;
 slot races are lost and requeued; every broker settles only against its
 own ledger.
 
-    PYTHONPATH=src python examples/marketplace_demo.py
+    PYTHONPATH=src python examples/marketplace_demo.py [--trace out.json]
 """
-from repro.core import Marketplace, MarketUser
+import argparse
+
+from repro.core import (Marketplace, MarketUser, Tracer,
+                        export_chrome_trace)
 
 HOUR = 3600.0
 
 
 def main():
+    ap = argparse.ArgumentParser(description="contended marketplace demo")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="export a Perfetto-loadable Chrome trace here")
+    args = ap.parse_args()
+    tracer = Tracer() if args.trace else None
+
     market = Marketplace(n_machines=10, seed=42,
                          demand_elasticity=1.0,     # busy queues cost more
-                         dispatch_latency=1.0)      # WAN hop -> real races
+                         dispatch_latency=1.0,      # WAN hop -> real races
+                         tracer=tracer)
     for i, strategy in enumerate(("cost", "time", "conservative") * 3):
         if i >= 8:
             break
@@ -40,6 +50,11 @@ def main():
     print(f"slot races lost market-wide: {report.slot_races_lost} "
           f"(each requeued, none fatal)")
     assert report.total_done == report.total_jobs
+    if tracer is not None:
+        export_chrome_trace(tracer, args.trace,
+                            run_name="marketplace_demo")
+        print(f"wrote {args.trace} ({tracer.n_events()} trace events) — "
+              f"open at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

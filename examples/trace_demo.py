@@ -1,0 +1,72 @@
+"""Observability demo: trace a whole market run, open it in Perfetto.
+
+One contended posted-price market runs with a ``Tracer`` attached —
+every job's lifecycle (dispatch attempts, settlements, requeues) lands
+as async spans on its broker's track, every subsystem (GIS, bank,
+auctions, churn) emits typed instants, and the metrics registry samples
+the market on the watch cadence.  The run then exports:
+
+* a Chrome trace-event JSON — drag it into https://ui.perfetto.dev (or
+  chrome://tracing): one track per broker and per site, timestamps in
+  sim time, the metrics snapshot in ``otherData``;
+* a deterministic JSONL event log — same seed, same bytes, diffable.
+
+    PYTHONPATH=src python examples/trace_demo.py --trace out.json
+"""
+import argparse
+import collections
+
+from repro.core import (Tracer, export_chrome_trace, export_jsonl,
+                        standard_market)
+
+HOUR = 3600.0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="trace a market run, export for Perfetto")
+    ap.add_argument("--trace", metavar="OUT_JSON", default="out.json",
+                    help="Chrome trace output path (default: out.json)")
+    ap.add_argument("--jsonl", metavar="OUT_JSONL", default=None,
+                    help="also export the raw JSONL event log here")
+    args = ap.parse_args()
+
+    tracer = Tracer()
+    market = standard_market(4, n_machines=8, seed=7, n_jobs=12,
+                             demand_elasticity=1.0, tracer=tracer)
+    report = market.run()
+    print(report.summary())
+
+    events = tracer.events()
+    by_cat = collections.Counter(e.cat for e in events)
+    spans = sum(1 for e in events if e.ph == "b")
+    print(f"\ntrace: {len(events)} events, {spans} spans, "
+          f"{tracer.n_dropped()} dropped")
+    print("  " + "  ".join(f"{c}={n}" for c, n in sorted(by_cat.items())))
+
+    snap = tracer.metrics.snapshot()
+    print(f"\nmetrics registry ({len(snap)} instruments):")
+    print(f"  bank.total_spend_gd    {snap['bank.total_spend_gd']:.2f}")
+    print(f"  bank.total_revenue_gd  {snap['bank.total_revenue_gd']:.2f}")
+    att = snap["broker.attempts_per_job"]
+    print(f"  broker.attempts_per_job mean {att['mean']:.2f} "
+          f"(n={att['count']})")
+    slack = snap["market.deadline_slack_h"]
+    print(f"  market.deadline_slack_h mean {slack['mean']:.2f}h "
+          f"min {slack['min']:.2f}h")
+    print(f"  market.events_per_sec  {snap['market.events_per_sec']:.0f}")
+
+    # books must balance before anything is exported as truth
+    total = market.bank.reconcile(
+        {u.name: e.ledger for u, e in zip(market.users, market.engines)})
+    print(f"\nGridBank reconciles: {total:.2f} G$ spent == earned")
+
+    export_chrome_trace(tracer, args.trace, run_name="trace_demo")
+    print(f"wrote {args.trace} — open it at https://ui.perfetto.dev")
+    if args.jsonl:
+        export_jsonl(tracer, args.jsonl)
+        print(f"wrote {args.jsonl} (deterministic JSONL event log)")
+
+
+if __name__ == "__main__":
+    main()

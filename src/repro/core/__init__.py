@@ -22,7 +22,8 @@ from repro.core.marketplace import (Marketplace, MarketReport, MarketUser,
                                     UserOutcome, mixed_auction_market,
                                     standard_market)
 from repro.core.parametric import ExperimentReport, NimrodG
-from repro.core.persistence import Journal, load_events, replay
+from repro.core.persistence import (Journal, load_events, replay,
+                                    stable_dumps)
 from repro.core.plan import Plan, PlanError, parse_plan, substitute
 from repro.core.resources import (ResourceDirectory, ResourceSpec,
                                   ResourceStatus, gusto_like_testbed)
@@ -33,6 +34,10 @@ from repro.core.secondary import (Clearing, ClearingHistory, ResaleFill,
                                   ResaleListing, SecondaryMarket)
 from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
                                   duration_model)
+from repro.core.telemetry import (Counter, Gauge, Histogram,
+                                  MetricsRegistry, MultiGauge, TraceEvent,
+                                  Tracer, export_chrome_trace, export_jsonl,
+                                  load_chrome_trace)
 from repro.core.strategies import (Strategy, StrategyContext,
                                    available_strategies, cost_per_job,
                                    strategy_class)
@@ -47,25 +52,29 @@ __all__ = [
     "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
     "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
     "ChurnProcess", "Clearing", "ClearingHistory", "ClearingRound",
-    "Contract", "ContractQuote",
+    "Contract", "ContractQuote", "Counter",
     "CounterOffer", "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
     "ExperimentReport", "FailureProcess", "GISClient", "GISEntry",
-    "GISRecord", "GISRegistry", "GISSnapshot", "GridBank",
-    "GridInformationService", "Job", "JobSpec",
+    "GISRecord", "GISRegistry", "GISSnapshot", "Gauge", "GridBank",
+    "GridInformationService", "Histogram", "Job", "JobSpec",
     "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
-    "Marketplace", "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
+    "Marketplace", "MetricsRegistry", "MultiGauge",
+    "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
     "PriceSchedule", "ReconciliationError", "ResaleFill", "ResaleListing",
     "Reservation",
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
     "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
     "SecondaryMarket",
     "SimulatedExecutor", "Simulator", "StagingProxy", "Strategy",
-    "StrategyContext", "TradeFederation",
+    "StrategyContext", "TraceEvent", "Tracer", "TradeFederation",
     "TradeServer", "UserOutcome", "UserRequirements",
     "available_strategies", "cost_per_job", "create_strategy",
     "department_of",
-    "duration_model", "gusto_like_testbed", "is_resource_fault",
+    "duration_model", "export_chrome_trace", "export_jsonl",
+    "gusto_like_testbed", "is_resource_fault",
+    "load_chrome_trace",
     "load_events", "mixed_auction_market", "negotiate_contract",
-    "parse_plan", "register_strategy", "replay", "standard_market",
+    "parse_plan", "register_strategy", "replay", "stable_dumps",
+    "standard_market",
     "strategy_class", "substitute",
 ]

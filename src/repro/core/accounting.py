@@ -52,6 +52,23 @@ class GridBank:
         self._revenue: Dict[str, float] = {}
         self._pair: Dict[Tuple[str, str], float] = {}
         self._owner_kind: Dict[Tuple[str, str], float] = {}
+        self.tracer = None              # set by bind_telemetry
+
+    def bind_telemetry(self, tracer) -> None:
+        """Attach a ``repro.core.telemetry.Tracer``: every entry emits a
+        ``bank`` instant on the owning domain's track, and the registry
+        gains derived gauges over the live books (grand totals and the
+        per-owner revenue-by-kind family the issue tracker asks for)."""
+        self.tracer = tracer
+        m = tracer.metrics
+        self._m_settlements = m.counter("bank.settlements")
+        m.gauge("bank.total_spend_gd", unit="G$", fn=self.total_spend)
+        m.gauge("bank.total_revenue_gd", unit="G$", fn=self.total_revenue)
+        m.gauge("bank.entries", fn=lambda: float(len(self.entries)))
+        m.multi_gauge(
+            "bank.revenue_by_kind_gd", unit="G$",
+            fn=lambda: {f"{o}/{k}": v
+                        for (o, k), v in self._owner_kind.items()})
 
     # -- recording -----------------------------------------------------
     def record(self, *, t: float, user: str, owner: str, resource: str,
@@ -67,6 +84,19 @@ class GridBank:
         self._pair[key] = self._pair.get(key, 0.0) + amount
         ok = (owner, kind)
         self._owner_kind[ok] = self._owner_kind.get(ok, 0.0) + amount
+        if self.tracer is not None:
+            # plain settlements are the overwhelmingly common entry and
+            # already visible as the broker's attempt-span end (cost) and
+            # the revenue_by_kind gauge family; per-entry instants are
+            # reserved for the exceptional money movements (kill, fee,
+            # refund, ...) so the bank track stays readable and the
+            # traced-on hot path stays under the overhead gate
+            if kind == "settle":
+                self._m_settlements.inc()
+            else:
+                self.tracer.instant(t, f"site:{owner}", "bank", kind,
+                                    user=user, resource=resource,
+                                    amount=amount)
 
     # -- queries -------------------------------------------------------
     def users(self) -> List[str]:
@@ -124,26 +154,47 @@ class GridBank:
         return sorted(pairs, key=lambda p: (-p[1], p[0]))[:n]
 
     # -- audit ---------------------------------------------------------
+    def _kind_breakdown(self, user: Optional[str] = None) -> str:
+        """Per-kind signed totals (settle/kill/contract/refund/idle/
+        resale), grid-wide or for one user — the diagnosis a bare
+        "books don't balance" error denies its reader."""
+        by_kind: Dict[str, float] = {}
+        for e in self.entries:
+            if user is not None and e.user != user:
+                continue
+            by_kind[e.kind] = by_kind.get(e.kind, 0.0) + e.amount
+        if not by_kind:
+            return "no entries"
+        return ", ".join(f"{k}={v!r}" for k, v in sorted(by_kind.items()))
+
     def reconcile(self, ledgers: Optional[Mapping[str, object]] = None,
                   tol: float = 0.0) -> float:
         """Audit the books; returns the grand total that both sides agree
         on.  Raises ``ReconciliationError`` if (a) owner revenue and user
         spend diverge (they are the same entry multiset summed two ways —
         fsum makes the comparison exact), or (b) a broker ledger's
-        ``settled`` differs from the bank's record of that user."""
+        ``settled`` differs from the bank's record of that user.  Error
+        messages carry the per-kind delta breakdown so a mismatch is
+        diagnosable from the message alone."""
         by_owner = self.total_revenue()
         by_user = self.total_spend()
         total = math.fsum(e.amount for e in self.entries)
         if not (abs(by_owner - by_user) <= tol + 1e-9 * max(1.0, abs(total))):
             raise ReconciliationError(
-                f"owner revenue {by_owner!r} != user spend {by_user!r}")
+                f"owner revenue {by_owner!r} != user spend {by_user!r} "
+                f"(delta {by_owner - by_user!r}); "
+                f"per-kind totals: {self._kind_breakdown()}")
         if ledgers is not None:
             for user, ledger in sorted(ledgers.items()):
                 settled = getattr(ledger, "settled", ledger)
                 if settled != self.user_spend(user):
+                    bank = self.user_spend(user)
                     raise ReconciliationError(
                         f"user {user!r}: ledger settled {settled!r} != "
-                        f"bank record {self.user_spend(user)!r}")
+                        f"bank record {bank!r} "
+                        f"(delta {settled - bank!r}); "
+                        f"per-kind totals for {user!r}: "
+                        f"{self._kind_breakdown(user)}")
         return total
 
     def statement(self) -> str:

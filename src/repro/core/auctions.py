@@ -249,6 +249,20 @@ class AuctionHouse:
         self._next_cid = 1
         self._subscribers: Dict[str, Callable[[Contract], None]] = {}
         self._sim: Optional[Simulator] = None
+        self.tracer = None              # set by bind_telemetry
+
+    def bind_telemetry(self, tracer) -> None:
+        """Attach a ``repro.core.telemetry.Tracer``: clearing rounds,
+        struck contracts and price-discovery nudges emit ``auction``
+        instants on the owning site's track, and the registry gains
+        derived gauges over the audit trails."""
+        self.tracer = tracer
+        m = tracer.metrics
+        m.gauge("auction.rounds", fn=lambda: float(len(self.rounds)))
+        m.gauge("auction.contracts",
+                fn=lambda: float(len(self.contracts)))
+        m.gauge("auction.matched_slots",
+                fn=lambda: float(sum(r.matched_slots for r in self.rounds)))
 
     # -- wiring --------------------------------------------------------
     def register(self, user: str,
@@ -276,6 +290,12 @@ class AuctionHouse:
             server = self.books[site].server
             trades, price, audit = self.books[site].clear(t, self.window)
             self.rounds.append(audit)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    t, f"site:{site}", "auction", "clearing_round",
+                    price=audit.clearing_price,
+                    matched=audit.matched_slots, bids=audit.n_bids,
+                    asks=audit.n_asks)
             # record the round and feed the owners' discovery loop
             # BEFORE striking: the posted quote logged is the one the
             # round actually cleared against, not an already-nudged one
@@ -286,7 +306,15 @@ class AuctionHouse:
                     self.history.append(t, resource, price, posted,
                                         "auction")
                 if sched is not None:
+                    base_before = sched.base_price
                     sched.observe_clearing(t, price)
+                    if (self.tracer is not None
+                            and sched.base_price != base_before):
+                        self.tracer.instant(
+                            t, f"site:{site}", "auction",
+                            "discovery_nudge", resource=resource,
+                            base_from=base_before,
+                            base_to=sched.base_price, clearing=price)
             for user, resource, slots in trades:
                 c = self._strike(user, resource, site, price, slots,
                                  t, t + self.window, via="auction")
@@ -371,6 +399,11 @@ class AuctionHouse:
         self._next_cid += 1
         self.contracts.append(c)
         self._live.setdefault(user, []).append(c)
+        if self.tracer is not None:
+            self.tracer.instant(start, f"site:{site}", "auction",
+                                "contract", cid=c.contract_id, user=user,
+                                resource=resource, price=price,
+                                slots=c.slots, via=via)
         sub = self._subscribers.get(user)
         if sub is not None:
             sub(c)

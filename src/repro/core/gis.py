@@ -148,6 +148,22 @@ class GridInformationService:
         self.registrations = 0
         self.deregistrations = 0
         self.heartbeats = 0
+        self.tracer = None              # set by bind_telemetry
+
+    def bind_telemetry(self, tracer) -> None:
+        """Attach a ``repro.core.telemetry.Tracer``: heartbeat pumps and
+        (de)registrations emit ``gis`` instants (one per pump, not one
+        per beat — a per-beat instant would be all flood, no signal),
+        and the registry gains gauges over the service counters."""
+        self.tracer = tracer
+        m = tracer.metrics
+        m.gauge("gis.heartbeats", fn=lambda: float(self.heartbeats))
+        m.gauge("gis.registrations",
+                fn=lambda: float(self.registrations))
+        m.gauge("gis.deregistrations",
+                fn=lambda: float(self.deregistrations))
+        m.gauge("gis.registered",
+                fn=lambda: float(len(self._records)))
 
     # -- registration (resources / owners) -----------------------------
     def register(self, spec: ResourceSpec, t: float) -> GISRecord:
@@ -164,6 +180,10 @@ class GridInformationService:
         node._add(rec)
         self._records[spec.name] = rec
         self.registrations += 1
+        if self.tracer is not None:
+            self.tracer.instant(t, "gis", "gis", "register",
+                                resource=spec.name, site=spec.site,
+                                department=dept, price=price)
         return rec
 
     def deregister(self, name: str, t: float) -> bool:
@@ -174,6 +194,9 @@ class GridInformationService:
                 .child(rec.department, "department"))
         node._remove(name)
         self.deregistrations += 1
+        if self.tracer is not None:
+            self.tracer.instant(t, "gis", "gis", "deregister",
+                                resource=name, site=rec.enterprise)
         return True
 
     def is_registered(self, name: str) -> bool:
@@ -214,6 +237,12 @@ class GridInformationService:
             if st.up and not st.departed:
                 self.heartbeat(name, t)
                 beat += 1
+        if self.tracer is not None:
+            # one instant per pump (not per beat): the pump cadence is
+            # the signal; per-resource beats would drown the gis track
+            self.tracer.instant(t, "gis", "gis", "heartbeat_pump",
+                                beats=beat,
+                                registered=len(self._records))
         return beat
 
     def heartbeat(self, name: str, t: float) -> None:

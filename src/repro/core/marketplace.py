@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import GridBank
@@ -207,8 +208,14 @@ class Marketplace:
                  resale: bool = False,
                  ask_fraction: float = 0.5,
                  discovery_gain: float = 0.0,
-                 discovery_band: float = 0.5):
+                 discovery_band: float = 0.5,
+                 tracer=None):
         self.seed = seed
+        # optional telemetry.Tracer: when set, every subsystem below is
+        # bound to it (spans, instants, registry metrics); when None —
+        # the default — no instrumentation site in the market fires
+        self.tracer = tracer
+        self._snap_tick = 0
         self.sim = Simulator()
         self.directory = ResourceDirectory()
         for spec in (specs if specs is not None
@@ -224,6 +231,8 @@ class Marketplace:
         # the producer side of the economy: every settlement lands in
         # the bank as the owning domain's revenue
         self.bank = GridBank()
+        if tracer is not None:
+            self.bank.bind_telemetry(tracer)
         # one trade server per administrative domain, federated — the
         # cross-domain price board brokers arbitrage over.  Kwargs kept
         # so a site rejoining after churn gets an identical fresh server.
@@ -240,6 +249,8 @@ class Marketplace:
             self.trade, round_interval=auction_round,
             window=auction_window, idle_discount=idle_discount,
             history=self.history)
+        if tracer is not None:
+            self.auction_house.bind_telemetry(tracer)
         # secondary capacity market: with release_fee > 0 idle windows
         # handed back cost their holder the commitment fee; with resale
         # they can be listed and transferred to rival brokers instead
@@ -249,6 +260,8 @@ class Marketplace:
                 self.trade, self.bank, release_fee=release_fee,
                 resale=resale, ask_fraction=ask_fraction,
                 history=self.history)
+            if tracer is not None:
+                self.secondary.bind_telemetry(tracer)
             if resale:
                 for server in self.trade.servers.values():
                     server.secondary = self.secondary
@@ -260,6 +273,8 @@ class Marketplace:
             self.directory, heartbeat_interval=heartbeat_interval,
             suspect_after=gis_suspect_after,
             price_fn=lambda name, t: self.trade.forward_quote(name, t))
+        if tracer is not None:
+            self.gis.bind_telemetry(tracer)
         for name in self.directory.all_names():
             self.gis.register(self.directory.spec(name), 0.0)
         for site, server in self.trade.servers.items():
@@ -313,7 +328,7 @@ class Marketplace:
                                     if self.secondary is not None
                                     and self.secondary.resale else None),
                          gis=self.gis, gis_ttl=self.gis_ttl,
-                         history=self.history)
+                         history=self.history, tracer=self.tracer)
         if self.secondary is not None:
             self.secondary.register_user(user.name, engine.ledger)
         self.users.append(user)
@@ -347,9 +362,14 @@ class Marketplace:
             self.gis.deregister(name, t)
         # 2. in-flight work fails over NOW — requeued without burning
         #    an attempt, commitments refunded by each engine's handler
+        evicted_before = self.evictions
         for name in names:
             for engine in self.engines:
                 self.evictions += engine.dispatcher.executor.interrupt(name)
+        if self.tracer is not None and self.evictions > evicted_before:
+            self.tracer.instant(t, f"site:{site}", "churn", "eviction",
+                                site=site,
+                                jobs=self.evictions - evicted_before)
         # 3. live contracts on the dying domain are voided; the owner
         #    pays each holder a breach rebate through the bank (the
         #    consumer's ledger is credited the same amount: the books
@@ -363,7 +383,7 @@ class Marketplace:
                 # and a window that was RESOLD belongs to its buyer now,
                 # so the rebate for that slice must follow it
                 for rid in c.reservation_ids:
-                    self.secondary.drop(rid)
+                    self.secondary.drop(rid, t)
                     buyer = self.secondary.buyer_of(rid)
                     if buyer is not None and buyer != user:
                         holders[rid] = buyer
@@ -383,6 +403,10 @@ class Marketplace:
         self.trade.remove_server(site)
         self.gis.deregister_trade_server(site)
         self.churn_trace.append((t, "leave", site))
+        if self.tracer is not None:
+            self.tracer.instant(t, f"site:{site}", "churn", "site_leave",
+                                site=site, rejoin_at=rejoin_at,
+                                resources=len(names))
         return True
 
     def _pay_rebate(self, user: str, site: str, resource: str, t: float,
@@ -418,6 +442,9 @@ class Marketplace:
             st.next_transition = math.inf
             self.gis.register(self.directory.spec(name), t)
         self.churn_trace.append((t, "join", site))
+        if self.tracer is not None:
+            self.tracer.instant(t, f"site:{site}", "churn", "site_join",
+                                site=site, resources=len(names))
 
     # ------------------------------------------------------------------
     def mean_quote(self, t: float) -> float:
@@ -429,6 +456,16 @@ class Marketplace:
     def _watch(self, sample_interval: float, horizon: float) -> None:
         t = self.sim.now
         self.price_trace.append((t, self.mean_quote(t)))
+        if self.tracer is not None:
+            # the price signal samples every tick; the full registry
+            # snapshot (a few dozen counter events each) every 4th —
+            # metrics move slowly against the watch cadence and the
+            # run-end snapshot always lands the final values
+            self.tracer.counter(t, "market", "price.mean_quote",
+                                self.price_trace[-1][1])
+            if self._snap_tick % 4 == 0:
+                self.tracer.snapshot_counters(t)
+            self._snap_tick += 1
         if self.secondary is not None:
             # housekeeping on the sim clock: expire unsold listings
             # (charging their commitment fees) and drop dangling ones
@@ -453,8 +490,10 @@ class Marketplace:
         if horizon is None:
             horizon = max(u.deadline for u in self.users) * 1.5 + 8 * HOUR
         self._gis_handle = self.gis.start(self.sim, until=horizon)
+        wall0 = time.perf_counter() if self.tracer is not None else 0.0
         if failures:
-            fp = FailureProcess(self.sim, self.directory, seed=self.seed)
+            fp = FailureProcess(self.sim, self.directory, seed=self.seed,
+                                tracer=self.tracer)
             for name in self.directory.all_names():
                 fp.install(name)
         if churn:
@@ -483,6 +522,18 @@ class Marketplace:
                 engine.report.total_cost = engine.ledger.settled
                 engine.report.within_budget = (
                     engine.ledger.settled <= engine.req.budget + 1e-6)
+        if self.tracer is not None:
+            m = self.tracer.metrics
+            m.gauge("market.sim_events").set(float(self.sim.events))
+            # final registry snapshot BEFORE the wall-derived gauges are
+            # registered: everything in the event stream (and hence the
+            # JSONL export) stays deterministic; throughput lands only
+            # in the registry, i.e. the Chrome export's otherData
+            self.tracer.snapshot_counters(self.sim.now)
+            wall = max(time.perf_counter() - wall0, 1e-9)
+            m.gauge("market.events_per_sec", unit="ev/s").set(
+                self.sim.events / wall)
+            m.gauge("market.wall_seconds", unit="s").set(wall)
         return self._report()
 
     # ------------------------------------------------------------------

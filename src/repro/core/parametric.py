@@ -82,7 +82,7 @@ class NimrodG:
                  seed: int = 0, stop_sim_when_done: bool = True,
                  auction=None, bank=None, secondary=None,
                  gis: Optional[GridInformationService] = None,
-                 gis_ttl: float = 600.0, history=None):
+                 gis_ttl: float = 600.0, history=None, tracer=None):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -158,6 +158,32 @@ class NimrodG:
         self._tick_handle = None
         self._tick_count = 0
         self._seen_gis_generation = -1
+        # telemetry (repro.core.telemetry): purely observational — every
+        # hot-path site below guards on ``self._trace is not None`` (the
+        # default), so the traced-off run pays one None check and the
+        # traced-on run draws no RNG and reorders nothing
+        self._trace = tracer
+        self._track = f"broker:{experiment}"
+        self._open_spans: Set[str] = set()   # job spans begun, not ended
+        self._open_attempts: Set[str] = set()  # attempt span ids in flight
+        # quote-memo hit/miss tallies are plain ints counted always (an
+        # int += is free next to the quote itself) and flushed to the
+        # shared registry counters once per tick — per-quote Counter
+        # calls were the single largest traced-on overhead
+        self._memo_hits = 0
+        self._memo_misses = 0
+        self._memo_flushed = (0, 0)
+        if tracer is not None:
+            m = tracer.metrics
+            self._m_memo_hit = m.counter("broker.quote_memo_hits")
+            self._m_memo_miss = m.counter("broker.quote_memo_misses")
+            self._m_attempts = m.histogram("broker.attempts_per_job",
+                                           unit="attempts")
+            self._m_slack = m.histogram(
+                "market.deadline_slack_h", unit="h",
+                bounds=(-24.0, -12.0, -6.0, -2.0, -1.0, 0.0, 1.0, 2.0,
+                        6.0, 12.0, 24.0, 72.0))
+            self.advisor.bind_telemetry(tracer, self._track)
         for job in self.jobs.values():
             self._reindex(job)
 
@@ -300,7 +326,9 @@ class NimrodG:
         key = (self._now(), self.directory.status(resource).version,
                self.trade.price_version(resource), sv)
         if cached is not None and cached[0] == key:
+            self._memo_hits += 1
             return cached[1]
+        self._memo_misses += 1
         value = compute(key[0])
         key = (key[0], self.directory.status(resource).version,
                self.trade.price_version(resource), sv)
@@ -434,6 +462,8 @@ class NimrodG:
         if self._finished:
             return
         t = self._now()
+        if self._trace is not None:
+            self._tr_flush_memo()
         self._refresh_views()
         remaining = self._remaining()
         if remaining == 0:
@@ -447,6 +477,10 @@ class NimrodG:
             if bid is not None:
                 self._log("AUCTION_BID", price=bid.chip_hour_price,
                           slots=bid.slots)
+                if self._trace is not None:
+                    self._trace.instant(t, self._track, "auction", "bid",
+                                        price=bid.chip_hour_price,
+                                        slots=bid.slots)
             won = len(self.auction.contracts)
             if won > self.report.contracts_won:
                 for c in self.auction.contracts[self.report.contracts_won:]:
@@ -591,6 +625,49 @@ class NimrodG:
             self._log("RESALE_BUY", resource=resource,
                       rid=r.reservation_id, lump=lump,
                       rate=offer.all_in_rate)
+            if self._trace is not None:
+                self._trace.instant(t, self._track, "job", "resale_buy",
+                                    resource=resource,
+                                    rid=r.reservation_id, lump=lump,
+                                    rate=offer.all_in_rate)
+
+    # -- telemetry helpers (no-ops unless a tracer is attached) --------
+    def _tr_flush_memo(self) -> None:
+        """Push the plain-int quote-memo tallies into the shared registry
+        counters (once per tick — never per quote)."""
+        h, miss = self._memo_flushed
+        if self._memo_hits != h:
+            self._m_memo_hit.inc(self._memo_hits - h)
+        if self._memo_misses != miss:
+            self._m_memo_miss.inc(self._memo_misses - miss)
+        self._memo_flushed = (self._memo_hits, self._memo_misses)
+
+    def _tr_end_attempt(self, job: Job, t: float, outcome: str,
+                        **args) -> None:
+        # exactly-once per open span: a duplicate killed while its
+        # dispatch is still in flight gets its span closed by the kill
+        # loop AND a late blocked/failed callback — only the first wins
+        sid = f"{self.experiment}/{job.job_id}/a{job.attempt}"
+        if sid in self._open_attempts:
+            self._open_attempts.discard(sid)
+            self._trace.span_end(
+                t, self._track, "job", "attempt", sid,
+                outcome=outcome, resource=job.resource, **args)
+
+    def _tr_job_done(self, primary: Job, t: float) -> None:
+        """Close the job-level lifecycle span and feed the completion
+        metrics: dispatch attempts it took (duplicates included) and
+        deadline slack at completion (negative = finished late)."""
+        jid = primary.job_id
+        n_attempts = len(self.attempts[jid])
+        self._m_attempts.observe(n_attempts)
+        self._m_slack.observe((self.req.deadline - t) / HOUR)
+        if jid in self._open_spans:
+            self._open_spans.discard(jid)
+            self._trace.span_end(
+                t, self._track, "job", "job", f"{self.experiment}/{jid}",
+                outcome="done", attempts=n_attempts,
+                cost=primary.actual_cost)
 
     def _dispatch(self, job: Job, resource: str, committed: float,
                   price: Optional[float] = None) -> None:
@@ -609,6 +686,26 @@ class NimrodG:
         self._inflight[id(job)] = job
         self._log("DISPATCH", job_id=job.job_id, resource=resource,
                   attempt=job.attempt + 1, committed=committed)
+        if self._trace is not None:
+            t = self._now()
+            # span ids carry the identity (experiment/job_id[/aN]), so
+            # args hold only what the id cannot: where it went and at
+            # what committed price — every retained arg dict is heap the
+            # traced-on market pays for all run long
+            if primary not in self._open_spans:
+                self._open_spans.add(primary)
+                self._trace.span_begin(
+                    t, self._track, "job", "job",
+                    f"{self.experiment}/{primary}")
+            # the attempt span must open BEFORE dispatcher.dispatch():
+            # a zero-latency grid can fail the attempt re-entrantly,
+            # and its end event needs an open begin to match
+            sid = f"{self.experiment}/{job.job_id}/a{job.attempt + 1}"
+            self._open_attempts.add(sid)
+            self._trace.span_begin(
+                t, self._track, "job", "attempt", sid,
+                resource=resource, committed=committed,
+                price=job.quoted_price)
         self.report.resources_used.add(resource)
         cb = DispatchCallbacks(on_started=self._on_started,
                                on_done=self._on_done,
@@ -687,6 +784,14 @@ class NimrodG:
                 exec_seconds, self.cfg.rate_ema)
         self._log("DONE", job_id=job.job_id, resource=job.resource,
                   duration=exec_seconds, cost=actual)
+        if self._trace is not None:
+            # the attempt span's end carries the settlement (outcome,
+            # cost, duration); GridBank.record emits the money-side
+            # "settle" instant — no separate job instant, the traced
+            # market emits more events than sim events and every
+            # redundant one costs gate headroom
+            self._tr_end_attempt(job, t, "settled", cost=actual,
+                                 duration=exec_seconds)
 
         if primary is None or primary.status == JobStatus.DONE:
             return  # lost the race; already settled above
@@ -697,6 +802,8 @@ class NimrodG:
         self._reindex(primary)
         self.report.n_done += 1
         self.report.total_cost = self.ledger.settled
+        if self._trace is not None:
+            self._tr_job_done(primary, t)
         # kill losing duplicates
         for other in self.attempts[primary_id]:
             if other is not job and other.status in (JobStatus.STAGED,
@@ -723,6 +830,10 @@ class NimrodG:
                         owner=self.directory.spec(other.resource).site,
                         resource=other.resource, amount=kcost, kind="kill")
                 self._log("KILL_SETTLED", job_id=other.job_id, cost=kcost)
+                if self._trace is not None:
+                    # bank.record above already emitted the "kill" money
+                    # instant; the span end carries the rest
+                    self._tr_end_attempt(other, t, "killed", cost=kcost)
         if self._remaining() == 0:
             self._finish()
         else:
@@ -733,6 +844,10 @@ class NimrodG:
         broker.  The resource is healthy and the job did not run: refund
         the commitment, requeue without burning an attempt, and do not
         suspect the resource."""
+        if self._trace is not None:
+            # before the attempt counter is handed back: the span id
+            # must match the one _dispatch opened
+            self._tr_end_attempt(job, self._now(), "slot_lost")
         self.ledger.settle(job.committed_cost, 0.0)
         job.committed_cost = 0.0
         job.attempt = max(0, job.attempt - 1)
@@ -764,13 +879,24 @@ class NimrodG:
             # feed the burn back into the broker's cached view: suspect
             # locally until the next snapshot says otherwise
             self.gis_client.suspect(job.resource)
+            if self._trace is not None:
+                self._trace.instant(self._now(), self._track, "gis",
+                                    "suspect", resource=job.resource,
+                                    reason=reason)
         self._log("FAIL", job_id=job.job_id, resource=job.resource,
                   reason=reason, attempt=job.attempt)
+        if self._trace is not None:
+            self._tr_end_attempt(job, self._now(), "failed", reason=reason,
+                                 fault=fault)
         primary = self.jobs.get(primary_id)
         if primary is None or primary.status == JobStatus.DONE:
             return
         if job.duplicate_of is None:
             self.report.requeues += 1
+            if self._trace is not None:
+                self._trace.instant(self._now(), self._track, "job",
+                                    "requeue", job_id=job.job_id,
+                                    resource=job.resource, fault=fault)
             if fault:
                 # the machine died or left, not the job: its price-locked
                 # commitment was refunded above, the attempt is handed
@@ -841,6 +967,10 @@ class NimrodG:
                 dup = Job(spec=dspec, duplicate_of=primary_id)
                 self._log("DUPLICATE", job_id=dspec.job_id,
                           original=primary_id, resource=r)
+                if self._trace is not None:
+                    self._trace.instant(t, self._track, "job", "duplicate",
+                                        job_id=dspec.job_id,
+                                        original=primary_id, resource=r)
                 self.report.duplicates_launched += 1
                 self._dispatch(dup, r, cost, price=dup_price)
                 break
@@ -876,6 +1006,33 @@ class NimrodG:
         self.report.stall_reason = stall
         self._log("EXP_DONE", n_done=self.report.n_done,
                   cost=self.ledger.settled, stall=stall)
+        if self._trace is not None:
+            self._tr_flush_memo()
+            # close whatever the run left open (sorted — deterministic):
+            # attempts still in flight at the horizon, then their jobs
+            for j in sorted((j for j in self._inflight.values()
+                             if j.status in (JobStatus.STAGED,
+                                             JobStatus.RUNNING)),
+                            key=lambda j: j.job_id):
+                self._tr_end_attempt(j, t, "unfinished")
+            for sid in sorted(self._open_attempts):
+                self._trace.span_end(t, self._track, "job", "attempt",
+                                     sid, outcome="unfinished")
+            self._open_attempts.clear()
+            for jid in sorted(self._open_spans):
+                self._trace.span_end(
+                    t, self._track, "job", "job",
+                    f"{self.experiment}/{jid}", outcome="unfinished",
+                    status=self.jobs[jid].status.name)
+            self._open_spans.clear()
+            self._trace.instant(
+                t, self._track, "market", "broker_finish",
+                user=self.req.user, strategy=self.req.strategy,
+                done=self.report.n_done, jobs=self.report.n_jobs,
+                met_deadline=self.report.met_deadline,
+                slack_h=(self.req.deadline - t) / HOUR,
+                spent=self.ledger.settled, budget=self.req.budget,
+                stall=stall)
         if self.sim is not None and self.stop_sim_when_done:
             self.sim.stop()
 

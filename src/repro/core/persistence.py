@@ -12,6 +12,14 @@ import os
 from typing import Any, Dict, Iterator, List, Optional
 
 
+def stable_dumps(obj: Any) -> str:
+    """Canonical JSON for journals and trace exports: sorted keys and
+    exact (shortest round-trip) float reprs, so two same-seed runs
+    serialize byte-identically.  The journal has always written this
+    format; the telemetry JSONL exporter shares it."""
+    return json.dumps(obj, sort_keys=True)
+
+
 class Journal:
     def __init__(self, path: str, fsync: bool = True):
         self.path = path
@@ -31,7 +39,7 @@ class Journal:
 
     def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
         ev = {"seq": self._seq, "kind": kind, **fields}
-        self._f.write(json.dumps(ev, sort_keys=True) + "\n")
+        self._f.write(stable_dumps(ev) + "\n")
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())

@@ -128,6 +128,19 @@ class ScheduleAdvisor:
         self._bank = None
         self._history = None
         self._gis_client = None
+        self._trace = None
+        self._track = ""
+
+    def bind_telemetry(self, tracer, track: str) -> None:
+        """Attach a ``repro.core.telemetry.Tracer``: ``decide`` counts
+        every re-plan and emits a ``sched``/``replan`` instant whenever
+        the allocation actually changed.  Purely observational — the
+        decision is computed identically with or without it."""
+        self._trace = tracer
+        self._track = track
+        m = tracer.metrics
+        self._m_decisions = m.counter("sched.decisions")
+        self._m_replans = m.counter("sched.replans")
 
     def bind_market(self, *, secondary=None, bank=None, history=None,
                     gis_client=None) -> None:
@@ -162,6 +175,8 @@ class ScheduleAdvisor:
             live, key=lambda n: (cost_per_job(live[n], prices[n]),
                                  n not in held, n))
         if not ranked:   # transient: everything down/suspected — hold state
+            if self._trace is not None:
+                self._m_decisions.inc()
             return AllocationDecision(
                 allocate=[], release=[], projected_rate=0.0,
                 needed_rate=needed, projected_cost_per_job=math.inf,
@@ -186,7 +201,7 @@ class ScheduleAdvisor:
         rate = sum(live[n].rate() for n in chosen)
         wcost = (sum(live[n].rate() * cost_per_job(live[n], prices[n])
                      for n in chosen) / rate) if rate > 0 else math.inf
-        return AllocationDecision(
+        decision = AllocationDecision(
             allocate=sorted(chosen - current),
             release=sorted(current - chosen),
             projected_rate=rate,
@@ -195,6 +210,18 @@ class ScheduleAdvisor:
             feasible_time=rate + 1e-12 >= remaining_jobs / time_left,
             feasible_budget=(wcost * remaining_jobs <= ledger.remaining + 1e-9),
         )
+        if self._trace is not None:
+            self._m_decisions.inc()
+            if decision.allocate or decision.release:
+                self._m_replans.inc()
+                self._trace.instant(
+                    t, self._track, "sched", "replan",
+                    allocate=",".join(decision.allocate),
+                    release=",".join(decision.release),
+                    projected_rate=rate, needed_rate=needed,
+                    cost_per_job=(wcost if math.isfinite(wcost) else -1.0),
+                    remaining=remaining_jobs)
+        return decision
 
     # -- per-dispatch budget guard -------------------------------------------
 

@@ -191,8 +191,21 @@ class SecondaryMarket:
         self.wasted_spend = 0.0         # G$ of idle/release fees, ever
         self.resale_volume = 0.0        # G$ of lumps changing hands
         self._ledgers: Dict[str, object] = {}
+        self.tracer = None              # set by bind_telemetry
 
     # -- wiring --------------------------------------------------------
+    def bind_telemetry(self, tracer) -> None:
+        """Attach a ``repro.core.telemetry.Tracer``: fills, fees and
+        book mutations emit ``resale`` instants, and the registry gains
+        gauges over the book and the run-to-date G$ aggregates."""
+        self.tracer = tracer
+        m = tracer.metrics
+        m.gauge("market.wasted_spend_gd", unit="G$",
+                fn=lambda: self.wasted_spend)
+        m.gauge("market.resale_volume_gd", unit="G$",
+                fn=lambda: self.resale_volume)
+        m.gauge("resale.listings", fn=lambda: float(len(self.listings)))
+        m.gauge("resale.fills", fn=lambda: float(len(self.fills)))
     def register_user(self, user: str, ledger) -> None:
         """Attach a broker's ledger so the market can settle against it
         (fees, lump charges, lump refunds)."""
@@ -213,6 +226,10 @@ class SecondaryMarket:
             return 0.0
         self._settle(user, resource, site, amount, t, kind="idle")
         self.wasted_spend += amount
+        if self.tracer is not None:
+            self.tracer.instant(t, "resale", "resale", "fee",
+                                user=user, resource=resource,
+                                site=site, amount=amount)
         return amount
 
     def _fee(self, locked_price: float, chips: int, span: float) -> float:
@@ -289,6 +306,10 @@ class SecondaryMarket:
             del self.listings[rid]
         if mine:
             self.version += 1
+            if self.tracer is not None:
+                self.tracer.instant(t, "resale", "resale", "reclaim",
+                                    holder=holder, resource=resource,
+                                    listings=len(mine))
         return len(mine)
 
     def buyer_of(self, reservation_id: int) -> Optional[str]:
@@ -296,16 +317,23 @@ class SecondaryMarket:
         traded hands)."""
         return self._buyers.get(reservation_id)
 
-    def drop(self, reservation_id: int) -> bool:
+    def drop(self, reservation_id: int,
+             t: Optional[float] = None) -> bool:
         """Remove a listing without a fee or a fill — the event-driven
         path for reservations voided under their listing (a churning
         site's contracts): the capacity was taken from the holder, not
         idled by them.  Exact and sweep-timing-independent — a void
         discovered only after the window's end must not look like an
         expired-unsold listing."""
-        if self.listings.pop(reservation_id, None) is None:
+        listing = self.listings.pop(reservation_id, None)
+        if listing is None:
             return False
         self.version += 1
+        if self.tracer is not None and t is not None:
+            self.tracer.instant(t, "resale", "resale", "drop",
+                                rid=reservation_id,
+                                seller=listing.seller,
+                                resource=listing.resource)
         return True
 
     # -- buyer side ----------------------------------------------------
@@ -379,6 +407,12 @@ class SecondaryMarket:
                           resource=listing.resource, lump=lump,
                           rate=listing.all_in_rate)
         self.fills.append(fill)
+        if self.tracer is not None:
+            self.tracer.instant(t, "resale", "resale", "fill",
+                                seller=listing.seller, buyer=buyer,
+                                resource=listing.resource,
+                                rid=reservation_id, lump=lump,
+                                rate=listing.all_in_rate)
         # the fill is a realized trade: log it for the audit trail and
         # the bench's price traces.  It does NOT nudge the owner's
         # schedule — the lump is a user-to-user payment the owner is no

@@ -138,12 +138,14 @@ class FailureProcess:
     def __init__(self, sim: Simulator, directory: ResourceDirectory,
                  seed: int = 0,
                  on_down: Optional[Callable[[str], None]] = None,
-                 on_up: Optional[Callable[[str], None]] = None):
+                 on_up: Optional[Callable[[str], None]] = None,
+                 tracer=None):
         self.sim = sim
         self.directory = directory
         self.seed = seed
         self.on_down = on_down or (lambda r: None)
         self.on_up = on_up or (lambda r: None)
+        self.tracer = tracer            # optional telemetry.Tracer
 
     def install(self, name: str) -> None:
         spec = self.directory.spec(name)
@@ -165,6 +167,11 @@ class FailureProcess:
                 # answer "ETA back up" from this, not from omniscience
                 st.next_transition = self.sim.now + repair
                 self.on_down(name)
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        self.sim.now, f"site:{spec.site}", "churn",
+                        "resource_down", resource=name,
+                        eta=st.next_transition)
 
             def fix():
                 # a departed site owns its machines' fate: the renewal
@@ -173,6 +180,10 @@ class FailureProcess:
                     st.up = True
                     st.next_transition = math.inf
                     self.on_up(name)
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            self.sim.now, f"site:{spec.site}", "churn",
+                            "resource_up", resource=name)
                 self._schedule_failure(name, spec, rng)
 
             self.sim.after(repair, fix)

@@ -1,0 +1,480 @@
+"""Grid telemetry: sim-clock tracing + metrics for the whole market.
+
+Nimrod/G's broker is defined by what it watches — it "monitors and
+steers" experiments against deadline and budget — and the GRACE economy
+papers evaluate every scheduling claim from traced job/price timelines.
+This module is that observation layer for the repro: a per-run
+``Tracer`` every subsystem emits typed events into, a
+``MetricsRegistry`` of counters/gauges/histograms snapshotted on the
+sim clock, and exporters to Chrome trace-event JSON (drop the file into
+https://ui.perfetto.dev) and a byte-stable JSONL event log.
+
+Design constraints, in order:
+
+* **Zero overhead when disabled.**  Every instrumentation site in the
+  market guards on ``if tracer is not None`` — the default everywhere —
+  so the traced-off hot path pays one attribute read and a None check.
+  Telemetry only *observes*: it draws no RNG, mutates no market state,
+  and never reorders events, so same-seed runs are byte-identical with
+  it on, off, or toggled (the golden-equivalence hashes pin this).
+
+* **Bounded memory, stable order.**  Events land in per-category ring
+  buffers (``collections.deque(maxlen=...)``), so a heartbeat flood can
+  never evict job spans — each category evicts only its own oldest.
+  Every event carries a monotone global sequence number; ``events()``
+  merges the rings back into one deterministically ordered stream.
+
+* **Sim time is the timeline.**  All record methods take the virtual
+  clock ``t`` explicitly; the Chrome export maps one sim second to one
+  exported second (``ts`` microseconds), one track per broker/domain.
+
+Span taxonomy (also documented in the README "Observability" section):
+
+===========  ========================  =====================================
+category     names                     emitted by
+===========  ========================  =====================================
+``job``      ``job`` / ``attempt``     parametric: async span per job
+             spans; ``requeue``,       (first dispatch -> completion) and
+             ``duplicate``,            per dispatch attempt.  The attempt
+             ``resale_buy``            span *end* carries the ``outcome``
+                                       arg (``settled`` / ``killed`` /
+                                       ``slot_lost`` / ``failed`` /
+                                       ``unfinished``) — there are no
+                                       separate settle/kill instants
+``sched``    ``replan``                scheduler: advisor decisions that
+                                       changed the allocation
+``auction``  ``clearing_round``,       auctions: one instant per site
+             ``contract``, ``bid``,    round, per struck contract, per
+             ``discovery_nudge``       posted-price EMA nudge
+``gis``      ``heartbeat_pump``,       gis + parametric: liveness pumps,
+             ``register``,             (de)registrations, dispatch-burn
+             ``deregister``,           suspicions
+             ``suspect``
+``churn``    ``site_leave``,           simulator + marketplace: membership
+             ``site_join``,            churn, machine failures, in-flight
+             ``resource_down``,        evictions
+             ``resource_up``,
+             ``eviction``
+``bank``     exceptional entry kinds   accounting: one instant per
+             only (``kill``,           *exceptional* money movement;
+             ``contract``,             plain settlements are tallied in
+             ``refund``, ``idle``,     the ``bank.settlements`` counter
+             ``resale``, ``fee``)      (the attempt span already shows
+                                       each one)
+``resale``   ``fill``, ``fee``,        secondary market book events
+             ``reclaim``, ``drop``
+``market``   ``broker_finish``         marketplace: per-broker outcome
+             instants,                 instants, per-tick price samples,
+             ``price.mean_quote``      with full registry snapshots
+             counter samples           every 4th watch tick
+``metric``   one ``C`` sample per      ``Tracer.snapshot_counters`` —
+             scalar instrument         the registry flushed onto the
+                                       timeline
+===========  ========================  =====================================
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import json
+import math
+from typing import (Any, Callable, Dict, Iterator, List, NamedTuple,
+                    Optional)
+from typing import Tuple
+
+from repro.core.persistence import stable_dumps
+
+#: default per-category ring capacity — big enough that a full
+#: standard_market run keeps every event, small enough that a 10k-job
+#: benchmark sweep stays bounded (drops are counted, never silent)
+DEFAULT_RING = 100_000
+
+
+class TraceEvent(NamedTuple):
+    """One recorded event.  ``ph`` follows the Chrome trace-event
+    phases: ``"b"``/``"e"`` async span begin/end (``span`` is the id —
+    async, because one broker track carries many overlapping jobs),
+    ``"i"`` instant, ``"C"`` counter sample.  A NamedTuple, not a
+    dataclass: recording is the traced-on hot path and tuple
+    construction is several times cheaper.  ``args`` keeps call-site
+    kwargs order; every exporter serializes with sorted keys, so the
+    stream stays canonical without a per-event sort."""
+    seq: int
+    t: float
+    track: str
+    cat: str
+    name: str
+    ph: str
+    span: str = ""
+    args: Optional[Dict[str, Any]] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"seq": self.seq, "t": self.t,
+                             "track": self.track, "cat": self.cat,
+                             "name": self.name, "ph": self.ph}
+        if self.span:
+            d["span"] = self.span
+        if self.args:
+            d["args"] = {k: self.args[k] for k in sorted(self.args)}
+        return d
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class Counter:
+    """Monotone count (events, cache hits).  ``inc`` only."""
+    __slots__ = ("name", "unit", "value")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+    def get(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Point-in-time value.  Either ``set()`` explicitly or construct
+    with ``fn`` — a derived gauge evaluated at snapshot time (e.g.
+    ``lambda: secondary.wasted_spend``)."""
+    __slots__ = ("name", "unit", "fn", "_value")
+
+    def __init__(self, name: str, unit: str = "",
+                 fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self.unit = unit
+        self.fn = fn
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        self._value = v
+
+    def get(self) -> float:
+        return float(self.fn()) if self.fn is not None else self._value
+
+
+class MultiGauge:
+    """A labeled family of derived gauges: ``fn`` returns a dict of
+    label -> value at snapshot time (e.g. per-owner revenue by entry
+    kind).  Labels are sorted on read — deterministic snapshots."""
+    __slots__ = ("name", "unit", "fn")
+
+    def __init__(self, name: str, fn: Callable[[], Dict[str, float]],
+                 unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.fn = fn
+
+    def get(self) -> Dict[str, float]:
+        return {k: v for k, v in sorted(self.fn().items())}
+
+
+class Histogram:
+    """Fixed-bucket histogram (attempts-per-job, deadline slack).
+    Buckets are upper bounds; observations above the last bound land in
+    the overflow bucket.  Tracks count/sum/min/max exactly."""
+    __slots__ = ("name", "unit", "bounds", "buckets", "count", "total",
+                 "min", "max")
+
+    DEFAULT_BOUNDS = (0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 13.0, 21.0, 50.0,
+                      100.0, 1000.0)
+
+    def __init__(self, name: str, unit: str = "",
+                 bounds: Optional[Tuple[float, ...]] = None):
+        self.name = name
+        self.unit = unit
+        self.bounds = tuple(bounds) if bounds is not None \
+            else self.DEFAULT_BOUNDS
+        self.buckets = [0] * (len(self.bounds) + 1)
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        self.buckets[bisect.bisect_left(self.bounds, v)] += 1
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def summary(self) -> Dict[str, Any]:
+        return {"count": self.count, "sum": self.total,
+                "mean": self.mean(),
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0,
+                "buckets": dict(zip([f"le_{b}" for b in self.bounds]
+                                    + ["overflow"], self.buckets))}
+
+
+class MetricsRegistry:
+    """Get-or-create registry shared by every subsystem in one run.
+    Registering an existing name returns the existing instrument (so N
+    brokers share one ``broker.quote_memo_hits``); re-registering under
+    a different type is a bug and raises."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+
+    def _get_or_create(self, cls, name: str, **kw):
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, not {cls.__name__}")
+            return m
+        m = cls(name, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, unit: str = "") -> Counter:
+        return self._get_or_create(Counter, name, unit=unit)
+
+    def gauge(self, name: str, unit: str = "",
+              fn: Optional[Callable[[], float]] = None) -> Gauge:
+        g = self._get_or_create(Gauge, name, unit=unit, fn=fn)
+        if fn is not None:
+            g.fn = fn
+        return g
+
+    def multi_gauge(self, name: str, fn: Callable[[], Dict[str, float]],
+                    unit: str = "") -> MultiGauge:
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, MultiGauge):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, not MultiGauge")
+            m.fn = fn
+            return m
+        m = MultiGauge(name, fn, unit=unit)
+        self._metrics[name] = m
+        return m
+
+    def histogram(self, name: str, unit: str = "",
+                  bounds: Optional[Tuple[float, ...]] = None) -> Histogram:
+        return self._get_or_create(Histogram, name, bounds=bounds, unit=unit)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Deterministic point-in-time read of every instrument, sorted
+        by name: scalars for counters/gauges, label dicts for
+        multi-gauges, ``summary()`` dicts for histograms."""
+        out: Dict[str, Any] = {}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, Histogram):
+                out[name] = m.summary()
+            else:
+                out[name] = m.get()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the tracer
+# ---------------------------------------------------------------------------
+
+class Tracer:
+    """Per-run event recorder + metrics registry.
+
+    All record methods take the virtual time ``t`` explicitly (the
+    tracer never reads a clock — determinism is the caller's ``t``).
+    Events are bounded per category; ``dropped`` counts ring evictions
+    so truncation is never silent.
+    """
+
+    def __init__(self, ring: int = DEFAULT_RING):
+        if ring <= 0:
+            raise ValueError("ring capacity must be positive")
+        self.ring = ring
+        self.metrics = MetricsRegistry()
+        self._rings: Dict[str, collections.deque] = {}
+        self.dropped: Dict[str, int] = {}
+        self._seq = 0
+
+    # -- recording -----------------------------------------------------
+    # each recorder inlines the ring append rather than delegating to a
+    # shared helper, and the rings hold PLAIN TUPLES (field order =
+    # TraceEvent) that ``events()`` materialises lazily: recording is
+    # the traced-on hot path (a market run emits more trace events than
+    # sim events) and both the extra call frame and the NamedTuple
+    # constructor measurably move the bench_telemetry gate
+    def _record(self, t: float, track: str, cat: str, name: str, ph: str,
+                span: str, args: Dict[str, Any]) -> None:
+        ring = self._rings.get(cat)
+        if ring is None:
+            ring = self._rings[cat] = collections.deque(maxlen=self.ring)
+        elif len(ring) == self.ring:
+            self.dropped[cat] = self.dropped.get(cat, 0) + 1
+        ring.append((self._seq, t, track, cat, name, ph, span,
+                     args or None))
+        self._seq += 1
+
+    def span_begin(self, t: float, track: str, cat: str, name: str,
+                   span: str, **args: Any) -> None:
+        """Open an async span (``span`` is the id matching the end —
+        async, so one track can carry many overlapping jobs)."""
+        ring = self._rings.get(cat)
+        if ring is None:
+            ring = self._rings[cat] = collections.deque(maxlen=self.ring)
+        elif len(ring) == self.ring:
+            self.dropped[cat] = self.dropped.get(cat, 0) + 1
+        ring.append((self._seq, t, track, cat, name, "b", span,
+                     args or None))
+        self._seq += 1
+
+    def span_end(self, t: float, track: str, cat: str, name: str,
+                 span: str, **args: Any) -> None:
+        ring = self._rings.get(cat)
+        if ring is None:
+            ring = self._rings[cat] = collections.deque(maxlen=self.ring)
+        elif len(ring) == self.ring:
+            self.dropped[cat] = self.dropped.get(cat, 0) + 1
+        ring.append((self._seq, t, track, cat, name, "e", span,
+                     args or None))
+        self._seq += 1
+
+    def instant(self, t: float, track: str, cat: str, name: str,
+                **args: Any) -> None:
+        ring = self._rings.get(cat)
+        if ring is None:
+            ring = self._rings[cat] = collections.deque(maxlen=self.ring)
+        elif len(ring) == self.ring:
+            self.dropped[cat] = self.dropped.get(cat, 0) + 1
+        ring.append((self._seq, t, track, cat, name, "i", "",
+                     args or None))
+        self._seq += 1
+
+    def counter(self, t: float, track: str, name: str,
+                value: float) -> None:
+        """One counter-track sample (renders as a value graph)."""
+        ring = self._rings.get("metric")
+        if ring is None:
+            ring = self._rings["metric"] = collections.deque(
+                maxlen=self.ring)
+        elif len(ring) == self.ring:
+            self.dropped["metric"] = self.dropped.get("metric", 0) + 1
+        ring.append((self._seq, t, track, "metric", name, "C",
+                     "", {"value": value}))
+        self._seq += 1
+
+    def snapshot_counters(self, t: float, track: str = "metrics") -> None:
+        """Emit every registry instrument as counter samples at ``t`` —
+        the per-tick snapshot the marketplace watch loop records.
+        Histograms sample their count and sum (rates and means are
+        derivable between consecutive samples)."""
+        for name, m in sorted(self.metrics._metrics.items()):
+            if isinstance(m, Histogram):
+                self.counter(t, track, f"{name}.count", m.count)
+                self.counter(t, track, f"{name}.sum", m.total)
+            elif isinstance(m, MultiGauge):
+                for label, v in m.get().items():
+                    self.counter(t, track, f"{name}/{label}", v)
+            else:
+                self.counter(t, track, name, m.get())
+
+    # -- reading -------------------------------------------------------
+    def events(self) -> List[TraceEvent]:
+        """Every retained event, merged across category rings back into
+        one stream ordered by the global sequence number."""
+        merged: List[tuple] = []
+        for ring in self._rings.values():
+            merged.extend(ring)
+        merged.sort()                       # tuples lead with seq
+        return [TraceEvent._make(e) for e in merged]
+
+    def n_events(self) -> int:
+        return sum(len(r) for r in self._rings.values())
+
+    def n_dropped(self) -> int:
+        return sum(self.dropped.values())
+
+    def categories(self) -> Dict[str, int]:
+        return {cat: len(ring)
+                for cat, ring in sorted(self._rings.items())}
+
+    # -- exports -------------------------------------------------------
+    def jsonl_lines(self) -> Iterator[str]:
+        """The JSONL event log, one canonical-JSON line per event via
+        the journal's ``stable_dumps`` — same-seed runs produce
+        byte-identical streams (nothing wall-clock-derived is ever in
+        here; registry metrics are exported separately)."""
+        for ev in self.events():
+            yield stable_dumps(ev.to_json())
+
+    def to_chrome(self, run_name: str = "nimrod-market") -> Dict[str, Any]:
+        """Chrome trace-event JSON (object format) — loadable by
+        Perfetto / chrome://tracing.  One pid for the grid, one tid per
+        track (broker/domain), ``ts`` in microseconds of sim time.
+        The full metrics snapshot and ring-drop counts ride along in
+        ``otherData``."""
+        events = self.events()
+        tracks = sorted({e.track for e in events})
+        tid = {name: i + 1 for i, name in enumerate(tracks)}
+        out: List[Dict[str, Any]] = [{
+            "name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+            "args": {"name": run_name}}]
+        for name in tracks:
+            out.append({"name": "thread_name", "ph": "M", "pid": 1,
+                        "tid": tid[name], "args": {"name": name}})
+        for ev in events:
+            d: Dict[str, Any] = {
+                "name": ev.name, "cat": ev.cat, "ph": ev.ph,
+                "ts": ev.t * 1e6, "pid": 1, "tid": tid[ev.track]}
+            if ev.ph in ("b", "e"):
+                d["id"] = ev.span
+            elif ev.ph == "i":
+                d["s"] = "t"        # thread-scoped instant
+            if ev.args:
+                d["args"] = {k: ev.args[k] for k in sorted(ev.args)}
+            out.append(d)
+        return {"traceEvents": out,
+                "displayTimeUnit": "ms",
+                "otherData": {
+                    "run": run_name,
+                    "sim_time_unit": "1 exported second == 1 sim second",
+                    "events": self.n_events(),
+                    "dropped": dict(sorted(self.dropped.items())),
+                    "metrics": self.metrics.snapshot()}}
+
+
+def export_chrome_trace(tracer: Tracer, path: str,
+                        run_name: str = "nimrod-market") -> str:
+    """Write the Perfetto-loadable Chrome trace to ``path``; returns
+    the path for chaining."""
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(tracer.to_chrome(run_name=run_name), f, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def export_jsonl(tracer: Tracer, path: str) -> str:
+    """Write the deterministic JSONL event log to ``path`` (truncates —
+    an export is a snapshot, not a journal append)."""
+    with open(path, "w", encoding="utf-8") as f:
+        for line in tracer.jsonl_lines():
+            f.write(line + "\n")
+    return path
+
+
+def load_chrome_trace(path: str) -> Dict[str, Any]:
+    """Read back an exported Chrome trace (the dashboard's input)."""
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
