@@ -5,9 +5,15 @@ so a telemetry-off run should cost one attribute read + None check per
 site and a telemetry-on run should cost a bounded, ring-buffered append
 per event.  This bench runs the SAME seeded marketplace with telemetry
 off and on for the posted and auction markets and records the
-events/sec ratio (``overhead = 1 - off/on`` of the walls).  Results
-land in ``BENCH_telemetry.json``; the traced smoke run's Chrome export
-is written to ``trace_smoke.json`` for the CI artifact.
+events/sec ratio (``overhead = 1 - off/on`` of the walls).  The timed
+traced arms carry a live streaming subscriber (raw delivery, counting
+every event), so the gate bounds record + bus delivery — the full
+``ExperimentMonitor`` (watchdogs on) rides the untimed correctness
+pair instead, where its zero-violations and observes-only guarantees
+are asserted without gating its workload-dependent arithmetic.
+Results land in ``BENCH_telemetry.json``; the traced smoke run's
+Chrome export is written to ``benchmarks/trace_smoke.json`` for the
+CI artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_telemetry            # full
     PYTHONPATH=src python -m benchmarks.bench_telemetry --smoke    # CI
@@ -16,14 +22,16 @@ Methodology (smoke): a single long-lived process cannot time this
 fairly — the arm that runs later inherits an aged heap and reads 2-4%
 slow regardless of order, which is the same magnitude as the effect
 being gated.  So each timed run executes in a FRESH subprocess (this
-module is its own worker via ``--worker``), each arm gets
-``SMOKE_REPEATS`` independent walls, and the per-arm estimate is the
-MIN wall (noise on a shared runner is strictly additive).  The gate
-compares aggregate events/sec across both variants and FAILS if the
-traced arm falls more than ``GATE`` (5%) below untraced
+module is its own worker via ``--worker``), each iteration runs the
+off and on arms back-to-back, and the gate statistic is the MEDIAN of
+the paired off/on wall ratios across both variants: drift on a shared
+runner cancels within a pair, and the median discards the outlier
+pairs such a box produces.  The reported per-arm walls are the MIN
+over repeats (noise is strictly additive).  The gate FAILS if the
+median paired ratio falls more than ``GATE`` (5%) below 1
 (``TELEMETRY_BENCH_NO_GATE=1`` to override on hardware too noisy to
 resolve it).  Correctness rides along untimed: two same-seed traced
-runs must export byte-identical JSONL and a traced run's
+runs must export byte-identical JSONL and a traced+monitored run's
 ``stable_repr`` must equal the untraced run's.
 
 The full tier times the 10k-job x 16-broker markets in-process as one
@@ -37,8 +45,9 @@ import subprocess
 import sys
 import time
 
-from repro.core import (SchedulerConfig, Tracer, export_chrome_trace,
-                        mixed_auction_market, standard_market)
+from repro.core import (ExperimentMonitor, SchedulerConfig, Tracer,
+                        export_chrome_trace, mixed_auction_market,
+                        standard_market)
 
 HOUR = 3600.0
 
@@ -54,7 +63,7 @@ GATE = 0.05                       # max tolerated traced-on ev/s overhead
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_telemetry.json")
-TRACE_PATH = os.path.join(ROOT, "trace_smoke.json")
+TRACE_PATH = os.path.join(ROOT, "benchmarks", "trace_smoke.json")
 
 
 def _market(jobs: int, users: int, variant: str, tracer):
@@ -69,14 +78,47 @@ def _market(jobs: int, users: int, variant: str, tracer):
         tracer=tracer)
 
 
-def _run_once(jobs: int, users: int, variant: str, traced: bool):
+class _CountingSubscriber:
+    """Minimal live consumer for the timed arms: subscribes to the whole
+    stream with raw delivery and collects every event — the cheapest
+    honest subscriber (the callback is C-level ``list.append``), so the
+    gate prices the bus itself."""
+
+    __slots__ = ("seen",)
+
+    def __init__(self, tracer):
+        self.seen: list = []
+        tracer.subscribe("*", self.seen.append, raw=True)
+
+    @property
+    def n(self) -> int:
+        return len(self.seen)
+
+
+def _run_once(jobs: int, users: int, variant: str, traced: bool,
+              monitored: bool = False):
     tracer = Tracer() if traced else None
+    # the counting subscriber attaches before market construction so it
+    # sees the build-time stream (machine registrations) too
+    sub = _CountingSubscriber(tracer) if traced and not monitored else None
     market = _market(jobs, users, variant, tracer)
+    # untimed correctness arm: full online-observability stack —
+    # watchdogs must stay silent and the run must stay bit-identical
+    monitor = ExperimentMonitor(market) if monitored else None
     t0 = time.perf_counter()
     rep = market.run()
     wall = time.perf_counter() - t0
+    if monitor is not None and monitor.violations:
+        raise AssertionError(
+            f"{variant}: watchdogs fired on a clean benchmark run: "
+            f"{monitor.violations[0]}")
+    if sub is not None and sub.n != tracer.n_events():
+        raise AssertionError(
+            f"{variant}: streaming subscriber saw {sub.n} events but the "
+            f"tracer recorded {tracer.n_events()}")
     return {"wall": wall, "events": market.sim.events,
-            "report": rep, "tracer": tracer}
+            "report": rep, "tracer": tracer,
+            "monitor_events": monitor.events_seen if monitor else 0}
 
 
 def _wall_in_subprocess(jobs: int, users: int, variant: str,
@@ -110,18 +152,25 @@ def run_point_subprocess(jobs: int, users: int, variant: str,
         for arm in arms:
             w = _wall_in_subprocess(jobs, users, variant, arm == "on")
             (ons if arm == "on" else offs).append(w)
-    # untimed in-process pair: the observational guarantee + the trace
-    # itself (event counts, the Chrome artifact)
+    # untimed in-process pair: the observational guarantee with the full
+    # watchdog monitor attached + the trace itself (event counts, the
+    # Chrome artifact)
     off = _run_once(jobs, users, variant, False)
-    on = _run_once(jobs, users, variant, True)
+    on = _run_once(jobs, users, variant, True, monitored=True)
     if off["report"].stable_repr() != on["report"].stable_repr():
         raise AssertionError(
-            f"{variant}: tracing changed the market outcome — telemetry "
-            f"must be purely observational")
+            f"{variant}: monitoring changed the market outcome — the "
+            f"monitor must be purely observational")
     wall_off, wall_on = min(offs), min(ons)
     ev = off["events"]
     tr = on["tracer"]
-    return _row(variant, jobs, users, ev, wall_off, wall_on, tr)
+    row = _row(variant, jobs, users, ev, wall_off, wall_on, tr)
+    row["monitor_events"] = on["monitor_events"]
+    # the gate statistic: each iteration's off/on walls ran back-to-back
+    # so a slow patch on a shared runner hits both sides of the pair —
+    # the per-pair ratio is far more stable than any single wall
+    row["pair_ratios"] = [round(o / n, 4) for o, n in zip(offs, ons)]
+    return row
 
 
 def run_point_inprocess(jobs: int, users: int, variant: str) -> dict:
@@ -170,19 +219,21 @@ def determinism_check(jobs: int, users: int, csv: bool):
 
 
 def _aggregate_ratio(rows: list, csv: bool) -> float:
-    """Traced/untraced aggregate ev/s ratio across the matched points
-    (single short points jitter; the suite total is the signal)."""
-    ev = wall_on = wall_off = 0.0
-    for r in rows:
-        ev += r["events"]
-        wall_off += r["wall_off_s"]
-        wall_on += r["wall_on_s"]
-    if wall_off <= 0 or wall_on <= 0:
+    """Gate statistic: the MEDIAN of all paired off/on wall ratios
+    across the variants.  Each pair ran adjacently in fresh
+    subprocesses, so runner drift cancels within the pair, and the
+    median discards the outlier pairs a shared box produces — a far
+    tighter estimator of the true overhead than comparing two min
+    walls drawn from heavy-tailed noise."""
+    pairs = sorted(p for r in rows for p in r.get("pair_ratios", ()))
+    if not pairs:
         return 1.0
-    ratio = (ev / wall_on) / (ev / wall_off)
+    mid = len(pairs) // 2
+    ratio = (pairs[mid] if len(pairs) % 2
+             else 0.5 * (pairs[mid - 1] + pairs[mid]))
     if not csv:
-        print(f"gate aggregate: traced {ev / wall_on:.0f} ev/s vs "
-              f"untraced {ev / wall_off:.0f} ({ratio:.3f}x)")
+        print(f"gate: median paired off/on wall ratio {ratio:.3f}x "
+              f"over {len(pairs)} pairs")
     return ratio
 
 

@@ -8,11 +8,23 @@ reconstructed from the Chrome trace-event JSON alone (no market objects
 needed; any file written by ``export_chrome_trace`` works):
 
     PYTHONPATH=src python -m benchmarks.make_report --market-trace out.json
+
+Or render the causal post-mortem for one job — every attempt it made,
+what each cost, and what else was happening on the machines it touched
+(churn, failures, suspicions, exceptional money movements):
+
+    PYTHONPATH=src python -m benchmarks.make_report \\
+        --explain-job exp/rajkumar:j00007 out.json
+
+``--explain-job auto`` picks the most-retried job in the trace (ideal
+for CI smoke renders).  Both readers exit nonzero with a one-line error
+on a truncated, corrupt, or empty trace file.
 """
 import argparse
 import json
 import math
 import os
+import sys
 from collections import Counter, defaultdict
 
 CELLS = "benchmarks/results/dryrun_cells.jsonl"
@@ -89,13 +101,72 @@ def _sparkline(samples, width=64):
     return line, lo, hi
 
 
+def _load_trace(path):
+    """Read a Chrome trace for the dashboard/post-mortem readers.  A
+    missing, truncated, corrupt, or empty file is a *diagnosable* error:
+    print one line to stderr and exit 2 instead of tracebacking — CI
+    gates read the exit code."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"error: cannot read trace {path!r}: {e.strerror or e}",
+              file=sys.stderr)
+        sys.exit(2)
+    except json.JSONDecodeError as e:
+        print(f"error: corrupt trace {path!r}: not valid JSON "
+              f"(line {e.lineno}: {e.msg})", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, dict) or not doc.get("traceEvents"):
+        print(f"error: empty trace {path!r}: no traceEvents "
+              f"(truncated export?)", file=sys.stderr)
+        sys.exit(2)
+    return doc
+
+
+def _percentile_from_summary(summary, p):
+    """Percentile estimate from an exported ``Histogram.summary()`` dict
+    (``le_<bound>`` / ``overflow`` bucket keys) — the dashboard has only
+    the JSON, not the live instrument.  Mirrors
+    ``telemetry.Histogram.percentile``: linear interpolation inside the
+    containing bucket, min/max tightening the edge buckets."""
+    count = summary.get("count", 0)
+    if not count:
+        return 0.0
+    buckets = summary.get("buckets", {})
+    bounds = sorted(float(k[3:]) for k in buckets if k.startswith("le_"))
+    # bucket keys were written as le_<repr(bound)>; match them by value
+    counts = []
+    for b in bounds:
+        for k, v in buckets.items():
+            if k.startswith("le_") and float(k[3:]) == b:
+                counts.append(v)
+                break
+        else:
+            counts.append(0)
+    counts.append(buckets.get("overflow", 0))
+    lo_obs, hi_obs = summary.get("min", 0.0), summary.get("max", 0.0)
+    target = p / 100.0 * count
+    cum = 0.0
+    for i, n in enumerate(counts):
+        if n == 0:
+            continue
+        lo = lo_obs if i == 0 else max(bounds[i - 1], lo_obs)
+        hi = hi_obs if i == len(bounds) else min(bounds[i], hi_obs)
+        if hi < lo:
+            hi = lo
+        if cum + n >= target:
+            return lo + (target - cum) / n * (hi - lo)
+        cum += n
+    return hi_obs
+
+
 def market_dashboard(path):
     """Render the market dashboard from a Chrome trace file: the inputs
     are ``price.mean_quote`` counter samples, ``broker_finish``
     instants, attempt-span outcomes, and the ``otherData`` metrics
     snapshot — everything the exporter wrote, nothing else."""
-    with open(path, encoding="utf-8") as f:
-        doc = json.load(f)
+    doc = _load_trace(path)
     evs = [e for e in doc.get("traceEvents", []) if e.get("ph") != "M"]
     other = doc.get("otherData", {})
     metrics = other.get("metrics", {})
@@ -183,9 +254,209 @@ def market_dashboard(path):
     if isinstance(att, dict) and att.get("count"):
         A(f"\nattempts/job: mean {att['sum'] / att['count']:.2f} "
           f"(n={att['count']}, max {att['max']:.0f})")
+    lat = metrics.get("broker.attempt_latency_s")
+    if isinstance(lat, dict) and lat.get("count"):
+        p50, p95, p99 = (_percentile_from_summary(lat, p)
+                         for p in (50, 95, 99))
+        A(f"attempt latency (submit->settle): p50 {p50 / 60:.1f}min, "
+          f"p95 {p95 / 60:.1f}min, p99 {p99 / 60:.1f}min "
+          f"(n={lat['count']})")
     eps = metrics.get("market.events_per_sec")
     if eps:
         A(f"sim throughput when captured: {eps:,.0f} events/s")
+    return "\n".join(L)
+
+
+# ---------------------------------------------------------------------------
+# --explain-job: causal post-mortem for one job from the trace alone
+# ---------------------------------------------------------------------------
+
+def _job_key(span_id):
+    """``EXP/JOB/aN`` -> ``EXP/JOB``; ``EXP/JOB`` -> itself."""
+    parts = span_id.rsplit("/", 1)
+    if len(parts) == 2 and parts[1].startswith("a") \
+            and parts[1][1:].isdigit():
+        return parts[0]
+    return span_id
+
+
+def _primary_key(job_key):
+    """Duplicates are ``EXP/JOB~k`` — fold them onto their primary."""
+    return job_key.split("~", 1)[0]
+
+
+def explain_job(path, target):
+    """Walk the trace backward from one job and narrate what happened
+    to it: every dispatch attempt (where it went, at what committed
+    price, how it ended), the churn/failure/suspicion/money events on
+    the machines it touched while it was there, and a cost-and-delay
+    attribution across the attempts.  ``target`` is the job span id
+    (``EXP/JOB``); ``auto`` picks the most-retried job in the trace."""
+    doc = _load_trace(path)
+    evs = [e for e in doc["traceEvents"] if e.get("ph") != "M"]
+    tid_track = {e["tid"]: e["args"]["name"]
+                 for e in doc["traceEvents"]
+                 if e.get("ph") == "M" and e.get("name") == "thread_name"}
+
+    # group attempt-span events by primary job.  A fault requeue hands
+    # the attempt back (the counter rolls back), so one span id can
+    # legitimately carry several begin/end pairs — pair them in stream
+    # order rather than keying on the id alone
+    raw = defaultdict(list)             # primary -> [event, ...]
+    job_spans = defaultdict(dict)       # job_key -> {b, e}
+    for e in evs:
+        if e.get("cat") != "job" or e["ph"] not in ("b", "e"):
+            continue
+        sid = e.get("id", "")
+        if e["name"] == "attempt":
+            raw[_primary_key(_job_key(sid))].append(e)
+        elif e["name"] == "job":
+            job_spans[sid][e["ph"]] = e
+
+    if not raw:
+        print(f"error: trace {path!r} has no attempt spans "
+              f"(exported before any dispatch?)", file=sys.stderr)
+        sys.exit(2)
+
+    def _pair(events):
+        """Stream-order pairing: (begin_ts, span_id, b_ev, e_ev) rows."""
+        open_b = {}
+        rows = []
+        for e in events:
+            sid = e.get("id", "")
+            if e["ph"] == "b":
+                open_b[sid] = e
+            else:
+                b = open_b.pop(sid, None)
+                ts = b["ts"] if b else e["ts"]
+                rows.append((ts, sid, b, e))
+        rows.extend((b["ts"], sid, b, None) for sid, b in open_b.items())
+        rows.sort(key=lambda r: (r[0], r[1]))
+        return rows
+
+    if target == "auto":
+        # the most-retried job tells the best story; break ties on the
+        # latest attempt timestamp, then id (deterministic)
+        def _score(item):
+            key, events = item
+            return (sum(1 for e in events if e["ph"] == "e"),
+                    max(e["ts"] for e in events), key)
+        target = max(raw.items(), key=_score)[0]
+    elif target not in raw:
+        near = sorted(k for k in raw if target in k)[:5]
+        hint = f" (close: {', '.join(near)})" if near else ""
+        print(f"error: no job {target!r} in trace {path!r}{hint}",
+              file=sys.stderr)
+        sys.exit(3)
+
+    rows = _pair(raw[target])
+    resources = {ev["args"]["resource"]
+                 for _, _, b, e in rows for ev in (b, e)
+                 if ev and ev.get("args", {}).get("resource")}
+    user = ""
+    track = rows[0][2] or rows[0][3]
+    if track is not None:
+        tr = tid_track.get(track["tid"], "")
+        user = tr[7:] if tr.startswith("broker:") else tr
+
+    L = []
+    A = L.append
+    A(f"# Post-mortem: job {target}  (broker {user or '?'})")
+    jspan = job_spans.get(target, {})
+    jb, je = jspan.get("b"), jspan.get("e")
+    if jb and je:
+        A(f"lifecycle: {jb['ts'] / HOUR_US:.2f}h -> "
+          f"{je['ts'] / HOUR_US:.2f}h "
+          f"({(je['ts'] - jb['ts']) / HOUR_US:.2f}h wall), outcome "
+          f"**{je['args'].get('outcome', '?')}** after "
+          f"{je['args'].get('attempts', len(rows))} attempt(s), "
+          f"final cost {je['args'].get('cost', 0.0):.2f} G$")
+    elif jb:
+        A(f"lifecycle: began {jb['ts'] / HOUR_US:.2f}h, never closed "
+          f"(run ended with the job in flight)")
+
+    # context: what happened on/around the machines this job touched
+    lo = min(ts for ts, _, _, _ in rows)
+    hi = max((ev["ts"] for _, _, b, e in rows for ev in (b, e) if ev),
+             default=lo)
+    pad = 0.5 * HOUR_US
+    context = []
+    for e in evs:
+        if e["ph"] != "i" or not (lo - pad <= e["ts"] <= hi + pad):
+            continue
+        a = e.get("args", {})
+        cat, name = e.get("cat"), e.get("name")
+        if cat in ("churn", "gis", "bank") and (
+                a.get("resource") in resources
+                or (cat == "churn"
+                    and name in ("site_leave", "site_join", "eviction"))):
+            context.append(e)
+        elif cat == "auction" and name == "contract" \
+                and a.get("user") == user:
+            context.append(e)
+        elif cat == "job" and name in ("requeue", "duplicate") \
+                and _primary_key(f"x/{a.get('job_id', '')}") \
+                == f"x/{target.split('/', 1)[-1]}":
+            context.append(e)
+    context.sort(key=lambda e: e["ts"])
+
+    A(f"\n## Attempts ({len(rows)})")
+    settled_cost = killed_cost = 0.0
+    failed_time = gap_time = 0.0
+    prev_end = None
+    for i, (ts, sid, b, e) in enumerate(rows, 1):
+        ba = (b or {}).get("args", {})
+        ea = (e or {}).get("args", {})
+        res = ea.get("resource") or ba.get("resource") or "?"
+        out = ea.get("outcome", "open")
+        cost = ea.get("cost", 0.0)
+        t0 = ts / HOUR_US
+        dup = "~" in sid.rsplit("/", 1)[0]
+        label = "duplicate " if dup else ""
+        line = (f"{i}. t={t0:6.2f}h  {label}attempt `{sid}` -> {res} "
+                f"(committed {ba.get('committed', 0.0):.2f} G$")
+        if ba.get("price"):
+            line += f" @ {ba['price']:.3f} G$/chip-h"
+        line += f"): **{out}**"
+        if e is not None:
+            dur = (e["ts"] - ts) / HOUR_US if b else 0.0
+            line += f" after {dur:.2f}h"
+            if out == "settled":
+                settled_cost += cost
+                line += f", cost {cost:.2f} G$"
+            elif out == "killed":
+                killed_cost += cost
+                line += f", sunk {cost:.2f} G$ (lost the duplicate race)"
+            elif out in ("failed", "slot_lost"):
+                failed_time += (e["ts"] - ts) if b else 0.0
+                if ea.get("reason"):
+                    line += f" ({ea['reason']})"
+            if prev_end is not None and ts > prev_end:
+                gap_time += ts - prev_end
+            prev_end = e["ts"]
+        A(line)
+
+    if context:
+        A(f"\n## Concurrent events on involved machines "
+          f"({len(context)})")
+        for e in context:
+            a = e.get("args", {})
+            bits = " ".join(f"{k}={a[k]}" for k in sorted(a))
+            A(f"* t={e['ts'] / HOUR_US:6.2f}h  [{e['cat']}] "
+              f"{e['name']}  {bits}")
+
+    A("\n## Attribution")
+    A(f"* money: {settled_cost:.2f} G$ bought the result"
+      + (f"; {killed_cost:.2f} G$ sunk into killed duplicates "
+         f"(speculation premium)" if killed_cost else
+         "; no duplicate spend"))
+    A(f"* delay: {failed_time / HOUR_US:.2f}h burned in "
+      f"failed/preempted attempts, {gap_time / HOUR_US:.2f}h waiting "
+      f"between attempts (queue/replan)")
+    if jb and je and rows:
+        useful = (je["ts"] - jb["ts"]) - failed_time - gap_time
+        A(f"* of {(je['ts'] - jb['ts']) / HOUR_US:.2f}h wall, "
+          f"{max(useful, 0.0) / HOUR_US:.2f}h was the winning attempt")
     return "\n".join(L)
 
 
@@ -432,8 +703,20 @@ if __name__ == "__main__":
     ap.add_argument("--market-trace", metavar="TRACE_JSON", default=None,
                     help="render the observability dashboard from an "
                          "exported Chrome trace instead of EXPERIMENTS.md")
+    ap.add_argument("--explain-job", metavar="EXP/JOB", default=None,
+                    help="render a causal post-mortem for one job from "
+                         "the trace given as the positional argument "
+                         "(or --market-trace); 'auto' picks the "
+                         "most-retried job")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="trace file for --explain-job")
     args = ap.parse_args()
-    if args.market_trace:
+    if args.explain_job:
+        path = args.trace or args.market_trace
+        if not path:
+            ap.error("--explain-job needs a trace file")
+        print(explain_job(path, args.explain_job))
+    elif args.market_trace:
         print(market_dashboard(args.market_trace))
     else:
         main()

@@ -1,0 +1,90 @@
+"""Live monitoring demo: watchdogs, health rollups, sim-clock steering.
+
+One churny, failure-prone market runs with the full online
+observability stack attached: a ``Tracer`` records every event, and an
+``ExperimentMonitor`` subscribes to the live stream — folding it into
+per-broker and per-site health while its invariant watchdogs (money
+conservation, slot accounting, attempt-span balance) check the books
+at every event.  A violation would raise at the sim time it happens,
+not at run end.
+
+Steering is scheduled on the *sim clock* before the run starts, so the
+steered run is an ordinary deterministic run: at t=0.5h one broker
+gets a budget top-up and a tighter deadline, and a whole site is
+drained out of the grid (in-flight work fails over, contracts void
+with breach rebates).  Every action lands in the trace as a ``steer``
+instant — re-run with the same seed and the bytes match.
+
+    PYTHONPATH=src python examples/monitor_demo.py --trace out.json
+
+Exits nonzero if any watchdog fired — CI runs this as the monitor
+smoke gate.
+"""
+import argparse
+import sys
+
+from repro.core import (ExperimentMonitor, Tracer, export_chrome_trace,
+                        standard_market)
+
+HOUR = 3600.0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="monitored + steered market run, watchdogs enabled")
+    ap.add_argument("--trace", metavar="OUT_JSON", default="out.json",
+                    help="Chrome trace output path (default: out.json)")
+    ap.add_argument("--no-steer", action="store_true",
+                    help="skip the scheduled steering actions")
+    args = ap.parse_args()
+
+    tracer = Tracer()
+    market = standard_market(4, n_machines=12, seed=5, n_jobs=10,
+                             gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                             churn_mean_downtime_h=1.0, tracer=tracer)
+    monitor = ExperimentMonitor(market, watchdogs=True,
+                                on_violation="record")
+
+    if not args.no_steer:
+        # scheduled before run(), applied at virtual time by the DES —
+        # the steered run stays same-seed byte-reproducible.  Steer the
+        # last broker (the most contended one) early enough that it is
+        # still running
+        user = market.users[-1].name
+        eng = market.engines[-1]
+        monitor.steer_broker(user, budget=eng.ledger.budget * 1.5,
+                             deadline=eng.req.deadline * 0.75,
+                             at=0.5 * HOUR)
+        # Monash is up at t=0.5h in this seeded scenario (churn takes
+        # other sites down around then — draining the last live site
+        # would be vetoed)
+        monitor.drain_site("Monash", at=0.5 * HOUR)
+
+    report = market.run(failures=True, churn=True)
+    print(report.summary())
+
+    print()
+    print(monitor.dashboard())
+
+    if monitor.steering_log:
+        print("\n-- steering log --")
+        for act in monitor.steering_log:
+            print(f"  t={act.t / HOUR:5.1f}h {act.kind:12s} "
+                  f"{act.target:10s} {act.detail}")
+
+    export_chrome_trace(tracer, args.trace, run_name="monitor_demo")
+    print(f"\nwrote {args.trace} — open it at https://ui.perfetto.dev")
+
+    if monitor.violations:
+        print(f"\n{len(monitor.violations)} invariant violation(s):",
+              file=sys.stderr)
+        for v in monitor.violations:
+            print(v, file=sys.stderr)
+        return 1
+    print(f"\nwatchdogs clean: {monitor.events_seen} events checked, "
+          f"0 violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

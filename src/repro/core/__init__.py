@@ -21,6 +21,9 @@ from repro.core.jobs import Job, JobSpec, JobStatus
 from repro.core.marketplace import (Marketplace, MarketReport, MarketUser,
                                     UserOutcome, mixed_auction_market,
                                     standard_market)
+from repro.core.monitor import (BrokerHealth, ExperimentMonitor,
+                                InvariantViolation, SiteHealth,
+                                SteeringAction)
 from repro.core.parametric import ExperimentReport, NimrodG
 from repro.core.persistence import (Journal, load_events, replay,
                                     stable_dumps)
@@ -35,9 +38,9 @@ from repro.core.secondary import (Clearing, ClearingHistory, ResaleFill,
 from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
                                   duration_model)
 from repro.core.telemetry import (Counter, Gauge, Histogram,
-                                  MetricsRegistry, MultiGauge, TraceEvent,
-                                  Tracer, export_chrome_trace, export_jsonl,
-                                  load_chrome_trace)
+                                  MetricsRegistry, MultiGauge, Subscription,
+                                  TraceEvent, Tracer, export_chrome_trace,
+                                  export_jsonl, load_chrome_trace)
 from repro.core.strategies import (Strategy, StrategyContext,
                                    available_strategies, cost_per_job,
                                    strategy_class)
@@ -51,12 +54,15 @@ from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
 __all__ = [
     "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
     "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
-    "ChurnProcess", "Clearing", "ClearingHistory", "ClearingRound",
+    "BrokerHealth", "ChurnProcess", "Clearing", "ClearingHistory",
+    "ClearingRound",
     "Contract", "ContractQuote", "Counter",
     "CounterOffer", "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
-    "ExperimentReport", "FailureProcess", "GISClient", "GISEntry",
+    "ExperimentMonitor", "ExperimentReport", "FailureProcess",
+    "GISClient", "GISEntry",
     "GISRecord", "GISRegistry", "GISSnapshot", "Gauge", "GridBank",
     "GridInformationService", "Histogram", "Job", "JobSpec",
+    "InvariantViolation",
     "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
     "Marketplace", "MetricsRegistry", "MultiGauge",
     "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
@@ -64,9 +70,10 @@ __all__ = [
     "Reservation",
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
     "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
-    "SecondaryMarket",
-    "SimulatedExecutor", "Simulator", "StagingProxy", "Strategy",
-    "StrategyContext", "TraceEvent", "Tracer", "TradeFederation",
+    "SecondaryMarket", "SimulatedExecutor", "Simulator", "SiteHealth",
+    "StagingProxy", "SteeringAction", "Strategy",
+    "StrategyContext", "Subscription", "TraceEvent", "Tracer",
+    "TradeFederation",
     "TradeServer", "UserOutcome", "UserRequirements",
     "available_strategies", "cost_per_job", "create_strategy",
     "department_of",

@@ -154,10 +154,12 @@ class GridBank:
         return sorted(pairs, key=lambda p: (-p[1], p[0]))[:n]
 
     # -- audit ---------------------------------------------------------
-    def _kind_breakdown(self, user: Optional[str] = None) -> str:
+    def kind_breakdown(self, user: Optional[str] = None) -> str:
         """Per-kind signed totals (settle/kill/contract/refund/idle/
         resale), grid-wide or for one user — the diagnosis a bare
-        "books don't balance" error denies its reader."""
+        "books don't balance" error denies its reader.  Public because
+        the online money-conservation watchdog
+        (``repro.core.monitor``) attaches it to violations too."""
         by_kind: Dict[str, float] = {}
         for e in self.entries:
             if user is not None and e.user != user:
@@ -183,7 +185,7 @@ class GridBank:
             raise ReconciliationError(
                 f"owner revenue {by_owner!r} != user spend {by_user!r} "
                 f"(delta {by_owner - by_user!r}); "
-                f"per-kind totals: {self._kind_breakdown()}")
+                f"per-kind totals: {self.kind_breakdown()}")
         if ledgers is not None:
             for user, ledger in sorted(ledgers.items()):
                 settled = getattr(ledger, "settled", ledger)
@@ -194,7 +196,7 @@ class GridBank:
                         f"bank record {bank!r} "
                         f"(delta {settled - bank!r}); "
                         f"per-kind totals for {user!r}: "
-                        f"{self._kind_breakdown(user)}")
+                        f"{self.kind_breakdown(user)}")
         return total
 
     def statement(self) -> str:

@@ -99,6 +99,12 @@ class SimulatedExecutor:
         self.proxy = StagingProxy()
         self.slot_races_lost = 0
         self._running: Dict[str, dict] = {}    # job_id -> {cancelled: bool}
+        # independent per-resource count of slots this executor holds,
+        # maintained at exactly the acquire/release sites.  The online
+        # slot-accounting watchdog cross-checks it against the
+        # directory's ``running`` book in O(1) per resource — a rogue
+        # release moves one book but not the other
+        self._held: Dict[str, int] = {}
 
     def submit(self, job: Job, resource: str, cb: DispatchCallbacks) -> None:
         # register the cancel token BEFORE the latency hop: a duplicate
@@ -135,6 +141,7 @@ class SimulatedExecutor:
             cb.blocked(job, SLOT_LOST)
             return
         job.slot_held = True
+        self._held[resource] = self._held.get(resource, 0) + 1
         job.acquired_at = self.sim.now
         s_in, ex, s_out = duration_model(
             spec, job.spec.est_seconds_base, job.spec.stage_in_bytes,
@@ -185,6 +192,7 @@ class SimulatedExecutor:
         del self._running[job.job_id]
         if job.slot_held:
             job.slot_held = False
+            self._held[resource] -= 1
             self.directory.status(resource).release()
 
     def cancel(self, job: Job) -> None:

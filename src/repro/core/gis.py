@@ -239,9 +239,14 @@ class GridInformationService:
                 beat += 1
         if self.tracer is not None:
             # one instant per pump (not per beat): the pump cadence is
-            # the signal; per-resource beats would drown the gis track
+            # the signal; per-resource beats would drown the gis track.
+            # The suspected count rides along so stream consumers (the
+            # live monitor's site-reliability rollup) track grid liveness
+            # without polling the registry
+            sus = sum(1 for name in self._records
+                      if self.suspected(name, t))
             self.tracer.instant(t, "gis", "gis", "heartbeat_pump",
-                                beats=beat,
+                                beats=beat, suspects=sus,
                                 registered=len(self._records))
         return beat
 

@@ -423,6 +423,18 @@ class Marketplace:
                              kind="refund")
             self.refunds += amt
 
+    def drain_site(self, site: str) -> bool:
+        """Steering: force ``site`` out of the grid NOW and keep it out
+        (rejoin ETA published as ``inf`` — unlike churn, nothing
+        schedules a return).  Same departure semantics as a churn leave:
+        in-flight jobs fail over, live contracts are voided with breach
+        rebates, the domain's trade server leaves the federation.
+        Returns False when the drain was vetoed (the site is already
+        gone, or removing it would empty the grid below
+        ``churn_min_sites``).  The ``ExperimentMonitor`` records a
+        ``steer`` instant around this call."""
+        return self._site_leaves(site, rejoin_at=math.inf)
+
     def _site_joins(self, site: str) -> None:
         t = self.sim.now
         # fresh trade server — the old book died with the old site

@@ -1,0 +1,650 @@
+"""Live experiment monitor: streaming health, watchdogs, steering.
+
+Nimrod/G's broker does not just schedule — the paper's architecture has
+it "monitoring and steering" the experiment against its deadline and
+budget while the run is in flight.  PR 7 built the record side of that
+story (the ``Tracer``); this module builds the *online* side on top of
+the tracer's subscriber bus:
+
+* **Live health rollups.**  ``ExperimentMonitor`` subscribes to the
+  whole event stream and folds it into per-broker health (budget
+  burn-rate vs. remaining work, deadline risk from the attempt funnel)
+  and per-site health (membership churn, machine failures, suspicion
+  counts, breach refunds) — readable at any sim time via
+  ``broker_health()`` / ``site_health()`` / ``dashboard()``.
+
+* **Online invariant watchdogs.**  The accounting identities the repo
+  already checks *post-hoc* (``GridBank.reconcile``, the resale
+  round-trip audit) are enforced *at event time*: money conservation
+  (each broker ledger vs. the bank's record of that user, bit-for-bit),
+  slot accounting (``acquires == releases + running`` plus a census of
+  actually-held slots from the executors' in-flight token registries),
+  and attempt-span balance (no double begin, no end without begin).  A
+  violation raises ``InvariantViolation`` at the sim time it happens —
+  not at run end — carrying a causal context window: the last K events
+  on every involved track.
+
+* **Steering.**  The monitor can adjust a broker's deadline/budget or
+  drain a site, scheduled on the *sim clock* (``at=``), so a steered
+  run is an ordinary deterministic run: every action is recorded as a
+  ``steer`` trace instant and two same-seed steered runs are
+  byte-identical.
+
+The monitor only observes and steers through public market APIs: it
+draws no RNG and never mutates market state from the observation path,
+so attaching it leaves same-seed runs byte-identical (the golden
+hashes pin this).  It subscribes with raw delivery and keeps every
+per-event handler to O(1) dict work, but its watchdog arithmetic is
+real work on top of the bus — bench_telemetry gates the record+deliver
+path and asserts the monitor's cleanliness on the untimed correctness
+pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.telemetry import TraceEvent
+
+HOUR = 3600.0
+
+
+def _fmt_event(ev: TraceEvent) -> str:
+    args = ""
+    if ev.args:
+        args = " " + " ".join(f"{k}={ev.args[k]!r}"
+                              for k in sorted(ev.args))
+    span = f" span={ev.span}" if ev.span else ""
+    return (f"seq={ev.seq} t={ev.t:.1f} {ev.track} "
+            f"{ev.cat}/{ev.name} ph={ev.ph}{span}{args}")
+
+
+class InvariantViolation(Exception):
+    """An online watchdog caught the books out of balance — raised at
+    the sim time of the offending event, with the last-K events on
+    every involved track attached as the causal context window."""
+
+    def __init__(self, t: float, invariant: str, track: str, detail: str,
+                 context: List[TraceEvent]):
+        self.t = t
+        self.invariant = invariant
+        self.track = track
+        self.detail = detail
+        self.context = context
+        lines = [f"[t={t:.1f}s] {invariant} violated on {track}: {detail}"]
+        if context:
+            tracks = sorted({e.track for e in context})
+            lines.append(f"  causal context ({len(context)} events on "
+                         f"{len(tracks)} track(s)):")
+            lines.extend(f"    {_fmt_event(e)}" for e in context)
+        super().__init__("\n".join(lines))
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokerHealth:
+    """Point-in-time health snapshot for one broker, rolled up from the
+    live stream plus the engine's own books."""
+    user: str
+    strategy: str
+    t: float
+    jobs: int
+    done: int
+    remaining: int
+    finished: bool
+    spent: float
+    committed: float
+    budget: float
+    burn_frac: float                 # spent / budget
+    progress_frac: float             # done / jobs
+    projected_spend: float           # spent scaled to full completion
+    budget_risk: str                 # ok | at_risk | over
+    deadline: float
+    time_left_h: float
+    needed_rate_h: float             # jobs/h needed to make the deadline
+    observed_rate_h: float           # jobs/h achieved so far
+    deadline_risk: str               # ok | at_risk | critical | done
+    requeues: int
+    outcomes: Dict[str, int]         # attempt-funnel outcome counts
+
+    def row(self) -> str:
+        outs = " ".join(f"{k}:{v}" for k, v in sorted(self.outcomes.items()))
+        return (f"{self.user:10s} {self.done:4d}/{self.jobs:<4d} "
+                f"spent={self.spent:9.2f}/{self.budget:<9.2f} "
+                f"burn={self.burn_frac:5.1%} "
+                f"deadline={self.deadline_risk:8s} "
+                f"budget={self.budget_risk:7s} "
+                f"rate={self.observed_rate_h:6.1f}/h "
+                f"need={self.needed_rate_h:6.1f}/h  [{outs}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteHealth:
+    """Point-in-time reliability snapshot for one administrative
+    domain, tallied from churn/gis instants on its track."""
+    site: str
+    resources: int
+    leaves: int
+    joins: int
+    evictions: int                   # eviction instants (batches)
+    evicted_jobs: int
+    machine_downs: int
+    machine_ups: int
+    suspects: int                    # dispatch-burn suspicions on its boxes
+    refunds_gd: float                # breach rebates the domain paid back
+    reliability: float               # heuristic in (0, 1]: 1 = no incidents
+
+    def row(self) -> str:
+        return (f"{self.site:10s} res={self.resources:3d} "
+                f"leave/join={self.leaves}/{self.joins} "
+                f"down/up={self.machine_downs}/{self.machine_ups} "
+                f"evicted={self.evicted_jobs:3d} "
+                f"suspects={self.suspects:3d} "
+                f"refunds={self.refunds_gd:8.2f}G$ "
+                f"reliability={self.reliability:.3f}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SteeringAction:
+    """Audit record of one applied steering action (also emitted as a
+    ``steer`` trace instant, so steered runs replay byte-identically)."""
+    t: float
+    kind: str                        # steer_broker | drain_site
+    target: str
+    detail: Dict[str, Any]
+
+
+class ExperimentMonitor:
+    """Online monitor over one :class:`~repro.core.marketplace.Marketplace`
+    run.  Requires the market to have been built with a tracer.
+
+    ``on_violation="raise"`` (default) makes a watchdog raise
+    :class:`InvariantViolation` straight out of the recording site — the
+    run dies at the sim time of the violation.  ``"record"`` appends to
+    :attr:`violations` instead (for scanning runs expected to be dirty).
+    """
+
+    def __init__(self, market, *, watchdogs: bool = True,
+                 context_window: int = 32,
+                 on_violation: str = "raise"):
+        if market.tracer is None:
+            raise ValueError(
+                "ExperimentMonitor needs a traced market: build it with "
+                "standard_market(..., tracer=Tracer())")
+        if on_violation not in ("raise", "record"):
+            raise ValueError(f"on_violation must be 'raise' or 'record', "
+                             f"got {on_violation!r}")
+        self.market = market
+        self.tracer = market.tracer
+        self.watchdogs = watchdogs
+        self.on_violation = on_violation
+        self.violations: List[InvariantViolation] = []
+        self.steering_log: List[SteeringAction] = []
+        self.events_seen = 0
+        self._k = context_window
+        self._last_t = 0.0
+        # stream-derived state ("broker:<user>"-track keys on the hot
+        # path; sliced down to user names only in the health snapshots)
+        self._open_attempts: set = set()
+        self._open_jobs: set = set()
+        self._funnel: Dict[str, Dict[str, int]] = {}
+        self._requeues: Dict[str, int] = {}
+        self._first_dispatch: Dict[str, float] = {}
+        self._finished: set = set()
+        self._site: Dict[str, Dict[str, int]] = {}
+        self._engines: Dict[str, Any] = {}
+        self._executors: List[Any] = []
+        self._audit_tick = 0
+        # one small handler per category — no per-event dispatch
+        # cascade, and categories the monitor has no use for (sched,
+        # auction, resale span traffic) never reach it at all.  Raw
+        # delivery: the handlers index the tuple directly and skip the
+        # NamedTuple constructor, the dominant bus cost per event
+        self._subs = [
+            self.tracer.subscribe(cat, fn, raw=True) for cat, fn in (
+                ("job", self._on_job), ("metric", self._on_metric),
+                ("bank", self._on_bank), ("churn", self._on_churn),
+                ("gis", self._on_gis), ("market", self._on_market))]
+
+    def close(self) -> None:
+        """Detach from the stream (idempotent)."""
+        for sub in self._subs:
+            sub.cancel()
+
+    # -- stream consumption --------------------------------------------
+    # These run once per trace event on the traced hot path, under the
+    # bench_telemetry 5% overhead gate: tuple indexing instead of
+    # NamedTuple attribute access, no per-event allocation, and every
+    # per-resource/per-user check is O(1) dict work.  Causal context is
+    # NOT accumulated here — it is reconstructed from the tracer's ring
+    # buffers only when a violation actually fires.
+    def _on_job(self, ev: tuple) -> None:
+        self.events_seen += 1
+        self._last_t = ev[1]
+        name = ev[4]
+        if name == "attempt":
+            sid = ev[6]
+            if ev[5] == "b":
+                open_a = self._open_attempts
+                if sid in open_a:
+                    if self.watchdogs:
+                        self._violate(ev, "attempt_span_balance",
+                                      f"attempt span {sid!r} began twice")
+                else:
+                    open_a.add(sid)
+                fd = self._first_dispatch
+                if ev[2] not in fd:
+                    fd[ev[2]] = ev[1]
+            else:
+                open_a = self._open_attempts
+                if sid in open_a:
+                    open_a.remove(sid)
+                elif self.watchdogs:
+                    self._violate(ev, "attempt_span_balance",
+                                  f"attempt span {sid!r} ended without "
+                                  f"a begin")
+                args = ev[7]
+                out = args["outcome"]
+                funnel = self._funnel.get(ev[2])
+                if funnel is None:
+                    funnel = self._funnel[ev[2]] = {}
+                funnel[out] = funnel.get(out, 0) + 1
+                if self.watchdogs:
+                    if "cost" in args:
+                        self._check_money(ev, ev[2][7:])
+                    res = args.get("resource")
+                    if res:
+                        self._check_slots(ev, res)
+        elif name == "job":
+            sid = ev[6]
+            if ev[5] == "b":
+                open_j = self._open_jobs
+                if sid in open_j:
+                    if self.watchdogs:
+                        self._violate(ev, "attempt_span_balance",
+                                      f"job span {sid!r} began twice")
+                else:
+                    open_j.add(sid)
+            elif ev[5] == "e":
+                open_j = self._open_jobs
+                if sid in open_j:
+                    open_j.remove(sid)
+                elif self.watchdogs:
+                    self._violate(ev, "attempt_span_balance",
+                                  f"job span {sid!r} ended without a begin")
+                if self.watchdogs and ev[7] and "cost" in ev[7]:
+                    self._check_money(ev, ev[2][7:])
+        elif name == "requeue":
+            self._requeues[ev[2]] = self._requeues.get(ev[2], 0) + 1
+
+    def _on_metric(self, ev: tuple) -> None:
+        self.events_seen += 1
+        # registry snapshots are the bulk of the stream and carry no
+        # causal information; the per-watch-tick price sample doubles as
+        # the deep-audit heartbeat (every 4th tick, like the registry
+        # snapshot cadence — the per-event checks are the exact-time
+        # detectors, the audit is the safety net behind them)
+        if ev[4] == "price.mean_quote" and self.watchdogs:
+            self._last_t = ev[1]
+            self._audit_tick += 1
+            if self._audit_tick % 4 == 1:
+                self._audit(ev)
+
+    def _on_bank(self, ev: tuple) -> None:
+        self.events_seen += 1
+        self._last_t = ev[1]
+        # exceptional money movement (kill/refund/idle/resale/fee):
+        # ledger and bank were both updated before the instant, so the
+        # per-user identity must hold right here
+        if self.watchdogs:
+            self._check_money(ev, ev[7]["user"])
+
+    def _on_gis(self, ev: tuple) -> None:
+        self.events_seen += 1
+        self._last_t = ev[1]
+        if ev[4] == "suspect":
+            args = ev[7]
+            res = args.get("resource") if args else None
+            if res is not None and res in self.market.directory:
+                site = self.market.directory.spec(res).site
+                self._site_tally(site)["suspects"] += 1
+
+    def _on_market(self, ev: tuple) -> None:
+        self.events_seen += 1
+        self._last_t = ev[1]
+        if ev[4] == "broker_finish":
+            user = ev[7]["user"]
+            self._finished.add(user)
+            if self.watchdogs:
+                self._check_money(ev, user)
+
+    def _on_churn(self, ev: tuple) -> None:
+        self.events_seen += 1
+        self._last_t = ev[1]
+        name = ev[4]
+        args = ev[7] or {}
+        site = args.get("site")
+        if site is None:
+            res = args.get("resource")
+            if res is not None and res in self.market.directory:
+                site = self.market.directory.spec(res).site
+            elif ev[2].startswith("site:"):
+                site = ev[2][5:]
+            else:
+                return
+        tally = self._site_tally(site)
+        if name == "site_leave":
+            tally["leaves"] += 1
+        elif name == "site_join":
+            tally["joins"] += 1
+        elif name == "eviction":
+            tally["evictions"] += 1
+            tally["evicted_jobs"] += int(args.get("jobs", 0))
+        elif name == "resource_down":
+            tally["downs"] += 1
+        elif name == "resource_up":
+            tally["ups"] += 1
+
+    def _site_tally(self, site: str) -> Dict[str, int]:
+        tally = self._site.get(site)
+        if tally is None:
+            tally = self._site[site] = {
+                "leaves": 0, "joins": 0, "evictions": 0,
+                "evicted_jobs": 0, "downs": 0, "ups": 0, "suspects": 0}
+        return tally
+
+    # -- watchdogs ------------------------------------------------------
+    def _engine(self, user: str):
+        eng = self._engines.get(user)
+        if eng is None:
+            for u, e in zip(self.market.users, self.market.engines):
+                self._engines[u.name] = e
+            eng = self._engines.get(user)
+        return eng
+
+    def _check_money(self, ev: tuple, user: str) -> None:
+        """Per-user money conservation, incrementally: every settlement
+        path updates the broker ledger and then the bank with the same
+        ``+=``, *before* emitting the event that lands here — so the two
+        books must agree bit-for-bit at every such event."""
+        eng = self._engine(user)
+        if eng is None:
+            return
+        settled = eng.ledger.settled
+        recorded = self.market.bank.user_spend(user)
+        if settled != recorded:
+            self._violate(
+                ev, "money_conservation",
+                f"user {user!r}: broker ledger settled {settled!r} != "
+                f"bank record {recorded!r} "
+                f"(delta {settled - recorded!r}); per-kind totals: "
+                f"{self.market.bank.kind_breakdown(user)}",
+                extra_tracks=(f"broker:{user}",))
+
+    def _held_index(self) -> List[Dict[str, int]]:
+        """The executors' independent held-slot books (refreshed if
+        brokers were added since the last look)."""
+        if len(self._executors) != len(self.market.engines):
+            self._executors = [
+                held for eng in self.market.engines
+                for held in (getattr(eng.dispatcher.executor,
+                                     "_held", None),)
+                if held is not None]
+        return self._executors
+
+    def _check_slots(self, ev: tuple, resource: str) -> None:
+        """Slot accounting for one resource: the counter identity
+        ``acquires == releases + running`` catches a release that
+        clamped at zero, and the census — ``running`` vs. the executors'
+        own count of slots held there (``_held``, maintained at the
+        acquire/release sites) — catches a double release that freed a
+        slot out from under a running job.  Both checks are O(1)."""
+        directory = self.market.directory
+        if resource not in directory:
+            return
+        st = directory.status(resource)
+        run = st.running
+        if st.acquires != st.releases + run:
+            self._violate(
+                ev, "slot_accounting",
+                f"resource {resource!r}: acquires={st.acquires} != "
+                f"releases={st.releases} + running={run}",
+                extra_tracks=(f"site:{directory.spec(resource).site}",))
+            return
+        held = 0
+        for book in self._held_index():
+            h = book.get(resource)
+            if h:
+                held += h
+        if held != run:
+            self._violate(
+                ev, "slot_accounting",
+                f"resource {resource!r}: status says running={run} but "
+                f"the executors hold {held} slot(s) there (double "
+                f"release or phantom occupancy)",
+                extra_tracks=(f"site:{directory.spec(resource).site}",))
+
+    def _audit(self, ev: tuple) -> None:
+        """Deep audit on the watch-tick heartbeat: the two-sided grand
+        total, every broker ledger, and a full slot census across every
+        registered resource in one pass over the in-flight tokens."""
+        bank = self.market.bank
+        spend = bank.total_spend()
+        revenue = bank.total_revenue()
+        if abs(spend - revenue) > 1e-9 * max(1.0, abs(spend)):
+            self._violate(
+                ev, "money_conservation",
+                f"grand totals diverged: user spend {spend!r} != owner "
+                f"revenue {revenue!r}; per-kind totals: "
+                f"{bank.kind_breakdown()}")
+        for u, eng in zip(self.market.users, self.market.engines):
+            if eng.ledger.settled != bank.user_spend(u.name):
+                self._check_money(ev, u.name)      # build the full message
+        directory = self.market.directory
+        held: Dict[str, int] = {}
+        for book in self._held_index():
+            for res, h in book.items():
+                if h:
+                    held[res] = held.get(res, 0) + h
+        for name in directory.all_names():
+            st = directory.status(name)
+            if st.acquires != st.releases + st.running \
+                    or held.get(name, 0) != st.running:
+                self._check_slots(ev, name)        # build the full message
+
+    def _context(self, tracks: set) -> List[TraceEvent]:
+        """Last-K events per involved track, reconstructed from the
+        tracer's ring buffers (violation path only — the hot path never
+        accumulates context).  The offending event is already in its
+        ring when the watchdog fires, so it closes its own window."""
+        matching = [raw
+                    for ring in self.tracer._rings.values()
+                    for raw in ring if raw[2] in tracks]
+        matching.sort()                            # tuples lead with seq
+        picked: List[tuple] = []
+        counts: Dict[str, int] = {}
+        for raw in reversed(matching):
+            n = counts.get(raw[2], 0)
+            if n < self._k:
+                counts[raw[2]] = n + 1
+                picked.append(raw)
+        picked.reverse()
+        return [TraceEvent._make(raw) for raw in picked]
+
+    def _violate(self, ev: tuple, invariant: str, detail: str,
+                 extra_tracks: Tuple[str, ...] = ()) -> None:
+        tracks = {ev[2]}
+        tracks.update(extra_tracks)
+        v = InvariantViolation(t=ev[1], invariant=invariant, track=ev[2],
+                               detail=detail,
+                               context=self._context(tracks))
+        self.violations.append(v)
+        if self.on_violation == "raise":
+            raise v
+
+    def assert_clean(self) -> None:
+        """Raise the first recorded violation, if any (useful after a
+        run in ``on_violation="record"`` mode; a no-op in raise mode)."""
+        if self.violations:
+            raise self.violations[0]
+
+    # -- health rollups -------------------------------------------------
+    def broker_health(self, user: Optional[str] = None):
+        """Health snapshot(s): one :class:`BrokerHealth` for ``user``,
+        or a name-sorted list for every broker."""
+        if user is not None:
+            return self._broker_health(user)
+        return [self._broker_health(u.name)
+                for u in sorted(self.market.users, key=lambda u: u.name)]
+
+    def _broker_health(self, user: str) -> BrokerHealth:
+        eng = self._engine(user)
+        if eng is None:
+            raise KeyError(f"no broker for user {user!r}")
+        t = self._last_t
+        jobs = eng.report.n_jobs
+        done = eng.report.n_done
+        remaining = jobs - done
+        spent = eng.ledger.settled
+        committed = eng.ledger.committed
+        budget = eng.ledger.budget
+        burn = spent / budget if budget else math.inf
+        progress = done / jobs if jobs else 1.0
+        projected = spent * jobs / done if done else 0.0
+        if spent > budget or spent + committed > budget:
+            budget_risk = "over"
+        elif done == 0:
+            budget_risk = "ok"
+        elif projected <= budget:
+            budget_risk = "ok"
+        elif projected <= 1.25 * budget:
+            budget_risk = "at_risk"
+        else:
+            budget_risk = "over"
+        deadline = eng.req.deadline
+        time_left = deadline - t
+        t0 = self._first_dispatch.get(f"broker:{user}", t)
+        elapsed = max(t - t0, 1e-9)
+        observed = done / elapsed * HOUR
+        needed = (remaining / max(time_left, 1e-9) * HOUR
+                  if remaining else 0.0)
+        if remaining == 0:
+            deadline_risk = "done"
+        elif time_left <= 0:
+            deadline_risk = "critical"
+        elif done == 0:
+            deadline_risk = "at_risk"   # no completions — cannot extrapolate
+        elif needed <= observed:
+            deadline_risk = "ok"
+        elif needed <= 2.0 * observed:
+            deadline_risk = "at_risk"
+        else:
+            deadline_risk = "critical"
+        return BrokerHealth(
+            user=user, strategy=eng.req.strategy, t=t, jobs=jobs,
+            done=done, remaining=remaining,
+            finished=user in self._finished or eng.finished,
+            spent=spent, committed=committed, budget=budget,
+            burn_frac=burn, progress_frac=progress,
+            projected_spend=projected, budget_risk=budget_risk,
+            deadline=deadline, time_left_h=time_left / HOUR,
+            needed_rate_h=needed, observed_rate_h=observed,
+            deadline_risk=deadline_risk,
+            requeues=self._requeues.get(f"broker:{user}", 0),
+            outcomes=dict(sorted(
+                self._funnel.get(f"broker:{user}", {}).items())))
+
+    def site_health(self) -> List[SiteHealth]:
+        """Name-sorted reliability snapshot for every domain that has
+        appeared in the stream or the directory."""
+        directory = self.market.directory
+        sites = set(directory.sites())
+        sites.update(self._site)
+        out = []
+        for site in sorted(sites):
+            tally = self._site_tally(site)
+            incidents = (tally["leaves"] + tally["downs"]
+                         + 0.25 * tally["suspects"])
+            out.append(SiteHealth(
+                site=site,
+                resources=len(directory.site_resources(site)),
+                leaves=tally["leaves"], joins=tally["joins"],
+                evictions=tally["evictions"],
+                evicted_jobs=tally["evicted_jobs"],
+                machine_downs=tally["downs"], machine_ups=tally["ups"],
+                suspects=tally["suspects"],
+                refunds_gd=0.0 - self.market.bank.owner_kind_total(
+                    site, "refund") + 0.0,
+                reliability=1.0 / (1.0 + incidents)))
+        return out
+
+    def dashboard(self) -> str:
+        """Human-readable rollup of the whole experiment right now."""
+        lines = [f"=== experiment monitor @ t={self._last_t:.1f}s  "
+                 f"({self.events_seen} events, "
+                 f"{len(self.violations)} violation(s), "
+                 f"{len(self.steering_log)} steering action(s)) ===",
+                 "-- brokers --"]
+        lines.extend(h.row() for h in self.broker_health())
+        lines.append("-- sites --")
+        lines.extend(s.row() for s in self.site_health())
+        return "\n".join(lines)
+
+    # -- steering -------------------------------------------------------
+    # Steering runs on the sim clock: pass ``at=`` before market.run()
+    # and the action fires deterministically at that virtual time (the
+    # engine/marketplace emit ``steer`` instants, so the steered stream
+    # is part of the same byte-reproducible trace).  With ``at=None``
+    # the action applies immediately — only meaningful mid-run (e.g.
+    # from another timer).
+    def _schedule(self, at: Optional[float],
+                  fn: Callable[[], None]) -> None:
+        if at is None:
+            fn()
+        else:
+            self.market.sim.at(at, fn)
+
+    def steer_broker(self, user: str, *, deadline: Optional[float] = None,
+                     budget: Optional[float] = None,
+                     at: Optional[float] = None) -> None:
+        """Adjust a broker's deadline and/or budget at sim time ``at``
+        (the paper's §6 mid-experiment control: the user "may enter new
+        deadline and budget" and the broker re-plans against them)."""
+        if deadline is None and budget is None:
+            return
+
+        def apply() -> None:
+            eng = self._engine(user)
+            if eng is None or eng.finished:
+                return
+            t = self.market.sim.now
+            eng.steer(deadline=deadline, budget=budget)
+            self.steering_log.append(SteeringAction(
+                t=t, kind="steer_broker", target=user,
+                detail={"deadline": deadline, "budget": budget}))
+
+        self._schedule(at, apply)
+
+    def adjust_deadline(self, user: str, deadline: float, *,
+                        at: Optional[float] = None) -> None:
+        self.steer_broker(user, deadline=deadline, at=at)
+
+    def adjust_budget(self, user: str, budget: float, *,
+                      at: Optional[float] = None) -> None:
+        self.steer_broker(user, budget=budget, at=at)
+
+    def drain_site(self, site: str, *, at: Optional[float] = None) -> None:
+        """Force ``site`` out of the grid at sim time ``at`` and keep it
+        out: in-flight work fails over, contracts are voided with breach
+        rebates, and nothing schedules a rejoin."""
+
+        def apply() -> None:
+            t = self.market.sim.now
+            applied = self.market.drain_site(site)
+            self.tracer.instant(t, f"site:{site}", "steer", "drain_site",
+                                site=site, applied=applied)
+            self.steering_log.append(SteeringAction(
+                t=t, kind="drain_site", target=site,
+                detail={"applied": applied}))
+
+        self._schedule(at, apply)

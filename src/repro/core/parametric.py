@@ -179,6 +179,10 @@ class NimrodG:
             self._m_memo_miss = m.counter("broker.quote_memo_misses")
             self._m_attempts = m.histogram("broker.attempts_per_job",
                                            unit="attempts")
+            self._m_att_latency = m.histogram(
+                "broker.attempt_latency_s", unit="s",
+                bounds=(60.0, 300.0, 600.0, 900.0, 1200.0, 1800.0,
+                        2700.0, 3600.0, 7200.0, 14400.0, 28800.0))
             self._m_slack = m.histogram(
                 "market.deadline_slack_h", unit="h",
                 bounds=(-24.0, -12.0, -6.0, -2.0, -1.0, 0.0, 1.0, 2.0,
@@ -790,6 +794,9 @@ class NimrodG:
             # "settle" instant — no separate job instant, the traced
             # market emits more events than sim events and every
             # redundant one costs gate headroom
+            # dispatch-to-settlement latency (WAN hop + staging + run):
+            # the dashboard's attempt-latency percentiles read this
+            self._m_att_latency.observe(t - job.submitted_at)
             self._tr_end_attempt(job, t, "settled", cost=actual,
                                  duration=exec_seconds)
 
@@ -974,6 +981,36 @@ class NimrodG:
                 self.report.duplicates_launched += 1
                 self._dispatch(dup, r, cost, price=dup_price)
                 break
+
+    # ------------------------------------------------------------------
+    def steer(self, *, deadline: Optional[float] = None,
+              budget: Optional[float] = None) -> None:
+        """Adjust the experiment's deadline and/or budget mid-run — the
+        paper's client interaction ("the user can vary constraints such
+        as deadline and budget" while monitoring a live experiment).
+        Swaps the frozen ``UserRequirements`` on the engine and re-
+        targets the advisor (the next re-plan prices against the new
+        knobs); a budget change also moves the ledger's hard ceiling.
+        Emits one ``steer`` instant so a steered run's trace carries
+        every intervention and stays same-seed byte-reproducible."""
+        if deadline is None and budget is None:
+            return
+        old = self.req
+        self.req = dataclasses.replace(
+            old,
+            deadline=old.deadline if deadline is None else deadline,
+            budget=old.budget if budget is None else budget)
+        self.advisor.retarget(self.req)
+        if budget is not None:
+            self.ledger.budget = budget
+        self._log("STEER", deadline=self.req.deadline,
+                  budget=self.req.budget)
+        if self._trace is not None:
+            self._trace.instant(
+                self._now(), self._track, "steer", "adjust",
+                user=self.req.user, deadline=self.req.deadline,
+                budget=self.req.budget, old_deadline=old.deadline,
+                old_budget=old.budget)
 
     # ------------------------------------------------------------------
     @property

@@ -58,6 +58,13 @@ class ResourceStatus:
     # key on it (utilization feeds demand pricing), so a cached price is
     # reused exactly as long as nothing that prices off this queue moved
     version: int = 0
+    # lifetime acquire/release tallies: the slot-accounting invariant
+    # (acquires == releases + running) the ExperimentMonitor watchdog
+    # audits online.  ``release`` clamps ``running`` at zero, so a
+    # double release is invisible in ``running`` alone — the tallies
+    # keep the evidence
+    acquires: int = 0
+    releases: int = 0
 
     def free_slots(self, spec: ResourceSpec) -> int:
         return max(0, spec.slots - self.running) if self.up else 0
@@ -70,11 +77,13 @@ class ResourceStatus:
         if not self.up or self.running >= spec.slots:
             return False
         self.running += 1
+        self.acquires += 1
         self.version += 1
         return True
 
     def release(self) -> None:
         self.running = max(0, self.running - 1)
+        self.releases += 1
         self.version += 1
 
     def utilization(self, spec: ResourceSpec) -> float:

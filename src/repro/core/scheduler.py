@@ -153,6 +153,16 @@ class ScheduleAdvisor:
         self._history = history
         self._gis_client = gis_client
 
+    def retarget(self, requirements: UserRequirements) -> None:
+        """Swap the user's requirements mid-run — the paper's steering
+        interaction (deadline/budget can change at any time).  The next
+        ``decide`` re-plans against the new deadline; nothing else is
+        cached off the old object.  Counted when telemetry is bound so
+        a steered run's re-planning pressure is visible in the trace."""
+        self.req = requirements
+        if self._trace is not None:
+            self._trace.metrics.counter("sched.retargets").inc()
+
     # -- selection strategies ------------------------------------------------
 
     def decide(self, t: float, views: Dict[str, ResourceView],

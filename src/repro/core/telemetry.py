@@ -209,6 +209,32 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def percentile(self, p: float) -> float:
+        """Estimate the ``p``-th percentile (``p`` in [0, 100]) from the
+        bucket counts: linear interpolation inside the containing bucket,
+        with the observed min/max tightening the first and last occupied
+        buckets (so p0/p100 are exact and an overflow-bucket estimate
+        never exceeds the largest observation)."""
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
+        if self.count == 0:
+            return 0.0
+        target = p / 100.0 * self.count
+        cum = 0.0
+        for i, n in enumerate(self.buckets):
+            if n == 0:
+                continue
+            lo = self.min if i == 0 else max(self.bounds[i - 1], self.min)
+            hi = self.max if i == len(self.bounds) \
+                else min(self.bounds[i], self.max)
+            if hi < lo:
+                hi = lo
+            if cum + n >= target:
+                frac = (target - cum) / n
+                return lo + frac * (hi - lo)
+            cum += n
+        return self.max
+
     def summary(self) -> Dict[str, Any]:
         return {"count": self.count, "sum": self.total,
                 "mean": self.mean(),
@@ -291,6 +317,21 @@ class MetricsRegistry:
 # the tracer
 # ---------------------------------------------------------------------------
 
+class Subscription:
+    """Handle returned by ``Tracer.subscribe``; ``cancel()`` detaches
+    the consumer (idempotent)."""
+    __slots__ = ("tracer", "category", "fn")
+
+    def __init__(self, tracer: "Tracer", category: str,
+                 fn: Callable[[TraceEvent], None]):
+        self.tracer = tracer
+        self.category = category
+        self.fn = fn
+
+    def cancel(self) -> None:
+        self.tracer.unsubscribe(self.category, self.fn)
+
+
 class Tracer:
     """Per-run event recorder + metrics registry.
 
@@ -298,6 +339,14 @@ class Tracer:
     tracer never reads a clock — determinism is the caller's ``t``).
     Events are bounded per category; ``dropped`` counts ring evictions
     so truncation is never silent.
+
+    Besides the ring buffers (post-hoc reads), consumers can
+    ``subscribe(category, fn)`` to the live stream: each recorded event
+    is also delivered synchronously at emit time — on the sim clock, in
+    global seq order — to every subscriber of its category (and of the
+    ``"*"`` wildcard).  Rings, exporters and the no-subscriber hot path
+    are unchanged; with no subscribers a record costs one extra bool
+    check.
     """
 
     def __init__(self, ring: int = DEFAULT_RING):
@@ -308,6 +357,88 @@ class Tracer:
         self._rings: Dict[str, collections.deque] = {}
         self.dropped: Dict[str, int] = {}
         self._seq = 0
+        # streaming subscribers: category -> consumer list.  The lists
+        # are copy-on-write (subscribe/unsubscribe replace them) so
+        # delivery iterates without defensive copies; _have_subs keeps
+        # the subscriber-free record path at a single bool check
+        self._subs: Dict[str, List[Callable[[TraceEvent], None]]] = {}
+        self._have_subs = False
+        self._sub_q: collections.deque = collections.deque()
+        self._delivering = False
+
+    # -- streaming subscribers -----------------------------------------
+    def subscribe(self, category: str, fn: Callable[[TraceEvent], None],
+                  raw: bool = False) -> Subscription:
+        """Attach a live consumer: ``fn(event)`` is called for every
+        subsequently recorded event of ``category`` (``"*"`` = all
+        categories), synchronously at emit time and in seq order.
+        Consumers see each event exactly when it happens on the sim
+        clock — an invariant watchdog can raise *at* the violation, not
+        at export time.  Events a consumer records re-entrantly (e.g. a
+        steering instant) queue behind the event being delivered, so the
+        stream every consumer observes stays seq-ordered.  A consumer
+        exception propagates to the recording site — that is the point
+        for watchdogs.  ``raw=True`` consumers receive the plain tuple
+        (field order = ``TraceEvent``) instead of a materialized
+        NamedTuple — the constructor is the dominant bus cost, and a
+        hot-path consumer that indexes anyway shouldn't pay it.
+        Returns a ``Subscription``; ``cancel()`` detaches (effective
+        from the next event)."""
+        self._subs[category] = self._subs.get(category, []) + [(fn, raw)]
+        self._have_subs = True
+        return Subscription(self, category, fn)
+
+    def unsubscribe(self, category: str,
+                    fn: Callable[[TraceEvent], None]) -> None:
+        subs = self._subs.get(category)
+        if subs is None:
+            return
+        rest = [e for e in subs if e[0] is not fn]
+        if len(rest) == len(subs):
+            return
+        if rest:
+            self._subs[category] = rest
+        else:
+            del self._subs[category]
+        self._have_subs = bool(self._subs)
+
+    def _deliver(self, ev: tuple) -> None:
+        if self._delivering:
+            # re-entrant record (e.g. a steering instant emitted from a
+            # consumer): queue behind the event being delivered so every
+            # consumer observes the stream in seq order
+            self._sub_q.append(ev)
+            return
+        self._delivering = True
+        q = self._sub_q
+        subs_by_cat = self._subs
+        raw = ev
+        try:
+            while True:
+                subs = subs_by_cat.get(raw[3])
+                event = None            # materialized once, only if needed
+                if subs:
+                    for fn, wants_raw in subs:
+                        if wants_raw:
+                            fn(raw)
+                        else:
+                            if event is None:
+                                event = TraceEvent._make(raw)
+                            fn(event)
+                wild = subs_by_cat.get("*")
+                if wild:
+                    for fn, wants_raw in wild:
+                        if wants_raw:
+                            fn(raw)
+                        else:
+                            if event is None:
+                                event = TraceEvent._make(raw)
+                            fn(event)
+                if not q:
+                    break
+                raw = q.popleft()
+        finally:
+            self._delivering = False
 
     # -- recording -----------------------------------------------------
     # each recorder inlines the ring append rather than delegating to a
@@ -323,9 +454,11 @@ class Tracer:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped[cat] = self.dropped.get(cat, 0) + 1
-        ring.append((self._seq, t, track, cat, name, ph, span,
-                     args or None))
+        ev = (self._seq, t, track, cat, name, ph, span, args or None)
+        ring.append(ev)
         self._seq += 1
+        if self._have_subs:
+            self._deliver(ev)
 
     def span_begin(self, t: float, track: str, cat: str, name: str,
                    span: str, **args: Any) -> None:
@@ -336,9 +469,11 @@ class Tracer:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped[cat] = self.dropped.get(cat, 0) + 1
-        ring.append((self._seq, t, track, cat, name, "b", span,
-                     args or None))
+        ev = (self._seq, t, track, cat, name, "b", span, args or None)
+        ring.append(ev)
         self._seq += 1
+        if self._have_subs:
+            self._deliver(ev)
 
     def span_end(self, t: float, track: str, cat: str, name: str,
                  span: str, **args: Any) -> None:
@@ -347,9 +482,11 @@ class Tracer:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped[cat] = self.dropped.get(cat, 0) + 1
-        ring.append((self._seq, t, track, cat, name, "e", span,
-                     args or None))
+        ev = (self._seq, t, track, cat, name, "e", span, args or None)
+        ring.append(ev)
         self._seq += 1
+        if self._have_subs:
+            self._deliver(ev)
 
     def instant(self, t: float, track: str, cat: str, name: str,
                 **args: Any) -> None:
@@ -358,9 +495,11 @@ class Tracer:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped[cat] = self.dropped.get(cat, 0) + 1
-        ring.append((self._seq, t, track, cat, name, "i", "",
-                     args or None))
+        ev = (self._seq, t, track, cat, name, "i", "", args or None)
+        ring.append(ev)
         self._seq += 1
+        if self._have_subs:
+            self._deliver(ev)
 
     def counter(self, t: float, track: str, name: str,
                 value: float) -> None:
@@ -371,9 +510,12 @@ class Tracer:
                 maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped["metric"] = self.dropped.get("metric", 0) + 1
-        ring.append((self._seq, t, track, "metric", name, "C",
-                     "", {"value": value}))
+        ev = (self._seq, t, track, "metric", name, "C", "",
+              {"value": value})
+        ring.append(ev)
         self._seq += 1
+        if self._have_subs:
+            self._deliver(ev)
 
     def snapshot_counters(self, t: float, track: str = "metrics") -> None:
         """Emit every registry instrument as counter samples at ``t`` —

@@ -1,0 +1,350 @@
+"""ExperimentMonitor: streaming bus, online watchdogs, steering, and
+the causal post-mortem tooling.
+
+The soundness contract has two halves, both tested here:
+
+* **No false positives** — monitored runs of the golden scenarios stay
+  violation-free AND reproduce the untraced golden hashes byte-for-byte
+  (the monitor is purely observational).
+* **No false negatives** — an injected ledger skim and an injected
+  double slot-release are each caught at the exact sim time of the
+  offending event (not at run end), with a causal context window.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (ExperimentMonitor, InvariantViolation, Tracer,
+                        export_chrome_trace, standard_market)
+from repro.core.telemetry import Histogram, TraceEvent
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.make_report import (_percentile_from_summary, explain_job,  # noqa: E402
+                                    market_dashboard)
+from tests.test_golden_equivalence import GOLDEN, _sha  # noqa: E402
+
+HOUR = 3600.0
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _contention(tracer=None):
+    return standard_market(4, n_machines=8, seed=7, n_jobs=12,
+                           demand_elasticity=1.0, tracer=tracer)
+
+
+def _churn(tracer=None):
+    return standard_market(4, n_machines=12, seed=5, n_jobs=10,
+                           gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                           churn_mean_downtime_h=1.0, tracer=tracer)
+
+
+# ---------------------------------------------------------------------------
+# streaming subscriber bus
+# ---------------------------------------------------------------------------
+
+class TestSubscriberBus:
+    def test_category_and_wildcard_delivery_in_seq_order(self):
+        tr = Tracer()
+        jobs, everything = [], []
+        tr.subscribe("job", jobs.append)
+        tr.subscribe("*", everything.append)
+        tr.instant(1.0, "t", "job", "a")
+        tr.instant(2.0, "t", "bank", "b")
+        tr.span_begin(3.0, "t", "job", "attempt", "s1")
+        assert [e.name for e in jobs] == ["a", "attempt"]
+        assert [e.name for e in everything] == ["a", "b", "attempt"]
+        assert [e.seq for e in everything] == [0, 1, 2]
+        assert all(isinstance(e, TraceEvent) for e in everything)
+
+    def test_raw_delivery_passes_plain_tuples(self):
+        tr = Tracer()
+        seen = []
+        tr.subscribe("*", seen.append, raw=True)
+        tr.instant(1.0, "t", "job", "a", x=1)
+        assert seen == [(0, 1.0, "t", "job", "a", "i", "", {"x": 1})]
+        assert type(seen[0]) is tuple
+
+    def test_unsubscribe_detaches(self):
+        tr = Tracer()
+        seen = []
+        sub = tr.subscribe("job", seen.append)
+        tr.instant(1.0, "t", "job", "a")
+        sub.cancel()
+        sub.cancel()                      # idempotent
+        tr.instant(2.0, "t", "job", "b")
+        assert [e.name for e in seen] == ["a"]
+        assert not tr._have_subs          # record path back to one bool
+
+    def test_reentrant_record_queues_behind_current_event(self):
+        tr = Tracer()
+        order = []
+
+        def echo(ev):
+            order.append(ev.name)
+            if ev.name == "trigger":      # a steering-style reaction
+                tr.instant(ev.t, "t", "steer", "reaction")
+
+        tr.subscribe("*", echo)
+        tr.instant(1.0, "t", "job", "trigger")
+        # the reaction was recorded and delivered AFTER the triggering
+        # event finished delivering, in seq order
+        assert order == ["trigger", "reaction"]
+        assert [e.name for e in tr.events()] == ["trigger", "reaction"]
+
+    def test_subscriber_exception_propagates_to_record_site(self):
+        tr = Tracer()
+
+        def boom(ev):
+            raise RuntimeError("watchdog says no")
+
+        tr.subscribe("job", boom)
+        with pytest.raises(RuntimeError, match="watchdog says no"):
+            tr.instant(1.0, "t", "job", "a")
+
+
+# ---------------------------------------------------------------------------
+# Histogram percentiles (live instrument + exported-summary mirror)
+# ---------------------------------------------------------------------------
+
+class TestPercentile:
+    def test_percentile_interpolates_and_clamps(self):
+        h = Histogram("x", bounds=(10.0, 20.0, 30.0))
+        for v in (1.0, 12.0, 14.0, 25.0, 29.0):
+            h.observe(v)
+        assert h.percentile(0) == pytest.approx(1.0)     # exact min
+        assert h.percentile(100) == pytest.approx(29.0)  # exact max
+        assert 1.0 <= h.percentile(50) <= 20.0
+        assert 20.0 <= h.percentile(95) <= 29.0
+        assert h.percentile(50) <= h.percentile(90) <= h.percentile(99)
+
+    def test_percentile_rejects_out_of_range_and_empty(self):
+        h = Histogram("x")
+        assert h.percentile(50) == 0.0
+        with pytest.raises(ValueError):
+            h.percentile(101)
+
+    def test_summary_mirror_matches_live_instrument(self):
+        h = Histogram("x", bounds=(5.0, 10.0, 50.0))
+        for v in (2.0, 3.0, 7.0, 8.0, 9.0, 12.0, 40.0, 60.0):
+            h.observe(v)
+        summary = h.summary()
+        for p in (0, 25, 50, 75, 90, 100):
+            assert _percentile_from_summary(summary, p) == \
+                pytest.approx(h.percentile(p))
+
+
+# ---------------------------------------------------------------------------
+# soundness: no false positives on golden scenarios, bytes unchanged
+# ---------------------------------------------------------------------------
+
+class TestSoundness:
+    def test_monitored_runs_reproduce_golden_hashes(self):
+        for kind, build, kw in (
+                ("contention", _contention, {"failures": True}),
+                ("churn", _churn, {"failures": True, "churn": True})):
+            market = build(Tracer())
+            monitor = ExperimentMonitor(market)
+            rep = market.run(**kw)
+            assert _sha(rep.stable_repr()) == GOLDEN[kind], kind
+            assert monitor.violations == []
+            assert monitor.events_seen > 0
+            monitor.assert_clean()
+
+    def test_monitor_requires_traced_market(self):
+        with pytest.raises(ValueError, match="traced market"):
+            ExperimentMonitor(_contention(None))
+        with pytest.raises(ValueError, match="on_violation"):
+            ExperimentMonitor(_contention(Tracer()), on_violation="explode")
+
+    def test_health_rollups_cover_every_broker_and_site(self):
+        market = _churn(Tracer())
+        monitor = ExperimentMonitor(market)
+        market.run(failures=True, churn=True)
+        healths = monitor.broker_health()
+        assert [h.user for h in healths] == \
+            sorted(u.name for u in market.users)
+        assert all(h.deadline_risk == "done" and h.finished
+                   for h in healths)
+        assert all(h.spent <= h.budget for h in healths)
+        one = monitor.broker_health(market.users[0].name)
+        assert one.outcomes.get("settled") == one.jobs
+        sites = {s.site for s in monitor.site_health()}
+        assert sites >= set(market.directory.sites())
+        dash = monitor.dashboard()
+        assert "0 violation(s)" in dash
+        for u in market.users:
+            assert u.name in dash
+
+
+# ---------------------------------------------------------------------------
+# soundness: injected bugs are caught AT the offending sim time
+# ---------------------------------------------------------------------------
+
+class TestInjectedBugs:
+    def test_ledger_skim_caught_at_first_settlement(self):
+        market = _contention(Tracer())
+        monitor = ExperimentMonitor(market)
+        bank = market.bank
+        real_record = bank.record
+        skimmed = []
+
+        def skimming_record(*, t, user, owner, resource, amount,
+                            kind="settle"):
+            if kind == "settle":
+                if not skimmed:
+                    skimmed.append(t)
+                amount *= 0.5            # the bank pockets half
+            real_record(t=t, user=user, owner=owner, resource=resource,
+                        amount=amount, kind=kind)
+
+        bank.record = skimming_record
+        with pytest.raises(InvariantViolation) as exc:
+            market.run(failures=True)
+        v = exc.value
+        assert v.invariant == "money_conservation"
+        # caught at the sim time of the FIRST skimmed settlement — the
+        # run died mid-flight, long before its clean completion time
+        assert v.t == skimmed[0]
+        assert market.sim.now == v.t
+        assert v.context, "violation must carry a causal context window"
+        assert any(e.track == v.track for e in v.context)
+        assert "ledger settled" in str(v)
+
+    def test_double_release_caught_at_that_finish(self):
+        market = _contention(Tracer())
+        monitor = ExperimentMonitor(market)
+        executor = market.engines[0].dispatcher.executor
+        real_finish = executor._finish
+        rogue = []
+
+        def double_releasing_finish(job, resource, token):
+            held_before = job.slot_held
+            real_finish(job, resource, token)
+            if held_before and not rogue:
+                rogue.append(market.sim.now)
+                # frees a slot out from under whoever holds it
+                market.directory.status(resource).release()
+
+        executor._finish = double_releasing_finish
+        with pytest.raises(InvariantViolation) as exc:
+            market.run(failures=True)
+        v = exc.value
+        assert v.invariant == "slot_accounting"
+        assert v.t == rogue[0]
+        assert market.sim.now == v.t
+        assert v.context
+
+    def test_span_imbalance_detected(self):
+        market = _contention(Tracer())
+        monitor = ExperimentMonitor(market, on_violation="record")
+        tr = market.tracer
+        track = f"broker:{market.users[0].name}"
+        tr.span_end(10.0, track, "job", "attempt", "X/j0/a9",
+                    outcome="failed")
+        tr.span_begin(11.0, track, "job", "attempt", "X/j1/a1")
+        tr.span_begin(12.0, track, "job", "attempt", "X/j1/a1")
+        kinds = [(v.invariant, v.t) for v in monitor.violations]
+        assert ("attempt_span_balance", 10.0) in kinds
+        assert ("attempt_span_balance", 12.0) in kinds
+        with pytest.raises(InvariantViolation):
+            monitor.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# steering: deterministic, recorded, and actually effective
+# ---------------------------------------------------------------------------
+
+class TestSteering:
+    @staticmethod
+    def _steered_run():
+        tracer = Tracer()
+        market = _churn(tracer)
+        monitor = ExperimentMonitor(market)
+        user = market.users[-1].name
+        monitor.steer_broker(user, budget=9999.0, deadline=9.0 * HOUR,
+                             at=0.5 * HOUR)
+        monitor.drain_site("Monash", at=0.5 * HOUR)
+        rep = market.run(failures=True, churn=True)
+        return rep, tracer, monitor
+
+    def test_steered_runs_are_byte_identical(self):
+        (r1, t1, m1), (r2, t2, m2) = self._steered_run(), self._steered_run()
+        assert r1.stable_repr() == r2.stable_repr()
+        assert "\n".join(t1.jsonl_lines()) == "\n".join(t2.jsonl_lines())
+        assert m1.steering_log == m2.steering_log
+        assert m1.violations == [] and m2.violations == []
+
+    def test_steering_changes_outcome_and_is_recorded(self):
+        steered, tracer, monitor = self._steered_run()
+        baseline = _churn(Tracer())
+        base_rep = baseline.run(failures=True, churn=True)
+        assert steered.stable_repr() != base_rep.stable_repr()
+        kinds = [a.kind for a in monitor.steering_log]
+        assert kinds == ["steer_broker", "drain_site"]
+        assert all(a.t == 0.5 * HOUR for a in monitor.steering_log)
+        steers = [e for e in tracer.events() if e.cat == "steer"]
+        assert any(e.name == "drain_site" and e.args["applied"]
+                   for e in steers)
+        assert any(e.name == "adjust" and e.args["budget"] == 9999.0
+                   for e in steers)
+
+    def test_steering_finished_broker_is_a_noop(self):
+        market = _contention(Tracer())
+        monitor = ExperimentMonitor(market)
+        market.run(failures=True)
+        monitor.steer_broker(market.users[0].name, budget=1.0, at=None)
+        assert monitor.steering_log == []
+
+
+# ---------------------------------------------------------------------------
+# post-mortems + dashboard percentiles + corrupt-trace handling
+# ---------------------------------------------------------------------------
+
+class TestReportTooling:
+    @pytest.fixture(scope="class")
+    def trace_path(self, tmp_path_factory):
+        path = tmp_path_factory.mktemp("trace") / "churn.json"
+        tracer = Tracer()
+        market = _churn(tracer)
+        market.run(failures=True, churn=True)
+        export_chrome_trace(tracer, str(path), run_name="test")
+        return str(path)
+
+    def test_explain_job_renders_a_post_mortem(self, trace_path):
+        out = explain_job(trace_path, "auto")
+        assert "Post-mortem" in out
+        assert "## Attempts" in out
+        assert "## Attribution" in out
+        assert "bought the result" in out
+
+    def test_explain_job_unknown_job_exits_3(self, trace_path):
+        with pytest.raises(SystemExit) as exc:
+            explain_job(trace_path, "nope/never")
+        assert exc.value.code == 3
+
+    def test_dashboard_has_attempt_latency_percentiles(self, trace_path):
+        out = market_dashboard(trace_path)
+        assert "attempt latency" in out
+        assert "p50" in out and "p95" in out and "p99" in out
+
+    @pytest.mark.parametrize("payload", [
+        "this is not json{{{",
+        json.dumps({"no": "traceEvents"}),
+        json.dumps({"traceEvents": []}),
+    ])
+    def test_corrupt_trace_exits_2_with_one_line_error(self, tmp_path,
+                                                       payload):
+        bad = tmp_path / "bad.json"
+        bad.write_text(payload)
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.make_report",
+             "--market-trace", str(bad)],
+            capture_output=True, text=True, cwd=ROOT,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(ROOT, "src")})
+        assert proc.returncode == 2
+        assert len(proc.stderr.strip().splitlines()) == 1
+        assert "corrupt trace" in proc.stderr or "empty trace" in proc.stderr
