@@ -77,22 +77,34 @@ HOUR_US = 3600.0 * 1e6
 SPARK = "▁▂▃▄▅▆▇█"
 
 
-def _sparkline(samples, width=64):
+def _sparkline(samples, width=64, max_samples=None):
     """Bucket (ts, value) samples into ``width`` columns and render a
-    unicode sparkline; empty buckets hold the last seen value."""
+    unicode sparkline; empty buckets hold the last seen value.
+
+    A 100k-job trace emits one price sample per clearing round — far
+    more points than the ``width`` columns can show — so past
+    ``max_samples`` (default 64 per column) the sorted series is
+    stride-downsampled first, always keeping the first and last sample
+    so the rendered time span is exact."""
     if not samples:
         return "", 0.0, 0.0
     samples = sorted(samples)
+    cap = max_samples or width * 64
+    if len(samples) > cap:
+        stride = len(samples) // cap + 1
+        samples = samples[::stride] + [samples[-1]]
     t0, t1 = samples[0][0], samples[-1][0]
     span = (t1 - t0) or 1.0
-    buckets = [[] for _ in range(width)]
+    sums = [0.0] * width
+    counts = [0] * width
     for ts, v in samples:
         i = min(int((ts - t0) / span * width), width - 1)
-        buckets[i].append(v)
+        sums[i] += v
+        counts[i] += 1
     vals, last = [], samples[0][1]
-    for b in buckets:
-        if b:
-            last = math.fsum(b) / len(b)
+    for s, n in zip(sums, counts):
+        if n:
+            last = s / n
         vals.append(last)
     lo, hi = min(vals), max(vals)
     rng = (hi - lo) or 1.0

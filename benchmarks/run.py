@@ -27,7 +27,7 @@ def main() -> None:
             ("auctions (negotiated contracts vs posted prices)",
              bench_auctions),
             ("GIS staleness (view TTL x site churn)", bench_gis),
-            ("scale (indexed hot path: jobs x users x variant)",
+            ("scale (array core: jobs x users x variant + 100k/1M tier)",
              bench_scale),
             ("secondary market (resale on/off x brokers, price discovery)",
              bench_secondary),

@@ -31,6 +31,11 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Tuple
 
+try:
+    import numpy as np
+except ImportError:              # pragma: no cover - numpy is a CI dep
+    np = None
+
 from repro.core.economy import (AdmissionError, TradeFederation, TradeServer)
 from repro.core.resources import ResourceDirectory
 from repro.core.simulator import Simulator
@@ -164,47 +169,143 @@ class DoubleAuctionBook:
                          ClearingRound]:
         """Uniform-price double auction (k = 1/2).
 
-        Expand bids and asks into single-slot units, sort bids
-        descending and asks ascending by limit price, and match the
-        longest prefix where demand still out-prices supply.  All
-        matched units trade at one clearing price — the midpoint of the
-        marginal matched pair, which by construction lies within every
-        matched bid's and ask's limits.
+        Sort bids descending and asks ascending by limit price and
+        match the longest unit prefix where demand still out-prices
+        supply.  All matched units trade at one clearing price — the
+        midpoint of the marginal matched pair, which by construction
+        lies within every matched bid's and ask's limits.
+
+        The crossing runs on flat price/cumulative-quantity arrays
+        (``clear_book_arrays``); ``clear_book_reference`` is the
+        retained unit-expansion clearer, byte-equivalent by the
+        differential tests and used when numpy is absent.
 
         Returns ([(user, resource, slots)], clearing_price, audit).
         """
-        live_bids = sorted(
-            (b for b in self.bids.values() if b.valid_at(t) and b.slots > 0),
-            key=lambda b: (-b.chip_hour_price, b.user))
+        live_bids = [b for b in self.bids.values()
+                     if b.valid_at(t) and b.slots > 0]
         asks = self.make_asks(t, window)
         self.bids.clear()            # bids are per-round: re-bid or drop out
 
-        bid_units: List[AuctionBid] = []
-        for b in live_bids:
-            bid_units.extend([b] * b.slots)
-        ask_units: List[Ask] = []
-        for a in sorted(asks, key=lambda a: (a.chip_hour_price, a.resource)):
-            ask_units.extend([a] * a.slots)
-
-        k = 0
-        while (k < len(bid_units) and k < len(ask_units)
-               and bid_units[k].chip_hour_price
-               >= ask_units[k].chip_hour_price - 1e-12):
-            k += 1
+        clearer = clear_book_arrays if np is not None else \
+            clear_book_reference
+        trades, price, k, nb, na = clearer(live_bids, asks)
         audit = ClearingRound(t=t, site=self.server.site or "",
-                              clearing_price=0.0, matched_slots=k,
-                              n_bids=len(bid_units), n_asks=len(ask_units))
-        if k == 0:
-            return [], 0.0, audit
-        price = 0.5 * (bid_units[k - 1].chip_hour_price
-                       + ask_units[k - 1].chip_hour_price)
-        matched: Dict[Tuple[str, str], int] = {}
-        for i in range(k):
-            key = (bid_units[i].user, ask_units[i].resource)
-            matched[key] = matched.get(key, 0) + 1
-        trades = sorted((u, r, n) for (u, r), n in matched.items())
-        return trades, price, dataclasses.replace(audit,
-                                                  clearing_price=price)
+                              clearing_price=price, matched_slots=k,
+                              n_bids=nb, n_asks=na)
+        return trades, price, audit
+
+
+def clear_book_reference(bids: List[AuctionBid], asks: List[Ask]
+                         ) -> Tuple[List[Tuple[str, str, int]], float,
+                                    int, int, int]:
+    """The scalar reference clearer: expand every order into single-slot
+    units and walk the prefix.  O(units) — kept as the behavioral oracle
+    for the array clearer (and the no-numpy fallback).
+
+    Returns (trades, clearing_price, matched_units, bid_units, ask_units).
+    """
+    live_bids = sorted(bids, key=lambda b: (-b.chip_hour_price, b.user))
+    bid_units: List[AuctionBid] = []
+    for b in live_bids:
+        bid_units.extend([b] * b.slots)
+    ask_units: List[Ask] = []
+    for a in sorted(asks, key=lambda a: (a.chip_hour_price, a.resource)):
+        ask_units.extend([a] * a.slots)
+
+    k = 0
+    while (k < len(bid_units) and k < len(ask_units)
+           and bid_units[k].chip_hour_price
+           >= ask_units[k].chip_hour_price - 1e-12):
+        k += 1
+    if k == 0:
+        return [], 0.0, 0, len(bid_units), len(ask_units)
+    price = 0.5 * (bid_units[k - 1].chip_hour_price
+                   + ask_units[k - 1].chip_hour_price)
+    matched: Dict[Tuple[str, str], int] = {}
+    for i in range(k):
+        key = (bid_units[i].user, ask_units[i].resource)
+        matched[key] = matched.get(key, 0) + 1
+    trades = sorted((u, r, n) for (u, r), n in matched.items())
+    return trades, price, k, len(bid_units), len(ask_units)
+
+
+def clear_book_arrays(bids: List[AuctionBid], asks: List[Ask]
+                      ) -> Tuple[List[Tuple[str, str, int]], float,
+                                 int, int, int]:
+    """Array-program clearer: argsort + cumulative-quantity crossing.
+
+    No unit expansion — orders stay one row each.  Bids argsort by the
+    same ``(-price, user)`` key the scalar clearer uses (numpy string
+    comparison is the same code-point lexicographic order as Python's,
+    and ``lexsort`` is stable, so exact-tie books order identically);
+    asks by ``(price, resource)``.  The crossing point is found on the
+    cumulative-quantity breakpoints: within a segment between two
+    breakpoints the (bid, ask) pair is constant, and bid prices
+    non-increasing against ask prices non-decreasing makes the match
+    condition a prefix property — the first failing segment ends it.
+    Matched units are re-aggregated per (user, resource) by a
+    two-pointer walk over the same breakpoints, so the trade list is
+    element-for-element the reference clearer's.  All returned scalars
+    are Python ints/floats (nothing numpy leaks into contracts or
+    journals); the midpoint price is computed in CPython float
+    arithmetic on the two marginal limits, bit-identical to the scalar
+    path.
+    """
+    nb_units = sum(b.slots for b in bids)
+    na_units = sum(a.slots for a in asks)
+    if nb_units == 0 or na_units == 0:
+        return [], 0.0, 0, nb_units, na_units
+
+    nb, na = len(bids), len(asks)
+    pb = np.fromiter((b.chip_hour_price for b in bids),
+                     dtype=np.float64, count=nb)
+    ob = np.lexsort((np.array([b.user for b in bids]), -pb))
+    pb = pb[ob]
+    cb = np.cumsum(np.fromiter((bids[i].slots for i in ob),
+                               dtype=np.int64, count=nb))
+    users = [bids[i].user for i in ob]
+
+    pa = np.fromiter((a.chip_hour_price for a in asks),
+                     dtype=np.float64, count=na)
+    oa = np.lexsort((np.array([a.resource for a in asks]), pa))
+    pa = pa[oa]
+    ca = np.cumsum(np.fromiter((asks[i].slots for i in oa),
+                               dtype=np.int64, count=na))
+    resources = [asks[i].resource for i in oa]
+
+    lim = int(min(cb[-1], ca[-1]))
+    # segment starts: 0 plus every cumulative-quantity breakpoint below
+    # the unit limit; each segment maps to one constant (bid, ask) pair
+    bounds = np.union1d(cb, ca)
+    starts = np.concatenate(
+        (np.zeros(1, dtype=np.int64), bounds[bounds < lim]))
+    bi = np.searchsorted(cb, starts, side="right")
+    ai = np.searchsorted(ca, starts, side="right")
+    ok = pb[bi] >= pa[ai] - 1e-12
+    k = lim if bool(ok.all()) else int(starts[int(np.argmin(ok))])
+    if k == 0:
+        return [], 0.0, 0, nb_units, na_units
+
+    bj = int(np.searchsorted(cb, k - 1, side="right"))
+    aj = int(np.searchsorted(ca, k - 1, side="right"))
+    price = 0.5 * (float(pb[bj]) + float(pa[aj]))
+
+    cbl = cb.tolist()
+    cal = ca.tolist()
+    matched: Dict[Tuple[str, str], int] = {}
+    pos, bj, aj = 0, 0, 0
+    while pos < k:
+        while cbl[bj] <= pos:        # skip exhausted (or 0-slot) rows
+            bj += 1
+        while cal[aj] <= pos:
+            aj += 1
+        end = min(cbl[bj], cal[aj], k)
+        key = (users[bj], resources[aj])
+        matched[key] = matched.get(key, 0) + (end - pos)
+        pos = end
+    trades = sorted((u, r, n) for (u, r), n in matched.items())
+    return trades, price, k, nb_units, na_units
 
 
 class AuctionHouse:

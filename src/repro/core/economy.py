@@ -61,6 +61,9 @@ class PriceSchedule:
         # base forever when discovery is off, drifts (bounded) toward
         # clearing prices when it is on
         self.base_price = spec.base_price
+        # monotone stamp bumped whenever the posted base drifts: batched
+        # quote rows re-key on it, mirroring book_version for the book
+        self.version = 0
 
     def chip_hour_price(self, t: float, user: str = "",
                         utilization: float = 0.0) -> float:
@@ -91,6 +94,7 @@ class PriceSchedule:
         hi = self.spec.base_price * (1.0 + self.discovery_band)
         target = min(max(implied, lo), hi)
         self.base_price += self.discovery_gain * (target - self.base_price)
+        self.version += 1
 
     def job_cost(self, t: float, duration: float, user: str = "",
                  utilization: float = 0.0) -> float:
@@ -172,6 +176,10 @@ class TradeServer:
         # broker-side quote caches key on it, so an effective price is
         # recomputed exactly when a reservation could have changed it
         self.book_version = 0
+        # a lone server never changes membership; the attribute exists
+        # so the quote board stamps servers and federations uniformly
+        self.membership_version = 0
+        self._board = None
 
     def price_version(self, resource: str) -> int:
         """Stamp of everything (besides time and queue utilization) a
@@ -408,6 +416,10 @@ class TradeFederation:
         # rejoins with a fresh server must never reissue an id that
         # lives on in voided contracts or audit trails
         self._rid_floor = 1
+        # bumped on add_server/remove_server: the quote board re-derives
+        # its resource -> server rows when federation membership moves
+        self.membership_version = 0
+        self._board = None
         self._restride()
 
     def _restride(self) -> None:
@@ -436,6 +448,7 @@ class TradeFederation:
         reserving or bidding there is over."""
         server = self.servers.pop(site)
         self._departed[site] = server
+        self.membership_version += 1
         # mirror add_server: the federation-wide validity window is the
         # max over LIVE members.  Without this, a departed long-validity
         # domain kept stretching how long the federation honored sealed
@@ -458,6 +471,7 @@ class TradeFederation:
         self.servers[site] = server
         self.servers = dict(sorted(self.servers.items()))
         self.bid_validity = max(s.bid_validity for s in self.servers.values())
+        self.membership_version += 1
         self._restride()
 
     @classmethod
@@ -496,6 +510,11 @@ class TradeFederation:
         return self.server_for(resource).quote(resource, t, user)
 
     def forward_quote(self, resource: str, t: float, user: str = "") -> float:
+        board = self._board
+        if board is not None:
+            v = board.forward(resource, user, t)
+            if v is not None:
+                return v
         return self.server_for(resource).forward_quote(resource, t, user)
 
     def solicit_bids(self, t: float, user: str,

@@ -149,6 +149,18 @@ class GridInformationService:
         self.deregistrations = 0
         self.heartbeats = 0
         self.tracer = None              # set by bind_telemetry
+        # monotone stamp bumped on every mutation that can change a
+        # query answer (register/deregister/heartbeat); keys the
+        # single-entry query cache below.  With N brokers sharing one
+        # GIS they all refresh their TTL snapshots at the same virtual
+        # instant — the first pays for the registry walk, the rest hit
+        self.version = 0
+        self._qcache_key = None
+        self._qcache_val: List[GISEntry] = []
+        # registered specs with a non-empty authorized_users list: while
+        # zero, the ``user`` argument cannot change a query answer and
+        # collapses out of the cache key
+        self._n_restricted = 0
 
     def bind_telemetry(self, tracer) -> None:
         """Attach a ``repro.core.telemetry.Tracer``: heartbeat pumps and
@@ -180,6 +192,9 @@ class GridInformationService:
         node._add(rec)
         self._records[spec.name] = rec
         self.registrations += 1
+        self.version += 1
+        if spec.authorized_users:
+            self._n_restricted += 1
         if self.tracer is not None:
             self.tracer.instant(t, "gis", "gis", "register",
                                 resource=spec.name, site=spec.site,
@@ -194,6 +209,9 @@ class GridInformationService:
                 .child(rec.department, "department"))
         node._remove(name)
         self.deregistrations += 1
+        self.version += 1
+        if rec.spec.authorized_users:
+            self._n_restricted -= 1
         if self.tracer is not None:
             self.tracer.instant(t, "gis", "gis", "deregister",
                                 resource=name, site=rec.enterprise)
@@ -256,6 +274,7 @@ class GridInformationService:
         if self.price_fn is not None:
             rec.advertised_price = self.price_fn(name, t)
         self.heartbeats += 1
+        self.version += 1
 
     def suspected(self, name: str, t: float) -> bool:
         """True once ``suspect_after`` heartbeats have gone missing.
@@ -301,6 +320,15 @@ class GridInformationService:
         run on *advertised* attributes (price as of the last heartbeat),
         and — unlike ``ResourceDirectory.discover`` — liveness means "no
         missed heartbeats", not ground truth."""
+        # single-entry answer cache: N per-broker TTL clients refreshing
+        # at the same virtual instant ask the same question N times.
+        # The returned list is shared — entries are frozen, callers must
+        # not mutate it.  ``suspected`` depends on t, so t is in the key
+        ckey = (self.version, t, level, within, min_chips, max_price,
+                include_suspected,
+                user if self._n_restricted else "")
+        if ckey == self._qcache_key:
+            return self._qcache_val
         node = self._scope(level, within)
         out = []
         for name in sorted(node.members):
@@ -321,6 +349,8 @@ class GridInformationService:
                 enterprise=rec.enterprise,
                 advertised_price=rec.advertised_price,
                 last_heartbeat=rec.last_heartbeat, suspected=sus))
+        self._qcache_key = ckey
+        self._qcache_val = out
         return out
 
     def levels(self) -> Dict[str, List[str]]:
@@ -369,6 +399,10 @@ class GISClient:
         self.user = user
         self.ttl = ttl
         self.refreshes = 0
+        # monotone count of suspect() calls — with the snapshot
+        # generation it stamps the client's belief state: unchanged
+        # (generation, burns) ⇒ identical membership AND suspicion
+        self.burns = 0
         self._snapshot: Optional[GISSnapshot] = None
         self._local_suspects: set = set()
         # run-lifetime tally of dispatch-burn suspicions per resource:
@@ -392,6 +426,7 @@ class GISClient:
 
     def suspect(self, name: str) -> None:
         self._local_suspects.add(name)
+        self.burns += 1
         self._suspicion_counts[name] = self._suspicion_counts.get(name,
                                                                   0) + 1
 
@@ -400,6 +435,20 @@ class GISClient:
         the whole run — observed churn/failure history, as distinct
         from the current (refresh-scoped) suspicion."""
         return self._suspicion_counts.get(name, 0)
+
+    def suspected_set(self) -> set:
+        """Bulk form of :meth:`is_suspected` for the advisor's per-tick
+        reassertion loop: every name the broker believes suspected among
+        the last snapshot's entries, plus dispatch burns since.  A name
+        absent from the snapshot entirely is ALSO believed down — pair
+        this set with a membership test on ``view(t).entries``."""
+        if self._snapshot is None:
+            return set()
+        out = set(self._local_suspects)
+        for name, entry in self._snapshot.entries.items():
+            if entry.suspected:
+                out.add(name)
+        return out
 
     def is_suspected(self, name: str) -> bool:
         """The broker's *belief* about ``name``: absent from the last

@@ -357,7 +357,7 @@ class Marketplace:
         for name in names:
             st = self.directory.status(name)
             st.departed = True
-            st.up = False
+            st.set_up(False)
             st.next_transition = rejoin_at
             self.gis.deregister(name, t)
         # 2. in-flight work fails over NOW — requeued without burning
@@ -450,7 +450,7 @@ class Marketplace:
         for name in names:
             st = self.directory.status(name)
             st.departed = False
-            st.up = True
+            st.set_up(True)
             st.next_transition = math.inf
             self.gis.register(self.directory.spec(name), t)
         self.churn_trace.append((t, "join", site))

@@ -25,6 +25,7 @@ from repro.core.economy import BudgetLedger, TradeServer, UserRequirements
 from repro.core.gis import GISClient, GridInformationService
 from repro.core.jobs import Job, JobSpec, JobStatus
 from repro.core.persistence import Journal, load_events
+from repro.core.quotes import QuoteBoard
 from repro.core.resources import ResourceDirectory
 from repro.core.scheduler import (ResourceView, ScheduleAdvisor,
                                   SchedulerConfig, cost_per_job)
@@ -139,6 +140,23 @@ class NimrodG:
             jid: i for i, jid in enumerate(self.jobs)}
         self._pending_ids: Set[str] = set()
         self._pending_sorted: List[Tuple[int, str]] = []  # (seq, jid)
+        self._pending_dead = 0       # tombstoned entries in the list
+        self._pending_head = 0       # first possibly-live index (lazy)
+        # bumped whenever anything the advisor's per-view maps consume
+        # changes (view membership, suspicion, capacity, estimates) or
+        # the allocation moves — lets decide() reuse its live/rate/cost
+        # maps and the straggler scan skip ahead across quiet ticks
+        self._views_epoch = 0
+        self._strag_epoch = -1
+        self._strag_until = -math.inf
+        # change-stamp of the last full view refresh (directory churn +
+        # GIS belief state): unchanged ⇒ the refresh pass is a no-op and
+        # is skipped wholesale, including the _my_running() walk
+        self._rv_key: Optional[tuple] = None
+        # stamp of the last _fill_slots pass that found zero believed-
+        # free slots: at saturation every tick re-derives the same
+        # empty dispatch list until something actually moves
+        self._nf_key: Optional[tuple] = None
         self._done_ids: Set[str] = set()
         self._active_ids: Set[str] = set()    # primaries STAGED|RUNNING
         self._running_ids: Set[str] = set()   # primaries RUNNING
@@ -153,6 +171,9 @@ class NimrodG:
         self._price_cache: Dict[str, Tuple[Tuple, float]] = {}
         self._spot_cache: Dict[str, Tuple[Tuple, float]] = {}
         self._locked_cache: Dict[str, Tuple[Tuple, List[float]]] = {}
+        # shared batched quote matrix: every broker on this trade object
+        # reads the same per-tick float64 rows (None => scalar path)
+        self._board = QuoteBoard.attach(trade)
         self._probe = (Job(spec=next(iter(self.jobs.values())).spec)
                        if self.jobs else None)
         self._tick_handle = None
@@ -289,13 +310,29 @@ class NimrodG:
                    and job.attempt < self.cfg.max_attempts)
         if pending and jid not in self._pending_ids:
             self._pending_ids.add(jid)
-            bisect.insort(self._pending_sorted, (seq, jid))
+            key = (seq, jid)
+            lst = self._pending_sorted
+            i = bisect.bisect_left(lst, key)
+            if i < len(lst) and lst[i] == key:
+                # the entry is still there as a tombstone — revive it
+                self._pending_dead -= 1
+            else:
+                lst.insert(i, key)
+            if i < self._pending_head:
+                self._pending_head = i
         elif not pending and jid in self._pending_ids:
+            # tombstone, don't splice: a del from a 100k-entry list is an
+            # O(n) memmove per dispatch.  Readers skip ids outside
+            # _pending_ids; compaction below keeps the list bounded by
+            # 2x the live entries (plus a floor so tiny lists don't churn)
             self._pending_ids.discard(jid)
-            i = bisect.bisect_left(self._pending_sorted, (seq, jid))
-            if (i < len(self._pending_sorted)
-                    and self._pending_sorted[i] == (seq, jid)):
-                del self._pending_sorted[i]
+            self._pending_dead += 1
+            lst = self._pending_sorted
+            if self._pending_dead > 16 and self._pending_dead * 2 > len(lst):
+                pids = self._pending_ids
+                self._pending_sorted = [e for e in lst if e[1] in pids]
+                self._pending_dead = 0
+                self._pending_head = 0
         if job.status is JobStatus.DONE:
             self._done_ids.add(jid)
         if job.status in (JobStatus.STAGED, JobStatus.RUNNING):
@@ -307,8 +344,16 @@ class NimrodG:
         else:
             self._running_ids.discard(jid)
 
+    def _pending_live(self) -> List[Tuple[int, str]]:
+        """The live (non-tombstoned) pending index entries, in seq
+        order — what ``_pending_sorted`` held before tombstoning."""
+        pids = self._pending_ids
+        return [e for e in self._pending_sorted if e[1] in pids]
+
     def _pending_jobs(self) -> List[Job]:
-        return [self.jobs[jid] for _, jid in self._pending_sorted]
+        pids = self._pending_ids
+        return [self.jobs[jid] for _, jid in self._pending_sorted
+                if jid in pids]
 
     def _remaining(self) -> int:
         return len(self.jobs) - len(self._done_ids)
@@ -354,17 +399,42 @@ class NimrodG:
         return base
 
     def _price(self, resource: str) -> float:
+        # batched fast path: no resale book in play and no per-user
+        # overlay on the row => the shared board row IS the effective
+        # price (the board itself delegates reservation-bearing rows)
+        board = self._board
+        if board is not None and self.secondary is None:
+            t = self.sim.now if self.sim is not None else _time.time()
+            v = board.effective(resource, self.req.user, t)
+            if v is not None:
+                return v
         return self._quote_memo(
             self._price_cache, resource,
             lambda t: self._effective_with_resale(resource, t),
             with_secondary=True)
 
     def _spot(self, resource: str) -> float:
+        board = self._board
+        if board is not None:
+            t = self.sim.now if self.sim is not None else _time.time()
+            v = board.quote(resource, self.req.user, t)
+            if v is not None:
+                return v
         return self._quote_memo(
             self._spot_cache, resource,
             lambda t: self.trade.quote(resource, t, self.req.user))
 
-    def _locked_prices(self, resource: str) -> List[float]:
+    _NO_LOCKED: Tuple[float, ...] = ()
+
+    def _locked_prices(self, resource: str) -> Sequence[float]:
+        # an empty reservation book can't lock any price — skip the
+        # memo-keyed book walk entirely (the walk's prune is a no-op on
+        # an empty book, so deferring it changes nothing)
+        board = self._board
+        if board is not None:
+            server = board.server_of(resource)
+            if server is not None and not server.reservations:
+                return self._NO_LOCKED
         return self._quote_memo(
             self._locked_cache, resource,
             lambda t: self.trade.reserved_price_list(resource,
@@ -430,6 +500,14 @@ class NimrodG:
             # and an unchanged generation cannot add members, so the
             # membership diff below runs once per refresh, not per tick
             snap = self.gis_client.view(self._now())
+            # O(1) whole-pass skip: everything the loops below derive is
+            # a pure function of (snapshot, dispatch burns, directory
+            # occupancy/liveness).  Unchanged stamps ⇒ every suspected/
+            # avail_slots value would be written back identically
+            rv_key = (snap.generation, self.gis_client.burns,
+                      self.directory.churn, len(self.views))
+            if rv_key == self._rv_key:
+                return
             if snap.generation != self._seen_gis_generation:
                 self._seen_gis_generation = snap.generation
                 for name in sorted(snap.entries):
@@ -437,27 +515,70 @@ class NimrodG:
                     if (not entry.suspected and name not in self.views
                             and name in self.directory):
                         self.views[name] = self._new_view(entry.spec)
+                        self._views_epoch += 1
         else:
+            rv_key = (self.directory.churn, len(self.views))
+            if rv_key == self._rv_key:
+                return
             for spec in self.directory.discover(self.req.user):
                 if spec.name not in self.views:
                     self.views[spec.name] = self._new_view(spec)
+                    self._views_epoch += 1
         mine = self._my_running()
-        for name, v in self.views.items():
-            if snap is not None:
-                # believed liveness: the snapshot's word plus dispatch
-                # burns since — NOT the directory's ground truth.  This
-                # reassertion must stay per-tick: completion/failure
-                # handlers flip ResourceView.suspected between ticks and
-                # the broker's belief always wins the argument back
-                v.suspected = self.gis_client.is_suspected(name)
-                v.last_seen = snap.taken_at
-            else:
-                v.suspected = not self.directory.status(name).up
-            if name in self.directory:
-                st = self.directory.status(name)
-                # free capacity = slots not held by OTHER users' jobs
-                others = max(0, st.running - mine.get(name, 0))
-                v.avail_slots = max(0, v.spec.slots - others)
+        mget = mine.get
+        dstat = self.directory._status
+        if snap is not None:
+            # believed liveness: the snapshot's word plus dispatch
+            # burns since — NOT the directory's ground truth.  This
+            # reassertion must stay per-tick: completion/failure
+            # handlers flip ResourceView.suspected between ticks and
+            # the broker's belief always wins the argument back
+            bad = self.gis_client.suspected_set()
+            entries = snap.entries
+            taken = snap.taken_at
+            changed = False
+            for name, v in self.views.items():
+                susp = name in bad or name not in entries
+                if v.suspected != susp:
+                    v.suspected = susp
+                    changed = True
+                v.last_seen = taken
+                st = dstat.get(name)
+                if st is not None:
+                    # free capacity = slots not held by OTHER users' jobs
+                    others = st.running - mget(name, 0)
+                    if others < 0:
+                        others = 0
+                    avail = v.spec.slots - others
+                    if avail < 0:
+                        avail = 0
+                    if v.avail_slots != avail:
+                        v.avail_slots = avail
+                        changed = True
+            if changed:
+                self._views_epoch += 1
+            self._rv_key = (snap.generation, self.gis_client.burns,
+                            self.directory.churn, len(self.views))
+        else:
+            changed = False
+            for name, v in self.views.items():
+                st = dstat[name]
+                susp = not st.up
+                if v.suspected != susp:
+                    v.suspected = susp
+                    changed = True
+                others = st.running - mget(name, 0)
+                if others < 0:
+                    others = 0
+                avail = v.spec.slots - others
+                if avail < 0:
+                    avail = 0
+                if v.avail_slots != avail:
+                    v.avail_slots = avail
+                    changed = True
+            if changed:
+                self._views_epoch += 1
+            self._rv_key = (self.directory.churn, len(self.views))
 
     # ------------------------------------------------------------------
     # scheduling tick
@@ -495,12 +616,20 @@ class NimrodG:
 
         # effective prices: an active negotiated contract (carried as a
         # price-locked reservation) beats the spot quote automatically
-        prices = {n: self._price(n) for n in self.views}
+        prices = None
+        if self._board is not None and self.secondary is None:
+            # one board pass for the whole view set (t validated once)
+            prices = self._board.effective_many(self.views, self.req.user, t)
+        if prices is None:
+            prices = {n: self._price(n) for n in self.views}
         contracted = (set(self.auction.contracted_resources(t))
                       if self.auction is not None else None)
         decision = self.advisor.decide(t, self.views, prices, remaining,
                                        self.ledger, set(self.allocated),
-                                       contracted=contracted)
+                                       contracted=contracted,
+                                       views_epoch=self._views_epoch)
+        if decision.release or decision.allocate:
+            self._views_epoch += 1   # allocation moved: re-derive caches
         for r in decision.release:
             self.allocated.discard(r)
             self._log("RELEASE", resource=r)
@@ -582,17 +711,63 @@ class NimrodG:
     def _fill_slots(self) -> None:
         if not self._pending_ids:
             return
+        # saturation skip: the believed-free scan below is a pure
+        # function of (directory occupancy/liveness, allocation, view
+        # suspicion) — all stamped by (churn, views epoch).  If the last
+        # pass under these exact stamps found nothing free, this one
+        # will too (at saturation that is every tick)
+        nf_key = (self.directory.churn, self._views_epoch)
+        if nf_key == self._nf_key:
+            return
         mine = self._my_running()
+        # believed-free counts first: a resource with zero free slots
+        # contributes nothing to the dispatch list, so its price lookup
+        # is skipped entirely (at saturation that is every resource);
+        # the count per resource is _believed_free_slots, inlined
+        dstat = self.directory._status
+        dspec = self.directory._specs
+        gis_off = self.gis_client is None
+        free: List[Tuple[str, int]] = []
+        for r in self.allocated:
+            st = dstat[r]
+            spec = dspec[r]
+            if st.up:
+                k = spec.slots - st.running
+            elif gis_off or self.views[r].suspected:
+                k = 0
+            else:
+                k = spec.slots - mine.get(r, 0)
+            if k > 0:
+                free.append((r, k))
+        if not free:
+            self._nf_key = nf_key
+            return
+        free.sort(key=lambda rk: (cost_per_job(
+            self.views[rk[0]], self._price(rk[0])), rk[0]))
         slots: List[str] = []
-        for r in sorted(self.allocated,
-                        key=lambda n: (cost_per_job(
-                            self.views[n], self._price(n)), n)):
-            slots.extend([r] * self._believed_free_slots(r, mine))
+        for r, k in free:
+            slots.extend([r] * k)
         remaining = self._remaining()
         # snapshot only as many pending jobs as there are slots to fill
         # (dispatching reindexes _pending_sorted mid-loop; zip pairs the
         # same (job, slot) tuples the full pending list would have)
-        pend = [self.jobs[jid] for _, jid in self._pending_sorted[:len(slots)]]
+        pend: List[Job] = []
+        pids = self._pending_ids
+        want = len(slots)
+        lst = self._pending_sorted
+        n = len(lst)
+        # jobs dispatch in seq order, so tombstones pile up exactly at
+        # the head — advance the lazy head pointer past them once, then
+        # collect the first ``want`` live entries
+        i = self._pending_head
+        while i < n and lst[i][1] not in pids:
+            i += 1
+        self._pending_head = i
+        while i < n and len(pend) < want:
+            jid = lst[i][1]
+            if jid in pids:
+                pend.append(self.jobs[jid])
+            i += 1
         for job, resource in zip(pend, slots):
             est = self.views[resource].est_job_seconds
             if self.secondary is not None:
@@ -786,6 +961,7 @@ class NimrodG:
         if job.resource in self.views:
             self.views[job.resource].observe_completion(
                 exec_seconds, self.cfg.rate_ema)
+            self._views_epoch += 1
         self._log("DONE", job_id=job.job_id, resource=job.resource,
                   duration=exec_seconds, cost=actual)
         if self._trace is not None:
@@ -882,6 +1058,7 @@ class NimrodG:
         if job.resource in self.views:
             self.views[job.resource].failures += 1
             self.views[job.resource].suspected = True
+            self._views_epoch += 1
         if fault and self.gis_client is not None and job.resource:
             # feed the burn back into the broker's cached view: suspect
             # locally until the next snapshot says otherwise
@@ -939,6 +1116,34 @@ class NimrodG:
         if not ests:
             return
         fastest = min(ests)
+        # cheap pre-pass: no RUNNING primary past the elapsed threshold
+        # means the ordered walk below would `continue` on every entry —
+        # skip the per-tick sort entirely (stragglers are the tail case).
+        # The earliest possible straggle time is remembered so quiet
+        # stretches skip even the pre-pass: new dispatches start later
+        # than every job already running, so the bound only moves when
+        # the threshold inputs do (estimates/allocation = views epoch)
+        if self._views_epoch == self._strag_epoch and t < self._strag_until:
+            return
+        thr = self.cfg.straggler_factor * fastest
+        jobs = self.jobs
+        min_started = None
+        hit = False
+        for jid in self._running_ids:
+            j = jobs.get(jid)
+            if j is None or j.status is not JobStatus.RUNNING:
+                continue
+            s = j.started_at
+            if t - s > thr:
+                hit = True
+                break
+            if min_started is None or s < min_started:
+                min_started = s
+        if not hit:
+            self._strag_epoch = self._views_epoch
+            self._strag_until = (min_started + thr if min_started is not None
+                                 else t + thr)
+            return
         # walk only the currently-RUNNING primaries, in first-dispatch
         # order — the order the full attempts-log walk used to visit
         # them in (budget-guarded ``break`` below makes order part of

@@ -1,0 +1,343 @@
+"""Batched quote evaluation: one float64 component matrix per tick,
+shared by every broker trading on the same server/federation.
+
+The scalar path prices one (resource, user, t) query at a time:
+``TradeServer.quote`` walks schedule -> peak window -> spot curve ->
+demand premium per call, and N brokers repeat the identical walk M
+times per tick.  At the 100k–1M job tier that walk *is* the simulator
+(see BENCH_scale.json).  The ``QuoteBoard`` assembles, once per
+distinct sim time, a ``(resources x price-components)`` float64 matrix
+
+    column 0: posted base price (after auction price discovery drift)
+    column 1: peak-hours multiplier
+    column 2: spot-curve factor
+    column 3: demand premium (queue utilization x elasticity)
+
+and reduces it left-to-right, so every broker's quote at that t is one
+array lookup.  Rows are re-validated against the same stamps the scalar
+memo keys on — ``ResourceStatus.version`` (slot churn moves the demand
+premium) and ``PriceSchedule.version`` (price discovery moves the
+base) — and recomputed individually when a stamp moved within a tick.
+
+Bit-exactness contract (what keeps golden runs byte-identical):
+
+* every factor is produced by the same left-associated multiply chain
+  the scalar code uses — ``((base * peak) * spot) * demand`` — and
+  numpy elementwise float64 ops round identically to CPython floats;
+* the spot factor keeps calling ``math.sin`` per row (numpy's sin may
+  differ in the last ulp), so transcendentals never go through numpy;
+* a per-user factor or a live reservation book drops the row back to
+  the scalar path (``None`` / delegated call) — the board only serves
+  the stampable, user-agnostic part of the price.
+
+When numpy is unavailable the board refuses to attach and every caller
+falls back to the scalar memo path unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+try:
+    import numpy as np
+except ImportError:          # pragma: no cover - numpy is a CI dep
+    np = None
+
+HOUR = 3600.0
+TWO_PI = 2.0 * math.pi
+
+
+class QuoteBoard:
+    """Shared per-(server|federation) batched quote matrix.
+
+    Attach with :meth:`attach`; all engines on the same ``trade``
+    object share one instance, so the matrix is built once per distinct
+    sim time no matter how many brokers query it.
+    """
+
+    def __init__(self, trade, directory):
+        self._trade = trade
+        self._directory = directory
+        self._t: Optional[float] = None
+        self._mstamp = -1            # directory+federation membership
+        self._single = not hasattr(trade, "server_for")
+        self._names: List[str] = []
+        self._index = {}
+        self._rebuild()
+
+    # -- attachment ----------------------------------------------------
+    @classmethod
+    def attach(cls, trade) -> Optional["QuoteBoard"]:
+        """Get-or-create the board shared through ``trade``.  Returns
+        ``None`` (callers use the scalar path) when numpy is missing or
+        ``trade`` is not a stampable server/federation."""
+        if np is None:
+            return None
+        board = getattr(trade, "_board", None)
+        if board is not None:
+            return board
+        directory = getattr(trade, "directory", None)
+        if directory is None or not hasattr(trade, "membership_version") \
+                or not hasattr(directory, "membership_version"):
+            return None
+        board = cls(trade, directory)
+        trade._board = board
+        return board
+
+    # -- (re)build -----------------------------------------------------
+    def _rebuild(self) -> None:
+        """Re-derive membership-dependent bindings: the row <-> resource
+        mapping and each row's spec/status/schedule/server objects."""
+        directory = self._directory
+        trade = self._trade
+        names = directory.all_names()
+        self._names = names
+        self._index = {n: i for i, n in enumerate(names)}
+        self._specs = [directory.spec(n) for n in names]
+        self._stats = [directory.status(n) for n in names]
+        if self._single:
+            self._scheds = [trade.schedules[n] for n in names]
+            self._servers = [trade] * len(names)
+        else:
+            self._servers = [trade.server_for(n) for n in names]
+            self._scheds = [s.schedules[n]
+                            for s, n in zip(self._servers, names)]
+        n = len(names)
+        self._M = np.empty((n, 4), dtype=np.float64)
+        self._slots = np.array([max(s.slots, 1) for s in self._specs],
+                               dtype=np.float64)
+        self._zero_slots = [i for i, s in enumerate(self._specs)
+                            if s.slots <= 0]
+        self._sver = [-1] * n
+        self._schver = [-1] * n
+        self._quote: List[float] = [0.0] * n
+        self._pre: List[float] = [0.0] * n
+        # clean-build skip state: the version-sum of every stamp the
+        # matrix consumes, and the [lo, hi) sim-time window inside which
+        # no row's peak-hours membership flips.  While both hold (and no
+        # spot curve is live) the quote vector is t-invariant.
+        self._vsum = -1
+        self._win_lo = 0.0
+        self._win_hi = -1.0
+        self._amp_rows: List[int] = []
+        # unique servers backing the rows (a federation maps many rows
+        # to one server) — their book_versions stamp the bulk-dict cache
+        seen = {}
+        for s in self._servers:
+            seen[id(s)] = s
+        self._userv = list(seen.values())
+        self._em = None              # (version-sum, {name: price}) or None
+        self._mstamp = (directory.membership_version
+                        + trade.membership_version)
+        self._t = None
+
+    def _build(self, t: float) -> None:
+        """Assemble the component matrix for sim time ``t`` and reduce
+        it into per-row quote (spot) and forward (no-demand) prices."""
+        mstamp = (self._directory.membership_version
+                  + self._trade.membership_version)
+        if mstamp != self._mstamp:
+            self._rebuild()
+        scheds = self._scheds
+        stats = self._stats
+        vsum = 0
+        for st in stats:
+            vsum += st.version
+        for sc in scheds:
+            vsum += sc.version
+        if (self._t is not None and vsum == self._vsum
+                and not self._amp_rows and self._win_lo <= t < self._win_hi):
+            # every stamped input is unchanged, no spot curve is live and
+            # no peak-hours membership flips before _win_hi: the quote
+            # vector is t-invariant here — restamp, keep the arrays
+            self._t = t
+            return
+        M = self._M
+        n = len(scheds)
+        # column 0/3 inputs re-read on every full build: base_price
+        # drifts under auction price discovery (stamped by
+        # PriceSchedule.version); elasticity/amplitude/period are
+        # treated as fixed between stamp movements — retuning them
+        # mid-run requires bumping the schedule's version
+        M[:, 0] = [sc.base_price for sc in scheds]
+        phase = np.array([sc.phase for sc in scheds], dtype=np.float64)
+        day = (t / HOUR + phase) % 24.0
+        peakmult = np.array([sc.spec.peak_multiplier for sc in scheds],
+                            dtype=np.float64)
+        inwin = (day >= 8.0) & (day < 20.0)
+        M[:, 1] = np.where(inwin, peakmult, 1.0)
+        # spot column: math.sin per row for ulp-compat with the scalar
+        # schedule; amplitude==0 rows (the default) skip the call
+        M[:, 2] = 1.0
+        amp_rows: List[int] = []
+        for i in range(n):
+            sc = scheds[i]
+            if sc.spot_amplitude:
+                amp_rows.append(i)
+                M[i, 2] = 1.0 + sc.spot_amplitude * math.sin(
+                    TWO_PI * (t + sc.phase * HOUR) / sc.spot_period)
+        self._amp_rows = amp_rows
+        running = np.array([st.running for st in stats], dtype=np.float64)
+        util = np.minimum(1.0, np.maximum(0.0, running / self._slots))
+        for i in self._zero_slots:
+            util[i] = 1.0
+        elast = np.array([sc.demand_elasticity for sc in scheds],
+                         dtype=np.float64)
+        M[:, 3] = 1.0 + elast * util
+        pre = (M[:, 0] * M[:, 1]) * M[:, 2]
+        quote = pre * M[:, 3]
+        # .tolist() hands back exact CPython floats — np.float64 must
+        # never leak into ledgers/journals (repr differs under numpy 2)
+        self._pre = pre.tolist()
+        self._quote = quote.tolist()
+        for i in range(n):
+            self._sver[i] = stats[i].version
+            self._schver[i] = scheds[i].version
+        # validity window: next 08:00/20:00 crossing over all rows (the
+        # tiny margin keeps float drift in the crossing time conservative)
+        if n:
+            h8 = (8.0 - day) % 24.0
+            h8[h8 == 0.0] = 24.0
+            h20 = (20.0 - day) % 24.0
+            h20[h20 == 0.0] = 24.0
+            self._win_hi = t + float(min(h8.min(), h20.min())) * HOUR - 1e-6
+        else:
+            self._win_hi = math.inf
+        self._win_lo = t
+        self._vsum = vsum
+        self._em = None
+        self._t = t
+        self._mstamp = mstamp
+
+    def _recompute_row(self, i: int, t: float) -> None:
+        """One row's stamp moved mid-tick (slot churn or price
+        discovery): redo that row with the scalar multiply chain."""
+        sc = self._scheds[i]
+        st = self._stats[i]
+        base = sc.base_price
+        pre = (base * float(self._M[i, 1])) * float(self._M[i, 2])
+        util = st.utilization(self._specs[i])
+        demand = 1.0 + sc.demand_elasticity * max(0.0, min(1.0, util))
+        self._M[i, 0] = base
+        self._M[i, 3] = demand
+        self._pre[i] = pre
+        self._quote[i] = pre * demand
+        self._sver[i] = st.version
+        self._schver[i] = sc.version
+
+    def _row(self, resource: str, t: float) -> int:
+        """Row index serving a single-name query, or -1 for the scalar
+        fallback.  Singles never trigger a matrix build: completion
+        handlers price one resource at event times between ticks, and
+        rebuilding every row for that one lookup costs more than the
+        scalar walk — the bulk tick path (:meth:`effective_many`) is
+        what assembles the matrix."""
+        if t != self._t or (self._directory.membership_version
+                            + self._trade.membership_version
+                            != self._mstamp):
+            return -1
+        i = self._index.get(resource)
+        if i is None:
+            return -1
+        if (self._stats[i].version != self._sver[i]
+                or self._scheds[i].version != self._schver[i]):
+            self._recompute_row(i, t)
+        return i
+
+    # -- queries (None => caller takes the scalar path) ----------------
+    def quote(self, resource: str, user: str, t: float) -> Optional[float]:
+        """Spot quote — ``trade.quote(resource, t, user)``."""
+        i = self._row(resource, t)
+        if i < 0 or self._scheds[i].user_factors:
+            return None
+        return self._quote[i]
+
+    def effective(self, resource: str, user: str, t: float
+                  ) -> Optional[float]:
+        """Effective price — ``trade.effective_price(resource, user,
+        t)``.  Rows whose server holds ANY live reservation delegate to
+        the scalar book walk (which also prunes, exactly as before)."""
+        i = self._row(resource, t)
+        if i < 0 or self._scheds[i].user_factors:
+            return None
+        server = self._servers[i]
+        if server.reservations:
+            return server.effective_price(resource, user, t)
+        return self._quote[i]
+
+    def effective_many(self, names, user: str, t: float):
+        """Effective prices for every resource in ``names`` at once —
+        the tick-time ``{n: effective_price(n, user, t)}`` dict in one
+        board pass (t/membership validated once, not per name).
+        Returns ``None`` wholesale when any name is unknown or carries
+        per-user factors: the caller then takes its scalar dictcomp.
+
+        The full-board result is cached against the sum of every
+        status/schedule/book version, so the N brokers ticking at one
+        sim time share a single dict build (reservation-delegated rows
+        are user-dependent and disable the cache).  Callers must treat
+        the returned dict as read-only."""
+        if t != self._t or (self._directory.membership_version
+                            + self._trade.membership_version
+                            != self._mstamp):
+            self._build(t)
+        stats, scheds = self._stats, self._scheds
+        vs = 0
+        for st in stats:
+            vs += st.version
+        for sc in scheds:
+            vs += sc.version
+        for s in self._userv:
+            vs += s.book_version
+        em = self._em
+        names_all = self._names
+        if em is not None and em[0] == vs:
+            full = em[1]
+        else:
+            sver, schver = self._sver, self._schver
+            quote, servers = self._quote, self._servers
+            full = {}
+            delegated = False
+            for i, name in enumerate(names_all):
+                if scheds[i].user_factors:
+                    self._em = None
+                    return None
+                if (stats[i].version != sver[i]
+                        or scheds[i].version != schver[i]):
+                    self._recompute_row(i, t)
+                server = servers[i]
+                if server.reservations:
+                    # live book: user- and prune-dependent — price it
+                    # scalar and keep the result out of the shared cache
+                    delegated = True
+                    full[name] = server.effective_price(name, user, t)
+                else:
+                    full[name] = quote[i]
+            self._em = None if delegated else (vs, full)
+        if list(names) == names_all:
+            return full
+        out = {}
+        for name in names:
+            v = full.get(name)
+            if v is None:
+                return None
+            out[name] = v
+        return out
+
+    def forward(self, resource: str, user: str, t: float
+                ) -> Optional[float]:
+        """Forward quote — the schedule with utilization pinned to 0."""
+        i = self._row(resource, t)
+        if i < 0 or self._scheds[i].user_factors:
+            return None
+        return self._pre[i]
+
+    def server_of(self, resource: str):
+        """The trade server owning ``resource`` (membership-checked),
+        or ``None`` if unknown — callers use it to skip empty-book
+        reservation scans without a ``server_for`` dict walk."""
+        if (self._directory.membership_version
+                + self._trade.membership_version != self._mstamp):
+            self._rebuild()
+        i = self._index.get(resource)
+        return None if i is None else self._servers[i]

@@ -65,6 +65,11 @@ class ResourceStatus:
     # keep the evidence
     acquires: int = 0
     releases: int = 0
+    # back-reference to the owning ResourceDirectory (set at register
+    # time): every occupancy/liveness flip bumps the directory-wide
+    # ``churn`` stamp so brokers can skip whole refresh passes in O(1)
+    _dir: object = dataclasses.field(default=None, repr=False,
+                                     compare=False)
 
     def free_slots(self, spec: ResourceSpec) -> int:
         return max(0, spec.slots - self.running) if self.up else 0
@@ -79,12 +84,28 @@ class ResourceStatus:
         self.running += 1
         self.acquires += 1
         self.version += 1
+        d = self._dir
+        if d is not None:
+            d.churn += 1
         return True
 
     def release(self) -> None:
         self.running = max(0, self.running - 1)
         self.releases += 1
         self.version += 1
+        d = self._dir
+        if d is not None:
+            d.churn += 1
+
+    def set_up(self, up: bool) -> None:
+        """Flip liveness through here, never by assigning ``up``
+        directly: failure/churn processes must bump the directory churn
+        stamp or a broker's O(1) view-refresh skip would keep serving
+        the stale liveness."""
+        self.up = up
+        d = self._dir
+        if d is not None:
+            d.churn += 1
 
     def utilization(self, spec: ResourceSpec) -> float:
         """Fraction of the queue occupied — the demand half of GRACE's
@@ -100,17 +121,29 @@ class ResourceDirectory:
     def __init__(self):
         self._specs: Dict[str, ResourceSpec] = {}
         self._status: Dict[str, ResourceStatus] = {}
+        # monotone stamp bumped on every register/deregister: the shared
+        # quote board keys its row <-> resource binding on it
+        self.membership_version = 0
+        # monotone stamp bumped on every state flip that can change a
+        # broker's derived view of the grid — slot acquire/release,
+        # liveness flips, membership.  "Unchanged churn" ⇒ every
+        # (up, running) pair in the directory is exactly as last seen
+        self.churn = 0
 
     # -- registration (resource owners) --
     def register(self, spec: ResourceSpec) -> None:
         if spec.name in self._specs:
             raise ValueError(f"resource {spec.name!r} already registered")
         self._specs[spec.name] = spec
-        self._status[spec.name] = ResourceStatus()
+        self._status[spec.name] = ResourceStatus(_dir=self)
+        self.membership_version += 1
+        self.churn += 1
 
     def deregister(self, name: str) -> None:
         self._specs.pop(name, None)
         self._status.pop(name, None)
+        self.membership_version += 1
+        self.churn += 1
 
     # -- discovery (schedulers) --
     def discover(self, user: str, *, site: Optional[str] = None,

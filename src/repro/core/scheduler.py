@@ -34,6 +34,11 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+try:
+    import numpy as np
+except ImportError:          # pragma: no cover - numpy is a CI dep
+    np = None
+
 from repro.core.economy import Bid, BudgetLedger, TradeServer, UserRequirements
 from repro.core.resources import ResourceDirectory, ResourceSpec
 from repro.core.strategies import Strategy, StrategyContext, create
@@ -130,6 +135,20 @@ class ScheduleAdvisor:
         self._gis_client = None
         self._trace = None
         self._track = ""
+        # last canonical ranking, keyed on exactly the inputs the sort
+        # consumes — prices move piecewise (peak windows, slot churn),
+        # so consecutive re-plans usually share one ordering
+        self._rank_cpj: Optional[Dict[str, float]] = None
+        self._rank_held: Optional[Set[str]] = None
+        self._rank_list: Optional[List[str]] = None
+        # (live, rates, cpj) from the last decide, valid while the
+        # caller's views-epoch and the exact views/prices dict objects
+        # are unchanged (the board hands out one shared prices dict per
+        # clean stretch, so identity is a real stamp, not an accident)
+        self._lv_epoch: Optional[int] = None
+        self._lv_views = None
+        self._lv_prices = None
+        self._lv = None
 
     def bind_telemetry(self, tracer, track: str) -> None:
         """Attach a ``repro.core.telemetry.Tracer``: ``decide`` counts
@@ -168,7 +187,8 @@ class ScheduleAdvisor:
     def decide(self, t: float, views: Dict[str, ResourceView],
                prices: Dict[str, float], remaining_jobs: int,
                ledger: BudgetLedger, current: Set[str],
-               contracted: Optional[Set[str]] = None
+               contracted: Optional[Set[str]] = None,
+               views_epoch: Optional[int] = None
                ) -> AllocationDecision:
         """Re-plan the allocation.  ``prices`` must already be
         *effective* prices (a negotiated contract's locked price where
@@ -176,14 +196,85 @@ class ScheduleAdvisor:
         contracts and spot offers in one ordering.  ``contracted``
         resources win cost ties: capacity already paid for by a
         negotiated contract should be drawn down first."""
-        live = {n: v for n, v in views.items() if not v.suspected}
+        # One pass over the views computes everything the ranking and
+        # the feasibility sums below re-derive per-name in the scalar
+        # path: the free-capacity rate and the cost-per-job, each the
+        # exact expression ``ResourceView.rate``/``cost_per_job`` uses
+        # (a 1.0 avail fraction multiplies out bit-exactly).
+        if (views_epoch is not None and views_epoch == self._lv_epoch
+                and views is self._lv_views and prices is self._lv_prices):
+            live, rates, cpj = self._lv
+            return self._decide_tail(t, views, prices, remaining_jobs,
+                                     ledger, current, contracted,
+                                     live, rates, cpj)
+        live: Dict[str, ResourceView] = {}
+        rates: Dict[str, float] = {}
+        cpj: Dict[str, float] = {}
+        for n, v in views.items():
+            if v.suspected:
+                continue
+            live[n] = v
+            spec = v.spec
+            slots = spec.slots
+            est = v.est_job_seconds
+            full = v.measured_rate
+            if full is None:
+                full = slots / max(est, 1e-9)
+            av = v.avail_slots
+            if av is None or slots <= 0:
+                rates[n] = full
+            else:
+                if av > slots:
+                    av = slots
+                elif av < 0:
+                    av = 0
+                rates[n] = full * (av / slots)
+            cpj[n] = prices[n] * spec.chips * est / HOUR
+        if views_epoch is not None:
+            self._lv_epoch = views_epoch
+            self._lv_views = views
+            self._lv_prices = prices
+            self._lv = (live, rates, cpj)
+        return self._decide_tail(t, views, prices, remaining_jobs, ledger,
+                                 current, contracted, live, rates, cpj)
+
+    def _decide_tail(self, t: float, views: Dict[str, ResourceView],
+                     prices: Dict[str, float], remaining_jobs: int,
+                     ledger: BudgetLedger, current: Set[str],
+                     contracted: Optional[Set[str]],
+                     live: Dict[str, ResourceView],
+                     rates: Dict[str, float],
+                     cpj: Dict[str, float]) -> AllocationDecision:
+        """Everything after the per-view map build: ranking, strategy
+        selection, the floor and the decision bookkeeping."""
         time_left = max(self.req.deadline - t, 1e-6)
         needed = self.cfg.safety * remaining_jobs / time_left
 
         held = contracted or set()
-        ranked = sorted(
-            live, key=lambda n: (cost_per_job(live[n], prices[n]),
-                                 n not in held, n))
+        if (self._rank_list is not None
+                and (cpj is self._rank_cpj or cpj == self._rank_cpj)
+                and held == self._rank_held):
+            ranked = self._rank_list
+        else:
+            if np is not None and len(live) > 1:
+                # one lexsort over (cpj, not-held, name) — the same
+                # lexicographic key tuple, evaluated as three flat arrays
+                names = list(live)
+                order = np.lexsort((
+                    np.array(names),
+                    np.fromiter((n not in held for n in names),
+                                dtype=bool, count=len(names)),
+                    np.fromiter((cpj[n] for n in names),
+                                dtype=np.float64, count=len(names))))
+                ranked = [names[i] for i in order]
+            else:
+                ranked = sorted(
+                    live, key=lambda n: (cpj[n], n not in held, n))
+            # the cpj dict is rebuilt fresh every call and never mutated
+            # after select(), so holding a reference is a valid stamp
+            self._rank_cpj = cpj
+            self._rank_held = set(held)
+            self._rank_list = ranked
         if not ranked:   # transient: everything down/suspected — hold state
             if self._trace is not None:
                 self._m_decisions.inc()
@@ -192,25 +283,45 @@ class ScheduleAdvisor:
                 needed_rate=needed, projected_cost_per_job=math.inf,
                 feasible_time=False, feasible_budget=False)
 
+        # current/held/ranked pass by reference: every registered
+        # strategy treats the context as read-only (select() builds its
+        # own result set), and ``ranked`` may be the advisor's cached
+        # ranking — a strategy that mutated it would corrupt the cache
         ctx = StrategyContext(
             t=t, req=self.req, cfg=self.cfg, views=live, prices=prices,
             remaining_jobs=remaining_jobs, ledger=ledger,
-            needed_rate=needed, current=set(current), held=set(held),
-            ranked=list(ranked), secondary=self._secondary,
+            needed_rate=needed, current=current, held=held,
+            ranked=ranked, secondary=self._secondary,
             bank=self._bank, history=self._history,
-            gis_client=self._gis_client)
+            gis_client=self._gis_client, rates=rates, cpj=cpj)
         chosen = self.strategy.select(ctx)
 
-        if len(chosen) < self.cfg.min_resources:
-            # prefer resources with free capacity when topping up
-            fallback = [n for n in
-                        sorted(ranked, key=lambda n: (live[n].rate() <= 0,))
-                        if n not in chosen]
-            chosen |= set(fallback[:self.cfg.min_resources - len(chosen)])
+        need = self.cfg.min_resources - len(chosen)
+        if need > 0:
+            # prefer resources with free capacity when topping up — the
+            # stable zero-rate-last partition of ``ranked``, walked only
+            # until the floor is met
+            fallback: List[str] = []
+            for n in ranked:
+                if rates[n] > 0 and n not in chosen:
+                    fallback.append(n)
+                    if len(fallback) == need:
+                        break
+            if len(fallback) < need:
+                for n in ranked:
+                    if rates[n] <= 0 and n not in chosen:
+                        fallback.append(n)
+                        if len(fallback) == need:
+                            break
+            chosen |= set(fallback)
 
-        rate = sum(live[n].rate() for n in chosen)
-        wcost = (sum(live[n].rate() * cost_per_job(live[n], prices[n])
-                     for n in chosen) / rate) if rate > 0 else math.inf
+        rate = 0.0
+        wsum = 0.0
+        for n in chosen:
+            r = rates[n]
+            rate += r
+            wsum += r * cpj[n]
+        wcost = (wsum / rate) if rate > 0 else math.inf
         decision = AllocationDecision(
             allocate=sorted(chosen - current),
             release=sorted(current - chosen),

@@ -13,7 +13,8 @@ import heapq
 import itertools
 import math
 import random
-from typing import Callable, Dict, List, Optional, Tuple
+from bisect import insort
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.resources import ResourceDirectory, ResourceSpec
 
@@ -21,18 +22,26 @@ from repro.core.resources import ResourceDirectory, ResourceSpec
 class Timer:
     """Cancellable handle for one scheduled event.
 
-    Cancellation is lazy: the heap entry stays where it is and is
-    discarded unfired when it reaches the top — O(1) to cancel, no heap
+    Cancellation is lazy: the queue entry stays where it is and is
+    discarded unfired when its turn comes — O(1) to cancel, no queue
     surgery.  A cancelled entry neither advances the clock nor counts
     against the event budget, and it can never distort the final-clock
-    clamp at the ``run(until=...)`` boundary."""
-    __slots__ = ("cancelled",)
+    clamp at the ``run(until=...)`` boundary.  The back-reference lets
+    the simulator keep an exact dead-entry tally (and compact the
+    calendar when the dead dominate) without ever scanning."""
+    __slots__ = ("cancelled", "_q")
 
-    def __init__(self):
+    def __init__(self, q=None):
         self.cancelled = False
+        self._q = q
 
     def cancel(self) -> None:
+        if self.cancelled:
+            return
         self.cancelled = True
+        q = self._q
+        if q is not None:        # still stored somewhere in the queue
+            q._note_cancel()
 
 
 class RepeatingTimer:
@@ -51,22 +60,75 @@ class RepeatingTimer:
 
 
 class Simulator:
-    def __init__(self, start: float = 0.0):
+    """Virtual clock over an array-backed calendar queue.
+
+    The event set here is dominated by dense periodic load — broker
+    ticks, GIS heartbeat pumps, auction clearing rounds — plus a band
+    of job-completion timers a few thousand seconds out.  A single
+    binary heap pays O(log n) per op and lets lazily-cancelled timers
+    pile up; the calendar queue instead bins events into fixed-width
+    time buckets (a page of ``wheel_buckets`` buckets, advanced as the
+    clock crosses it), with a small overflow heap for far-future events
+    (failure renewals at MTBF scale).  Scheduling is an append +
+    occupancy bump — O(1) — and each bucket is sorted once when the
+    clock reaches it, so total ordering cost is O(sum k_i log k_i) over
+    bucket sizes instead of O(n log n) over the whole horizon.  Event
+    order is EXACTLY the heap's: the global (t, seq) lexicographic
+    order, seq allocated at schedule time — byte-identical schedules.
+
+    Exact-dead-count bookkeeping (``Timer._q``) replaces the old "dead
+    until popped" regime: when cancelled entries outnumber live ones
+    the whole calendar compacts in one pass, so churny runs (straggler
+    duplicate cancels, site evictions) keep the queue at O(live)."""
+
+    def __init__(self, start: float = 0.0, *, bucket_width: float = 60.0,
+                 wheel_buckets: int = 1024):
+        if bucket_width <= 0:
+            raise ValueError("bucket_width must be positive")
+        if wheel_buckets < 1:
+            raise ValueError("wheel_buckets must be >= 1")
         self._t = start
-        self._heap: List[Tuple[float, int, Callable[[], None], Timer]] = []
         self._seq = itertools.count()
         self.stopped = False
         self.events = 0              # events actually fired, ever
+        # -- calendar state --
+        self._width = float(bucket_width)
+        self._inv_w = 1.0 / self._width
+        self._nb = int(wheel_buckets)
+        self._base = start           # time origin of bucket index 0
+        self._page = 0               # absolute bucket index of slot 0
+        self._buckets: List[List[tuple]] = [[] for _ in range(self._nb)]
+        self._slot = 0               # wheel slot the drain has reached
+        self._cur: Optional[List[tuple]] = None   # detached, sorted
+        self._cur_i = 0
+        self._overflow: List[tuple] = []          # heapq, beyond page
+        self._size = 0               # stored entries (live + dead)
+        self._dead = 0               # stored entries already cancelled
 
     @property
     def now(self) -> float:
         return self._t
 
+    # -- scheduling ----------------------------------------------------
     def at(self, t: float, fn: Callable[[], None]) -> Timer:
         if t < self._t - 1e-9:
             raise ValueError(f"scheduling into the past: {t} < {self._t}")
-        handle = Timer()
-        heapq.heappush(self._heap, (t, next(self._seq), fn, handle))
+        handle = Timer(self)
+        entry = (t, next(self._seq), fn, handle)
+        s = int((t - self._base) * self._inv_w) - self._page \
+            if math.isfinite(t) else self._nb
+        if s >= self._nb:
+            heapq.heappush(self._overflow, entry)
+        elif s <= self._slot and self._cur is not None:
+            # the target bucket is the one being drained (or an epsilon
+            # behind it): splice into the not-yet-fired tail — the
+            # (t, seq) key lands it exactly where the heap would
+            insort(self._cur, entry, lo=self._cur_i)
+        else:
+            if s < self._slot:
+                s = self._slot       # drained buckets never re-checked
+            self._buckets[s].append(entry)
+        self._size += 1
         return handle
 
     def after(self, delay: float, fn: Callable[[], None]) -> Timer:
@@ -96,39 +158,140 @@ class Simulator:
             interval if start_delay is None else start_delay, fire)
         return handle
 
-    def _drop_cancelled_head(self) -> None:
-        while self._heap and self._heap[0][3].cancelled:
-            heapq.heappop(self._heap)
+    # -- drain machinery -----------------------------------------------
+    def _next_slot(self) -> int:
+        """First wheel slot at or after the drain point with entries,
+        or -1.  Dense periodic load (ticks, heartbeats) occupies
+        adjacent buckets, so this probe almost always hits in a step
+        or two; long gaps cost one pass over empty list slots."""
+        b = self._buckets
+        for s in range(self._slot, self._nb):
+            if b[s]:
+                return s
+        return -1
 
+    def _advance_page(self) -> bool:
+        """Wheel exhausted: move the page to the overflow head's bucket
+        and pull every overflow entry inside the new page in."""
+        if not self._overflow:
+            return False
+        head_t = self._overflow[0][0]
+        if not math.isfinite(head_t):
+            # pathological all-infinite tail: drain it as one bucket
+            self._cur = sorted(self._overflow)
+            self._cur_i = 0
+            self._overflow = []
+            return True
+        self._page = int((head_t - self._base) * self._inv_w)
+        self._slot = 0
+        end_t = self._base + (self._page + self._nb) * self._width
+        buckets, page, inv_w = self._buckets, self._page, self._inv_w
+        of = self._overflow
+        while of and of[0][0] < end_t:
+            entry = heapq.heappop(of)
+            s = int((entry[0] - self._base) * inv_w) - page
+            if s < 0:
+                s = 0
+            buckets[s].append(entry)
+        return True
+
+    def _peek(self) -> Optional[tuple]:
+        """Next live entry in exact (t, seq) order, without consuming
+        it.  Cancelled entries encountered on the way are dropped here
+        (they never advance the clock or count against the budget)."""
+        while True:
+            cur = self._cur
+            if cur is not None:
+                i, n = self._cur_i, len(cur)
+                while i < n:
+                    entry = cur[i]
+                    h = entry[3]
+                    if not h.cancelled:
+                        self._cur_i = i
+                        return entry
+                    h._q = None
+                    self._size -= 1
+                    self._dead -= 1
+                    i += 1
+                self._cur_i = i
+                self._cur = None
+                self._slot += 1
+            s = self._next_slot()
+            if s < 0:
+                if not self._advance_page():
+                    return None
+                continue
+            self._slot = s
+            lst = self._buckets[s]
+            self._buckets[s] = []
+            lst.sort()
+            self._cur = lst
+            self._cur_i = 0
+
+    def _consume(self, entry: tuple) -> None:
+        self._cur_i += 1
+        self._size -= 1
+        entry[3]._q = None           # fired: a late cancel() is a no-op
+
+    # -- cancellation bookkeeping --------------------------------------
+    def _note_cancel(self) -> None:
+        self._dead += 1
+        if self._dead * 2 > self._size and self._size > 64:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Rebuild every store minus the cancelled entries — runs when
+        the dead outnumber the live, so each stored entry is copied
+        O(1) amortized times over its lifetime and a churny run's queue
+        stays O(live) instead of O(ever scheduled)."""
+        live = lambda e: not e[3].cancelled          # noqa: E731
+        n = 0
+        if self._cur is not None:
+            self._cur = [e for e in self._cur[self._cur_i:] if live(e)]
+            self._cur_i = 0
+            n += len(self._cur)
+        for s in range(self._slot, self._nb):
+            if self._buckets[s]:
+                b = [e for e in self._buckets[s] if live(e)]
+                self._buckets[s] = b
+                n += len(b)
+        of = [e for e in self._overflow if live(e)]
+        heapq.heapify(of)
+        self._overflow = of
+        self._size = n + len(of)
+        self._dead = 0
+
+    # -- the loop ------------------------------------------------------
     def run(self, until: float = math.inf, max_events: int = 10_000_000
             ) -> None:
         n = 0
         while not self.stopped:
-            self._drop_cancelled_head()
-            if not self._heap:
+            entry = self._peek()
+            if entry is None:
                 break
-            t, _, fn, _h = self._heap[0]
+            t = entry[0]
             if t > until:
                 break
-            heapq.heappop(self._heap)
+            self._consume(entry)
             self._t = t
-            fn()
+            entry[2]()
             n += 1
             self.events += 1
             if n >= max_events:
                 raise RuntimeError("simulator event budget exceeded "
                                    "(runaway loop?)")
         if not self.stopped:
-            self._drop_cancelled_head()
-            self._t = max(self._t, min(until, self._t if not self._heap
-                                       else self._heap[0][0]))
+            entry = self._peek()
+            self._t = max(self._t, min(until, self._t if entry is None
+                                       else entry[0]))
 
     def stop(self) -> None:
         self.stopped = True
 
     def pending_events(self) -> int:
-        """Live (non-cancelled) entries still in the heap."""
-        return sum(1 for e in self._heap if not e[3].cancelled)
+        """Live (non-cancelled) entries still scheduled.  The dead
+        tally is exact (``Timer._q``), so this is O(1)."""
+        return self._size - self._dead
 
 
 class FailureProcess:
@@ -162,7 +325,7 @@ class FailureProcess:
             st = self.directory.status(name)
             repair = rng.expovariate(1.0 / max(spec.mttr_hours * 3600.0, 1.0))
             if st.up and not st.departed:
-                st.up = False
+                st.set_up(False)
                 # publish the scheduled repair time: information services
                 # answer "ETA back up" from this, not from omniscience
                 st.next_transition = self.sim.now + repair
@@ -177,7 +340,7 @@ class FailureProcess:
                 # a departed site owns its machines' fate: the renewal
                 # process keeps ticking but must not resurrect them
                 if not st.departed:
-                    st.up = True
+                    st.set_up(True)
                     st.next_transition = math.inf
                     self.on_up(name)
                     if self.tracer is not None:

@@ -68,11 +68,13 @@ class AdaptiveStrategy(Strategy):
                 deferred.append(name)
         chosen: Set[str] = set()
         acc = 0.0
+        rates = ctx.rates
         for name in fair + deferred:           # patience yields to need
             if acc >= ctx.needed_rate:
                 break
-            if ctx.views[name].rate() <= 0:
+            r = rates[name] if rates is not None else ctx.views[name].rate()
+            if r <= 0:
                 continue
             chosen.add(name)
-            acc += ctx.views[name].rate()
+            acc += r
         return chosen

@@ -59,6 +59,12 @@ class StrategyContext:
     bank: Optional[object] = None        # GridBank
     history: Optional[object] = None     # ClearingHistory
     gis_client: Optional[object] = None  # GISClient
+    # advisor-precomputed per-name maps over ``views`` (None when a
+    # caller builds a context by hand): ``rates[n] == views[n].rate()``
+    # and ``cpj[n] == cost_per_job(views[n], prices[n])``, bit-exactly —
+    # strategies use them to skip re-deriving the same floats
+    rates: Optional[Dict[str, float]] = None
+    cpj: Optional[Dict[str, float]] = None
 
     def rank(self, key) -> List[str]:
         """Re-rank the live views by a strategy-specific key.  The key
@@ -154,19 +160,22 @@ def available_strategies() -> List[str]:
 
 def accumulate_rate(ranked: Sequence[str],
                     views: Dict[str, "ResourceView"],
-                    needed: float) -> Set[str]:
+                    needed: float,
+                    rates: Optional[Dict[str, float]] = None) -> Set[str]:
     """Walk ``ranked`` accumulating free rate until ``needed`` is met —
     the cost-optimal rule, shared by every strategy that only changes
     the *ordering*.  Skipping zero-rate entries (fully contended) keeps
     the walk weakly monotone in ``needed``: a larger target can only
-    extend the chosen prefix."""
+    extend the chosen prefix.  ``rates`` (when the advisor precomputed
+    it) short-circuits the per-name ``rate()`` recomputation."""
     chosen: Set[str] = set()
     acc = 0.0
     for name in ranked:
         if acc >= needed:
             break
-        if views[name].rate() <= 0:
+        r = rates[name] if rates is not None else views[name].rate()
+        if r <= 0:
             continue             # fully contended: no free capacity
         chosen.add(name)
-        acc += views[name].rate()
+        acc += r
     return chosen

@@ -20,4 +20,5 @@ class CostStrategy(Strategy):
     description = "cheapest-per-job prefix meeting the deadline rate"
 
     def select(self, ctx: StrategyContext) -> Set[str]:
-        return accumulate_rate(ctx.ranked, ctx.views, ctx.needed_rate)
+        return accumulate_rate(ctx.ranked, ctx.views, ctx.needed_rate,
+                               ctx.rates)

@@ -68,7 +68,8 @@ class ReputationStrategy(Strategy):
             key=lambda n: (cost_per_job(ctx.views[n], ctx.prices[n])
                            * (1.0 + self.risk_premium * self._risk(ctx, n)),
                            n not in ctx.held, n))
-        return accumulate_rate(ranked, ctx.views, ctx.needed_rate)
+        return accumulate_rate(ranked, ctx.views, ctx.needed_rate,
+                               ctx.rates)
 
     @classmethod
     def make_auction_broker(cls, house, user, *, secondary=None, bank=None):

@@ -38,4 +38,5 @@ class ScavengerStrategy(Strategy):
             key=lambda n: (not has_listing(n),
                            cost_per_job(ctx.views[n], ctx.prices[n]),
                            n not in ctx.held, n))
-        return accumulate_rate(ranked, ctx.views, ctx.needed_rate)
+        return accumulate_rate(ranked, ctx.views, ctx.needed_rate,
+                               ctx.rates)

@@ -23,11 +23,13 @@ class TimeStrategy(Strategy):
         chosen: Set[str] = set()
         rate = 0.0
         spend_rate = 0.0             # G$/s of the allocation
+        rates, cpj = ctx.rates, ctx.cpj
         for name in ctx.ranked:
-            r = ctx.views[name].rate()
+            r = rates[name] if rates is not None else ctx.views[name].rate()
             if r <= 0:
                 continue             # fully contended: no free capacity
-            c = cost_per_job(ctx.views[name], ctx.prices[name])
+            c = (cpj[name] if cpj is not None
+                 else cost_per_job(ctx.views[name], ctx.prices[name]))
             new_rate = rate + r
             new_spend = spend_rate + r * c
             projected = ctx.remaining_jobs * (new_spend / new_rate) \

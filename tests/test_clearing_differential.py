@@ -1,0 +1,134 @@
+"""Differential tests: the array auction clearer must equal the
+retained scalar reference clearer on ARBITRARY order books — not just
+the ones golden markets happen to produce.
+
+The scalar clearer (``clear_book_reference``) expands every order into
+single-slot units and walks the prefix; the array clearer
+(``clear_book_arrays``) never expands, crossing on cumulative-quantity
+breakpoints instead.  Equality must hold element-for-element on the
+trade list AND bit-for-bit on the clearing price, including:
+
+* exact price ties between bids (and between asks) — resolved by the
+  same (-price, user) / (price, resource) lexicographic keys;
+* zero-slot orders (contribute no units, must not desync the walk);
+* books that cross fully, partially, or not at all.
+
+A seeded random sweep always runs; the hypothesis sweep rides on CI
+where the package is installed.
+"""
+import random
+
+import pytest
+
+from repro.core.auctions import (AuctionBid, Ask, clear_book_arrays,
+                                 clear_book_reference)
+
+np = pytest.importorskip("numpy")
+
+
+def _assert_equivalent(bids, asks):
+    ref = clear_book_reference(bids, asks)
+    arr = clear_book_arrays(bids, asks)
+    assert arr[0] == ref[0]                       # trades, exactly
+    assert repr(arr[1]) == repr(ref[1])           # price, bit-for-bit
+    assert arr[2:] == ref[2:]                     # k, unit counts
+    assert all(isinstance(n, int) and not isinstance(n, bool)
+               for _, _, n in arr[0])             # no numpy ints leak
+
+
+def _random_book(rng):
+    # few distinct prices -> exact ties are common, not lucky
+    prices = [round(rng.uniform(0.5, 3.0), 1) for _ in range(4)]
+    bids = [AuctionBid(user=f"u{rng.randrange(5)}",
+                       chip_hour_price=rng.choice(prices),
+                       slots=rng.randrange(0, 5),
+                       valid_until=1e9)
+            for _ in range(rng.randrange(0, 8))]
+    asks = [Ask(resource=f"r{i}", site="s",
+                chip_hour_price=rng.choice(prices),
+                slots=rng.randrange(0, 5))
+            for i in range(rng.randrange(0, 8))]
+    return bids, asks
+
+
+def test_differential_seeded_sweep():
+    rng = random.Random(1234)
+    for _ in range(500):
+        bids, asks = _random_book(rng)
+        _assert_equivalent(bids, asks)
+
+
+def test_exact_tie_book_orders_identically():
+    """Every bid at one price, every ask at one crossing price: the
+    whole outcome hangs on the lexicographic tie-breaks."""
+    bids = [AuctionBid(user=u, chip_hour_price=2.0, slots=2,
+                       valid_until=1e9) for u in ("ua", "uc", "ub")]
+    asks = [Ask(resource=r, site="s", chip_hour_price=2.0, slots=3)
+            for r in ("rz", "rx", "ry")]
+    _assert_equivalent(bids, asks)
+    trades, price, k, nb, na = clear_book_arrays(bids, asks)
+    assert k == 6 and price == 2.0
+    # unit i of the user-ascending bid queue meets unit i of the
+    # resource-ascending ask queue: ua,ua,ub,ub,uc,uc vs rx,rx,rx,ry,ry,ry
+    assert trades == [("ua", "rx", 2), ("ub", "rx", 1), ("ub", "ry", 1),
+                      ("uc", "ry", 2)]
+
+
+def test_empty_and_degenerate_books():
+    _assert_equivalent([], [])
+    _assert_equivalent(
+        [AuctionBid(user="u", chip_hour_price=1.0, slots=3,
+                    valid_until=1e9)], [])
+    _assert_equivalent(
+        [], [Ask(resource="r", site="s", chip_hour_price=1.0, slots=3)])
+    # all zero-slot orders: units exist on neither side
+    _assert_equivalent(
+        [AuctionBid(user="u", chip_hour_price=9.0, slots=0,
+                    valid_until=1e9)],
+        [Ask(resource="r", site="s", chip_hour_price=1.0, slots=0)])
+
+
+def test_no_cross_book_clears_nothing():
+    bids = [AuctionBid(user="u", chip_hour_price=1.0, slots=4,
+                       valid_until=1e9)]
+    asks = [Ask(resource="r", site="s", chip_hour_price=5.0, slots=4)]
+    _assert_equivalent(bids, asks)
+    assert clear_book_arrays(bids, asks)[0] == []
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (CI-only: the package is a CI dependency)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # pragma: no cover - local runs
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    price = st.one_of(
+        st.sampled_from([0.5, 1.0, 1.0, 2.0, 2.5]),   # dense exact ties
+        st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False))
+
+    bid_lists = st.lists(
+        st.builds(AuctionBid,
+                  user=st.sampled_from(["u0", "u1", "u2", "u3"]),
+                  chip_hour_price=price,
+                  slots=st.integers(0, 6),
+                  valid_until=st.just(1e9)),
+        max_size=12)
+
+    ask_lists = st.lists(
+        st.builds(Ask,
+                  resource=st.sampled_from(["r0", "r1", "r2", "r3"]),
+                  site=st.just("s"),
+                  chip_hour_price=price,
+                  slots=st.integers(0, 6)),
+        max_size=12)
+
+    @settings(deadline=None, max_examples=200)
+    @given(bid_lists, ask_lists)
+    def test_hypothesis_array_equals_reference(bids, asks):
+        _assert_equivalent(bids, asks)

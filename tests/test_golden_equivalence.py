@@ -172,7 +172,10 @@ def test_index_invariants_after_run():
                   if j.status in (JobStatus.STAGED, JobStatus.RUNNING)}
         assert eng._done_ids == done
         assert eng._pending_ids == pending
-        assert {jid for _, jid in eng._pending_sorted} == pending
+        # the sorted list may carry tombstones; its live view must agree
+        assert {jid for _, jid in eng._pending_live()} == pending
+        assert eng._pending_dead == (len(eng._pending_sorted)
+                                     - len(eng._pending_live()))
         assert eng._active_ids == active
         assert eng._remaining() == sum(
             1 for j in eng.jobs.values() if j.status != JobStatus.DONE)

@@ -348,3 +348,28 @@ class TestReportTooling:
         assert proc.returncode == 2
         assert len(proc.stderr.strip().splitlines()) == 1
         assert "corrupt trace" in proc.stderr or "empty trace" in proc.stderr
+
+
+class TestSparklineDownsampling:
+    """100k-job traces emit one price sample per clearing round; the
+    sparkline must downsample instead of walking every round."""
+
+    def test_huge_series_is_capped_and_keeps_endpoints(self):
+        from benchmarks.make_report import _sparkline
+        n = 400_000
+        samples = [(float(i), float(i)) for i in range(n)]
+        import time as _time
+        t0 = _time.time()
+        line, lo, hi = _sparkline(samples, width=64)
+        wall = _time.time() - t0
+        assert len(line) == 64
+        # monotone ramp: first and last samples pin the rendered range
+        assert lo <= samples[0][1] + n / 64 and hi >= samples[-1][1] - n / 64
+        assert line[0] == "▁" and line[-1] == "█"
+        assert wall < 1.0          # stride cap, not a 400k-point walk
+
+    def test_small_series_unchanged_by_the_cap(self):
+        from benchmarks.make_report import _sparkline
+        samples = [(float(i), float(i % 7)) for i in range(200)]
+        line, lo, hi = _sparkline(samples, width=32)
+        assert len(line) == 32 and 0.0 <= lo <= hi <= 6.0

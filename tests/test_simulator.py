@@ -140,3 +140,91 @@ def test_every_start_delay_and_stop_value():
     assert ticks == [0.0, 5.0, 10.0]
     with pytest.raises(ValueError):
         sim.every(0.0, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# calendar-queue internals: ordering equivalence and dead-timer bounds
+# ---------------------------------------------------------------------------
+
+def test_calendar_order_matches_global_time_seq_order():
+    """Whatever buckets/overflow pages events land in, they must fire
+    in the exact (t, seq) lexicographic order a single heap gives —
+    including ties, epsilon-past schedules, and far-future overflow
+    entries pulled back in across page advances."""
+    import random as _random
+    rng = _random.Random(42)
+    sim = Simulator(bucket_width=10.0, wheel_buckets=8)  # tiny wheel:
+    # horizon = 80s, so most of the schedule lives in overflow pages
+    fired = []
+    expect = []
+    handles = []
+    for i in range(500):
+        # cluster times to force same-bucket ties and exact duplicates
+        t = rng.choice([rng.uniform(0, 5000), float(rng.randrange(100))])
+        h = sim.at(t, lambda i=i: fired.append(i))
+        handles.append((t, i, h))
+    cancelled = set()
+    for t, i, h in rng.sample(handles, 150):
+        h.cancel()
+        cancelled.add(i)
+    expect = [i for t, i, h in sorted(handles, key=lambda x: (x[0], x[1]))
+              if i not in cancelled]
+    sim.run()
+    assert fired == expect
+
+
+def test_calendar_mid_run_scheduling_preserves_order():
+    """Events scheduled from inside callbacks — including zero-delay
+    and into the bucket currently being drained — still interleave in
+    exact (t, seq) order."""
+    sim = Simulator(bucket_width=10.0, wheel_buckets=4)
+    log = []
+
+    def fire(tag):
+        log.append((sim.now, tag))
+        if tag == "a":
+            sim.after(0.0, lambda: fire("a0"))      # same instant
+            sim.after(3.0, lambda: fire("a3"))      # same bucket
+            sim.after(500.0, lambda: fire("a500"))  # beyond the wheel
+
+    sim.at(5.0, lambda: fire("a"))
+    sim.at(5.0, lambda: fire("b"))       # later seq, same t: after "a"
+    sim.at(7.0, lambda: fire("c"))
+    sim.run()
+    assert log == [(5.0, "a"), (5.0, "b"), (5.0, "a0"), (7.0, "c"),
+                   (8.0, "a3"), (505.0, "a500")]
+
+
+def test_cancelled_timers_never_dominate_the_queue():
+    """The leak regression: 10k schedule/cancel cycles must not leave
+    10k corpses — compaction holds stored entries to O(live)."""
+    sim = Simulator()
+    keep = [sim.at(float(i), lambda: None) for i in range(100)]
+    dead = [sim.at(1e6 + i, lambda: None) for i in range(10_000)]
+    for h in dead:
+        h.cancel()
+    assert sim.pending_events() == 100
+    # compaction invariant: dead never exceed half the store (+ the
+    # small-queue grace), so stored entries stay O(live)
+    assert sim._size <= 2 * sim.pending_events() + 66
+    assert sim._size < 1000          # nowhere near the 10_100 scheduled
+    for h in keep:
+        assert not h.cancelled
+
+
+def test_churny_run_keeps_queue_bounded():
+    """End-to-end: a churny multi-broker run (straggler duplicates,
+    evictions, timer cancels everywhere) samples the queue every tick
+    — stored entries must track the live count, not history."""
+    from repro.core import standard_market
+    market = standard_market(4, n_machines=12, seed=5, n_jobs=40,
+                             gis_ttl=900.0, churn_mean_uptime_h=3.0,
+                             churn_mean_downtime_h=1.0)
+    sim = market.sim
+    worst = []
+    sim.every(60.0, lambda: worst.append(
+        (sim._size, sim.pending_events())))
+    market.run(failures=True, churn=True)
+    assert worst, "sampler never fired"
+    for size, live in worst:
+        assert size <= 2 * live + 66, (size, live)
