@@ -1,0 +1,162 @@
+"""What the wire costs: loopback codec vs per-domain OS processes.
+
+The sharded grid runs the same protocol over two transports — an
+in-process loopback (codec on, no process boundary) and real domain
+processes joined by pipes.  This bench measures both against the
+direct-call baseline: market events/sec for a full loopback marketplace
+run, and request throughput + settlement round-trip latency against
+2/4/8 domain processes.
+
+Writes ``BENCH_distributed.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_distributed            # full
+    PYTHONPATH=src python -m benchmarks.bench_distributed --smoke    # CI
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core.marketplace import standard_market
+from repro.core.resources import ResourceSpec
+from repro.core.transport import DomainConfig, spawn_domains
+
+HOUR = 3600.0
+SEED = 17
+N_USERS = 4
+N_MACHINES = 10
+N_JOBS = 10
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_distributed.json")
+
+
+# -- loopback: full market, direct vs codec ------------------------------
+
+def _market_events_per_sec(wire: str, n_jobs: int) -> dict:
+    market = standard_market(N_USERS, n_machines=N_MACHINES, seed=SEED,
+                             n_jobs=n_jobs, wire=wire)
+    t0 = time.time()
+    rep = market.run()
+    wall = time.time() - t0
+    fired = market.sim.events
+    row = {
+        "wire": wire,
+        "events_fired": fired,
+        "events_per_sec": fired / max(wall, 1e-9),
+        "wall_s": wall,
+        "done": rep.total_done,
+    }
+    if wire == "loopback":
+        transports = [s._transport
+                      for s in market.trade.servers.values()]
+        row["wire_messages"] = sum(t.messages for t in transports)
+        row["wire_bytes"] = sum(t.bytes_out + t.bytes_in
+                                for t in transports)
+    return row
+
+
+# -- process mode: request throughput + settlement latency ---------------
+
+def _mk_specs(n_domains: int, per_domain: int):
+    specs = []
+    for d in range(n_domains):
+        site = f"site{d:02d}"
+        for i in range(per_domain):
+            specs.append(ResourceSpec(
+                name=f"{site.lower()}-{i:03d}", site=site,
+                department=f"{site}/d0", chips=8, slots=2,
+                base_price=1.0 + 0.1 * d))
+    return specs
+
+
+def _process_grid(n_domains: int, n_requests: int) -> dict:
+    by_site = {}
+    for s in _mk_specs(n_domains, per_domain=2):
+        by_site.setdefault(s.site, []).append(s)
+    cfgs = [DomainConfig(site=site, specs=tuple(ss))
+            for site, ss in sorted(by_site.items())]
+    t0 = time.time()
+    procs, fed, gis = spawn_domains(cfgs)
+    spawn_s = time.time() - t0
+    try:
+        names = fed.directory.all_names()
+        # quote throughput: round-robin price reads across the domains
+        t0 = time.time()
+        for i in range(n_requests):
+            fed.quote(names[i % len(names)], float(i))
+        quote_wall = time.time() - t0
+        # settlement round-trip latency (reserve once per domain first
+        # so the ledgers have something real behind them)
+        sites = fed.sites()
+        lat = []
+        for i in range(min(n_requests, 200)):
+            site = sites[i % len(sites)]
+            t0 = time.time()
+            fed.servers[site].settle(f"bench:{i}", t=float(i), user="u0",
+                                     resource=names[i % len(names)],
+                                     amount=0.25)
+            lat.append(time.time() - t0)
+        lat.sort()
+        return {
+            "domains": n_domains,
+            "spawn_s": spawn_s,
+            "requests": n_requests,
+            "quotes_per_sec": n_requests / max(quote_wall, 1e-9),
+            "settle_p50_us": lat[len(lat) // 2] * 1e6,
+            "settle_p95_us": lat[int(len(lat) * 0.95)] * 1e6,
+            "settlements": len(lat),
+        }
+    finally:
+        for p in procs.values():
+            p.stop()
+
+
+def main(csv: bool = False, smoke: bool = False):
+    n_jobs = 4 if smoke else N_JOBS
+    fanouts = (2,) if smoke else (2, 4, 8)
+    n_requests = 200 if smoke else 2000
+
+    loopback_rows = [_market_events_per_sec(w, n_jobs)
+                     for w in ("direct", "loopback")]
+    process_rows = [_process_grid(n, n_requests) for n in fanouts]
+
+    if not csv:
+        print(f"{'wire':10s} {'events/s':>12s} {'wall_s':>8s}")
+        for r in loopback_rows:
+            print(f"{r['wire']:10s} {r['events_per_sec']:12.0f} "
+                  f"{r['wall_s']:8.3f}")
+        print(f"\n{'domains':>8s} {'quotes/s':>10s} {'settle p50us':>13s} "
+              f"{'p95us':>8s}")
+        for r in process_rows:
+            print(f"{r['domains']:8d} {r['quotes_per_sec']:10.0f} "
+                  f"{r['settle_p50_us']:13.0f} {r['settle_p95_us']:8.0f}")
+
+    out = {
+        "bench": "distributed",
+        "seed": SEED,
+        "n_users": N_USERS,
+        "n_machines": N_MACHINES,
+        "n_jobs_per_user": n_jobs,
+        "loopback": loopback_rows,
+        "process": process_rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    if not csv:
+        print(f"wrote {OUT_PATH}")
+
+    results = []
+    for r in loopback_rows:
+        results.append((f"distributed_{r['wire']}_market",
+                        r["wall_s"] * 1e6, r["events_per_sec"]))
+    for r in process_rows:
+        results.append((f"distributed_{r['domains']}proc_settle_p50",
+                        r["settle_p50_us"], r["quotes_per_sec"]))
+    return results
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -14,9 +14,10 @@ import traceback
 def main() -> None:
     results = []
     failures = []
-    from benchmarks import (bench_auctions, bench_figure3, bench_gis,
-                            bench_kernels, bench_marketplace,
-                            bench_roofline, bench_scale, bench_scheduler,
+    from benchmarks import (bench_auctions, bench_distributed,
+                            bench_figure3, bench_gis, bench_kernels,
+                            bench_marketplace, bench_roofline,
+                            bench_scale, bench_scheduler,
                             bench_secondary, bench_telemetry,
                             bench_tournament)
     mods = [("figure3 (paper Fig.3, GUSTO deadline trial)", bench_figure3),
@@ -35,6 +36,8 @@ def main() -> None:
              bench_tournament),
             ("telemetry (tracer overhead, traced vs untraced)",
              bench_telemetry),
+            ("distributed (wire loopback vs per-domain processes)",
+             bench_distributed),
             ("kernels (pallas vs oracle)", bench_kernels),
             ("roofline (dry-run 3-term table)", bench_roofline)]
     # moe crossover needs 512 placeholder devices; include only when the

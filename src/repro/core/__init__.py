@@ -30,13 +30,19 @@ from repro.core.persistence import (Journal, load_events, replay,
 from repro.core.plan import Plan, PlanError, parse_plan, substitute
 from repro.core.resources import (ResourceDirectory, ResourceSpec,
                                   ResourceStatus, gusto_like_testbed)
+from repro.core.protocol import (PROTOCOL_VERSION, Message, ProtocolError,
+                                 example_messages)
+from repro.core.protocol import dumps as protocol_dumps
+from repro.core.protocol import loads as protocol_loads
 from repro.core.scheduler import (AllocationDecision, ContractQuote,
                                   ResourceView, ScheduleAdvisor,
-                                  SchedulerConfig, negotiate_contract)
+                                  SchedulerConfig, negotiate_contract,
+                                  views_from_gis)
 from repro.core.secondary import (Clearing, ClearingHistory, ResaleFill,
                                   ResaleListing, SecondaryMarket)
-from repro.core.simulator import (ChurnProcess, FailureProcess, Simulator,
-                                  duration_model)
+from repro.core.simulator import (ChurnProcess, ConservativeClock,
+                                  FailureProcess, Simulator,
+                                  WallClockSimulator, duration_model)
 from repro.core.telemetry import (Counter, Gauge, Histogram,
                                   MetricsRegistry, MultiGauge, Subscription,
                                   TraceEvent, Tracer, export_chrome_trace,
@@ -50,23 +56,33 @@ from repro.core.dispatcher import (RESOURCE_DEPARTED, SLOT_LOST,
                                    DispatchCallbacks, Dispatcher,
                                    LocalExecutor, SimulatedExecutor,
                                    StagingProxy, is_resource_fault)
+from repro.core.transport import (DomainConfig, DomainEndpoint,
+                                  DomainProcess, LoopbackTransport,
+                                  RemoteGIS, RemoteTradeServer,
+                                  TransportError, WireFederation,
+                                  build_domain, spawn_domains,
+                                  wrap_federation_loopback)
 
 __all__ = [
     "AdmissionError", "AllocationDecision", "Ask", "AuctionBid",
     "AuctionBroker", "AuctionHouse", "BankEntry", "Bid", "BudgetLedger",
     "BrokerHealth", "ChurnProcess", "Clearing", "ClearingHistory",
-    "ClearingRound",
+    "ClearingRound", "ConservativeClock",
     "Contract", "ContractQuote", "Counter",
     "CounterOffer", "DispatchCallbacks", "Dispatcher", "DoubleAuctionBook",
+    "DomainConfig", "DomainEndpoint", "DomainProcess",
     "ExperimentMonitor", "ExperimentReport", "FailureProcess",
     "GISClient", "GISEntry",
     "GISRecord", "GISRegistry", "GISSnapshot", "Gauge", "GridBank",
     "GridInformationService", "Histogram", "Job", "JobSpec",
     "InvariantViolation",
-    "JobStatus", "Journal", "LocalExecutor", "MarketReport", "MarketUser",
-    "Marketplace", "MetricsRegistry", "MultiGauge",
-    "NegotiationTimeout", "NimrodG", "Plan", "PlanError",
-    "PriceSchedule", "ReconciliationError", "ResaleFill", "ResaleListing",
+    "JobStatus", "Journal", "LocalExecutor", "LoopbackTransport",
+    "MarketReport", "MarketUser",
+    "Marketplace", "Message", "MetricsRegistry", "MultiGauge",
+    "NegotiationTimeout", "NimrodG", "PROTOCOL_VERSION", "Plan",
+    "PlanError",
+    "PriceSchedule", "ProtocolError", "ReconciliationError",
+    "RemoteGIS", "RemoteTradeServer", "ResaleFill", "ResaleListing",
     "Reservation",
     "ResourceDirectory", "ResourceSpec", "ResourceStatus", "ResourceView",
     "RESOURCE_DEPARTED", "SLOT_LOST", "ScheduleAdvisor", "SchedulerConfig",
@@ -74,14 +90,19 @@ __all__ = [
     "StagingProxy", "SteeringAction", "Strategy",
     "StrategyContext", "Subscription", "TraceEvent", "Tracer",
     "TradeFederation",
-    "TradeServer", "UserOutcome", "UserRequirements",
-    "available_strategies", "cost_per_job", "create_strategy",
+    "TradeServer", "TransportError", "UserOutcome", "UserRequirements",
+    "WallClockSimulator", "WireFederation",
+    "available_strategies", "build_domain", "cost_per_job",
+    "create_strategy",
     "department_of",
-    "duration_model", "export_chrome_trace", "export_jsonl",
+    "duration_model", "example_messages", "export_chrome_trace",
+    "export_jsonl",
     "gusto_like_testbed", "is_resource_fault",
     "load_chrome_trace",
     "load_events", "mixed_auction_market", "negotiate_contract",
-    "parse_plan", "register_strategy", "replay", "stable_dumps",
+    "parse_plan", "protocol_dumps", "protocol_loads",
+    "register_strategy", "replay", "spawn_domains", "stable_dumps",
     "standard_market",
-    "strategy_class", "substitute",
+    "strategy_class", "substitute", "views_from_gis",
+    "wrap_federation_loopback",
 ]

@@ -52,6 +52,11 @@ class GridBank:
         self._revenue: Dict[str, float] = {}
         self._pair: Dict[Tuple[str, str], float] = {}
         self._owner_kind: Dict[Tuple[str, str], float] = {}
+        # exactly-once keys already booked (``record_once``): in the
+        # sharded grid every settlement crosses a wire and may be
+        # retried or replayed from a journal — the id set is what keeps
+        # a re-delivered settlement from double-booking revenue
+        self._settled_ids: set = set()
         self.tracer = None              # set by bind_telemetry
 
     def bind_telemetry(self, tracer) -> None:
@@ -97,6 +102,24 @@ class GridBank:
                 self.tracer.instant(t, f"site:{owner}", "bank", kind,
                                     user=user, resource=resource,
                                     amount=amount)
+
+    def record_once(self, settlement_id: str, *, t: float, user: str,
+                    owner: str, resource: str, amount: float,
+                    kind: str = "settle") -> bool:
+        """Idempotent settlement: book the entry unless ``settlement_id``
+        was already booked.  Returns True when the entry was recorded,
+        False for a duplicate (a retried wire delivery or a journal
+        replay after a crash) — the caller can tell at-most-once
+        delivery failed without the books ever seeing the double."""
+        if settlement_id in self._settled_ids:
+            return False
+        self._settled_ids.add(settlement_id)
+        self.record(t=t, user=user, owner=owner, resource=resource,
+                    amount=amount, kind=kind)
+        return True
+
+    def seen_settlement(self, settlement_id: str) -> bool:
+        return settlement_id in self._settled_ids
 
     # -- queries -------------------------------------------------------
     def users(self) -> List[str]:

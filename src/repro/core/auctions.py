@@ -148,7 +148,10 @@ class DoubleAuctionBook:
     def make_asks(self, t: float, window: float) -> List[Ask]:
         asks = []
         for name in self.server.resources():
-            if not self.server.directory.status(name).up:
+            # liveness through the server (resource_up), not the
+            # directory: across a process boundary only the owning
+            # domain knows whether its machine is really up
+            if not self.server.resource_up(name):
                 continue
             slots = self.server.reservable_slots(name, t, t + window)
             if slots <= 0:
@@ -401,7 +404,10 @@ class AuctionHouse:
             # BEFORE striking: the posted quote logged is the one the
             # round actually cleared against, not an already-nudged one
             for resource in sorted({r for _, r, _ in trades}):
-                sched = server.schedules.get(resource)
+                # a remote (wire-proxy) server keeps its schedules on
+                # the domain side; the discovery nudge then happens
+                # there and this broker-side hook is a no-op
+                sched = getattr(server, "schedules", {}).get(resource)
                 if self.history is not None:
                     posted = server.forward_quote(resource, t)
                     self.history.append(t, resource, price, posted,

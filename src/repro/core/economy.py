@@ -203,6 +203,22 @@ class TradeServer:
                 if self.site is None
                 or self.directory.spec(n).site == self.site]
 
+    def resource_up(self, resource: str) -> bool:
+        """Domain-local liveness ground truth.  Cross-domain consumers
+        (auction books, brokers) ask the owning server rather than
+        reading the directory — across a process boundary the directory
+        is a mirror, and only the domain knows its own machines."""
+        return self.directory.status(resource).up
+
+    def find_reservation(self, reservation_id: int) -> Optional[Reservation]:
+        """Look one reservation up by its federation-unique id (the
+        secondary market's locate path — a seam, so a remote book can
+        answer without shipping its whole reservation list)."""
+        for r in self.reservations:
+            if r.reservation_id == reservation_id:
+                return r
+        return None
+
     def utilization(self, resource: str) -> float:
         return self.directory.status(resource).utilization(
             self.directory.spec(resource))

@@ -80,6 +80,33 @@ class GISEntry:
     def name(self) -> str:
         return self.spec.name
 
+    def to_wire(self) -> Dict[str, object]:
+        """The dynamic attributes a GIS query answer ships across a
+        domain boundary (the spec itself is mirrored once at sync time,
+        keyed by name — re-shipping it per query would be the bulk of
+        every answer)."""
+        return {"name": self.spec.name, "site": self.spec.site,
+                "department": self.department,
+                "enterprise": self.enterprise,
+                "chips": self.spec.chips,
+                "advertised_price": self.advertised_price,
+                "last_heartbeat": self.last_heartbeat,
+                "suspected": self.suspected}
+
+    @classmethod
+    def from_wire(cls, d: Dict[str, object],
+                  spec: ResourceSpec) -> "GISEntry":
+        """Rebuild an entry broker-side from its wire row plus the
+        mirrored spec (which must be the row's resource)."""
+        if spec.name != d["name"]:
+            raise ValueError(f"wire row {d['name']!r} does not match "
+                             f"spec {spec.name!r}")
+        return cls(spec=spec, department=str(d["department"]),
+                   enterprise=str(d["enterprise"]),
+                   advertised_price=float(d["advertised_price"]),
+                   last_heartbeat=float(d["last_heartbeat"]),
+                   suspected=bool(d["suspected"]))
+
 
 class GISRegistry:
     """One node of the hierarchy.  Department registries hold the

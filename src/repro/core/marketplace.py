@@ -209,6 +209,7 @@ class Marketplace:
                  ask_fraction: float = 0.5,
                  discovery_gain: float = 0.0,
                  discovery_band: float = 0.5,
+                 wire: str = "direct",
                  tracer=None):
         self.seed = seed
         # optional telemetry.Tracer: when set, every subsystem below is
@@ -241,6 +242,17 @@ class Marketplace:
             bank=self.bank)
         self.trade = TradeFederation.from_directory(
             self.directory, self.schedules, **self._server_kw)
+        # wire="loopback" re-plumbs every cross-domain call through the
+        # protocol codec (repro.core.transport) — same objects, same
+        # clock, byte-identical reports; the differential the real
+        # multi-process deployment is certified against
+        if wire not in ("direct", "loopback"):
+            raise ValueError(f"wire must be 'direct' or 'loopback', "
+                             f"got {wire!r}")
+        self.wire = wire
+        if wire == "loopback":
+            from repro.core.transport import wrap_federation_loopback
+            self.trade = wrap_federation_loopback(self.trade)
         # realized-trade price log: clearing rounds and resale fills
         # append here; schedules with discovery_gain > 0 learn from the
         # clearing rounds (fills are user-to-user and don't nudge)
@@ -445,8 +457,10 @@ class Marketplace:
         if self.secondary is not None and self.secondary.resale:
             server.secondary = self.secondary
         self.trade.add_server(site, server)
-        self.auction_house.add_site(site, server)
-        self.gis.register_trade_server(site, server)
+        # hand the auction house whatever the federation now fronts the
+        # site with (in wire mode add_server wrapped it in a proxy)
+        self.auction_house.add_site(site, self.trade.servers[site])
+        self.gis.register_trade_server(site, self.trade.servers[site])
         for name in names:
             st = self.directory.status(name)
             st.departed = False

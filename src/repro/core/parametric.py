@@ -83,7 +83,8 @@ class NimrodG:
                  seed: int = 0, stop_sim_when_done: bool = True,
                  auction=None, bank=None, secondary=None,
                  gis: Optional[GridInformationService] = None,
-                 gis_ttl: float = 600.0, history=None, tracer=None):
+                 gis_ttl: float = 600.0, history=None, tracer=None,
+                 domain: str = ""):
         self.experiment = experiment
         self.req = requirements
         self.directory = directory
@@ -184,7 +185,13 @@ class NimrodG:
         # default), so the traced-off run pays one None check and the
         # traced-on run draws no RNG and reorders nothing
         self._trace = tracer
-        self._track = f"broker:{experiment}"
+        # on the sharded grid each broker runs inside an administrative
+        # domain: naming it prefixes this engine's trace track, so a
+        # merged multi-domain trace keeps per-domain lanes apart (the
+        # default "" leaves single-domain output byte-identical)
+        self.domain = domain
+        self._track = (f"{domain}/broker:{experiment}" if domain
+                       else f"broker:{experiment}")
         self._open_spans: Set[str] = set()   # job spans begun, not ended
         self._open_attempts: Set[str] = set()  # attempt span ids in flight
         # quote-memo hit/miss tallies are plain ints counted always (an

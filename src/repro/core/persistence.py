@@ -20,6 +20,68 @@ def stable_dumps(obj: Any) -> str:
     return json.dumps(obj, sort_keys=True)
 
 
+# tail window read when recovering ``seq`` on reopen; grows geometrically
+# if the last well-formed line is longer than this (rare: one event)
+_TAIL_BLOCK = 64 * 1024
+
+
+def _recover_tail(path: str) -> int:
+    """Next sequence number, recovered from the LAST well-formed journal
+    line — O(tail), not O(file): a month-long experiment's restart must
+    not re-parse every event ever written just to learn one integer.
+
+    A torn trailing fragment (crash mid-write) is truncated here, so the
+    next append starts a fresh line instead of gluing onto the fragment
+    and corrupting an otherwise-good event."""
+    try:
+        size = os.path.getsize(path)
+    except OSError:
+        return 0
+    if size == 0:
+        return 0
+    with open(path, "r+b") as f:
+        # drop an unterminated trailing fragment first (no final "\n")
+        block = min(_TAIL_BLOCK, size)
+        while True:
+            f.seek(size - block)
+            data = f.read(block)
+            if b"\n" in data or block == size:
+                break
+            block = min(block * 2, size)
+        if not data.endswith(b"\n"):
+            body, nl, _frag = data.rpartition(b"\n")
+            if nl:
+                size = size - block + len(body) + 1
+            else:                       # whole file is one torn fragment
+                size = 0
+            f.truncate(size)
+        if size == 0:
+            return 0
+        # walk complete lines backwards until one parses with a seq
+        block = min(_TAIL_BLOCK, size)
+        while True:
+            start = size - block
+            f.seek(start)
+            data = f.read(block)
+            lines = data.split(b"\n")
+            # the window's first chunk may be a mid-line cut: only trust
+            # it when the window starts at the top of the file
+            trusted = lines if start == 0 else lines[1:]
+            for line in reversed(trusted):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    ev = json.loads(line)
+                except json.JSONDecodeError:
+                    continue            # torn-but-terminated line: skip
+                if isinstance(ev, dict) and isinstance(ev.get("seq"), int):
+                    return ev["seq"] + 1
+            if start == 0:
+                return 0                # nothing well-formed anywhere
+            block = min(block * 2, size)
+
+
 class Journal:
     def __init__(self, path: str, fsync: bool = True):
         self.path = path
@@ -27,15 +89,16 @@ class Journal:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
-        self._f = open(path, "a", encoding="utf-8")
         self._seq = self._count_existing()
+        self._f = open(path, "a", encoding="utf-8")
 
     def _count_existing(self) -> int:
-        n = 0
+        # recover from the last well-formed line (and clip a torn tail)
+        # BEFORE opening the append handle — O(tail) however large the
+        # journal has grown
         if os.path.exists(self.path):
-            for _ in replay(self.path):
-                n += 1
-        return n
+            return _recover_tail(self.path)
+        return 0
 
     def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
         ev = {"seq": self._seq, "kind": kind, **fields}

@@ -1,0 +1,549 @@
+"""Wire protocol for the sharded grid (the paper's premise made literal).
+
+Nimrod/G's broker, per-domain trade servers, directory/GIS and GridBank
+are *independently owned, geographically distributed components* — so
+every cross-domain interaction here is a typed, versioned message:
+quote solicitation, sealed bids, contract award (reserve/cancel),
+reservation transfer (secondary market), GIS register/heartbeat/query,
+and GridBank settlement.
+
+Messages are frozen dataclasses registered by ``kind``.  ``encode``
+lowers one to a plain dict stamped with the protocol version; ``parse``
+raises :class:`ProtocolError` on an unknown kind, a missing/unknown/
+malformed ``v``, or fields that don't fit.  The invariant the whole
+layer rests on::
+
+    dumps(parse(json.loads(dumps(msg)))) == dumps(msg)
+
+i.e. every message round-trips byte-identically through
+``persistence.stable_dumps`` — canonical JSON with exact float reprs —
+so journals, transports and replays all agree on the bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import typing
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+from repro.core.persistence import stable_dumps
+
+PROTOCOL_VERSION = 1
+
+# kind -> message class; the round-trip test walks this registry, so a
+# message type that forgets to register cannot ship untested
+MESSAGE_TYPES: Dict[str, Type["Message"]] = {}
+
+
+class ProtocolError(ValueError):
+    """Malformed, unknown, or version-incompatible wire message."""
+
+
+def message(kind: str):
+    """Class decorator: freeze, register, and stamp the wire kind."""
+    def wrap(cls):
+        cls = dataclasses.dataclass(frozen=True)(cls)
+        cls.wire_kind = kind
+        if kind in MESSAGE_TYPES:
+            raise ValueError(f"duplicate message kind {kind!r}")
+        MESSAGE_TYPES[kind] = cls
+        return cls
+    return wrap
+
+
+class Message:
+    """Base for wire messages (dataclass mixin; subclasses set fields)."""
+    wire_kind = ""
+
+
+def _lower(v: Any) -> Any:
+    """Dataclass/tuple values lower to JSON-able structures.  Non-finite
+    floats are JSON-illegal; encode them as tagged strings so inf ETAs
+    (a drained site's rejoin time) survive the wire."""
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return {f.name: _lower(getattr(v, f.name))
+                for f in dataclasses.fields(v)}
+    if isinstance(v, (list, tuple)):
+        return [_lower(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _lower(x) for k, x in v.items()}
+    if isinstance(v, float) and not math.isfinite(v):
+        return {"__f": repr(v)}
+    return v
+
+
+def encode(msg: Message) -> Dict[str, Any]:
+    """Lower a message to its wire dict: ``{"v": 1, "type": kind, ...}``."""
+    if type(msg) is not MESSAGE_TYPES.get(msg.wire_kind):
+        raise ProtocolError(f"not a registered message: {msg!r}")
+    d = {"v": PROTOCOL_VERSION, "type": msg.wire_kind}
+    for f in dataclasses.fields(msg):
+        d[f.name] = _lower(getattr(msg, f.name))
+    return d
+
+
+def dumps(msg: Message) -> str:
+    """Canonical wire bytes (sans framing) for one message."""
+    return stable_dumps(encode(msg))
+
+
+_NONFIN = {"inf": math.inf, "-inf": -math.inf, "nan": math.nan}
+
+
+def _raise(v: Any, hint: Any) -> Any:
+    """Raise a wire value back toward the annotated field type."""
+    if isinstance(v, dict) and set(v) == {"__f"}:
+        try:
+            return _NONFIN[v["__f"]]
+        except KeyError:
+            raise ProtocolError(f"bad non-finite float tag {v!r}")
+    origin = typing.get_origin(hint)
+    if origin is typing.Union:                  # Optional[X] and friends
+        if v is None:
+            return None
+        args = [a for a in typing.get_args(hint) if a is not type(None)]
+        return _raise(v, args[0]) if len(args) == 1 else v
+    if origin in (tuple, list) and isinstance(v, list):
+        args = typing.get_args(hint)
+        inner = args[0] if args else Any
+        seq = [_raise(x, inner) for x in v]
+        return tuple(seq) if origin is tuple else seq
+    if origin is dict and isinstance(v, dict):
+        args = typing.get_args(hint)
+        inner = args[1] if len(args) == 2 else Any
+        return {k: _raise(x, inner) for k, x in v.items()}
+    if hint is float and isinstance(v, int) and not isinstance(v, bool):
+        # JSON can't tell 2.0 from 2 — but the byte-identity invariant
+        # needs it to: keep what the wire carried
+        return v
+    if dataclasses.is_dataclass(hint) and isinstance(v, dict):
+        hints = typing.get_type_hints(hint)
+        kw = {}
+        for f in dataclasses.fields(hint):
+            if f.name in v:
+                kw[f.name] = _raise(v[f.name], hints.get(f.name, Any))
+        try:
+            return hint(**kw)
+        except TypeError as e:
+            raise ProtocolError(f"bad {hint.__name__} payload: {e}")
+    return v
+
+
+def parse(d: Dict[str, Any]) -> Message:
+    """Raise a wire dict back to its typed message.
+
+    Rejects — with a clear error — a payload that is not a dict, lacks
+    ``v``/``type``, carries an unknown or non-integer version, an
+    unknown kind, unexpected fields, or misses required ones."""
+    if not isinstance(d, dict):
+        raise ProtocolError(f"wire message must be a dict, got "
+                            f"{type(d).__name__}")
+    if "v" not in d:
+        raise ProtocolError("wire message missing protocol version 'v'")
+    v = d["v"]
+    if not isinstance(v, int) or isinstance(v, bool):
+        raise ProtocolError(f"protocol version must be an int, got {v!r}")
+    if v != PROTOCOL_VERSION:
+        raise ProtocolError(f"unsupported protocol version {v} "
+                            f"(this build speaks {PROTOCOL_VERSION})")
+    kind = d.get("type")
+    cls = MESSAGE_TYPES.get(kind)
+    if cls is None:
+        raise ProtocolError(f"unknown message type {kind!r}")
+    hints = typing.get_type_hints(cls)
+    kw = {}
+    for f in dataclasses.fields(cls):
+        if f.name in d:
+            kw[f.name] = _raise(d[f.name], hints.get(f.name, Any))
+        elif (f.default is dataclasses.MISSING
+              and f.default_factory is dataclasses.MISSING):
+            raise ProtocolError(f"{kind}: missing required field "
+                                f"{f.name!r}")
+    extra = set(d) - {"v", "type"} - {f.name for f in dataclasses.fields(cls)}
+    if extra:
+        raise ProtocolError(f"{kind}: unexpected fields {sorted(extra)}")
+    try:
+        return cls(**kw)
+    except (TypeError, ValueError) as e:
+        raise ProtocolError(f"{kind}: bad payload: {e}")
+
+
+def loads(s: str) -> Message:
+    try:
+        d = json.loads(s)
+    except json.JSONDecodeError as e:
+        raise ProtocolError(f"undecodable wire bytes: {e}")
+    return parse(d)
+
+
+# ---------------------------------------------------------------------------
+# wire structs (payload fragments shared by several messages)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireBid:
+    """One sealed bid as it crosses the wire (mirrors ``economy.Bid``)."""
+    resource: str
+    chip_hour_price: float
+    available_slots: int
+    est_rate: float
+    valid_until: float
+    resale_rid: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireReservation:
+    """An awarded reservation (mirrors ``economy.Reservation``)."""
+    resource: str
+    user: str
+    start: float
+    end: float
+    locked_price: float
+    reservation_id: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static resource attributes mirrored to brokers at sync time."""
+    name: str
+    site: str
+    department: str = ""
+    chips: int = 8
+    peak_flops_per_chip: float = 197e12
+    perf_factor: float = 1.0
+    slots: int = 1
+    base_price: float = 1.0
+    peak_multiplier: float = 2.0
+    mtbf_hours: float = 400.0
+    mttr_hours: float = 1.0
+    closed: bool = False
+    authorized_users: Tuple[str, ...] = ()
+    stage_bw: float = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class WireGISEntry:
+    """One GIS answer row (mirrors ``gis.GISEntry`` over the wire)."""
+    name: str
+    site: str
+    department: str
+    enterprise: str
+    chips: int
+    advertised_price: float
+    last_heartbeat: float
+    suspected: bool
+
+
+# ---------------------------------------------------------------------------
+# quote solicitation and sealed bids
+# ---------------------------------------------------------------------------
+
+@message("quote_request")
+class QuoteRequest(Message):
+    """Spot quote for one resource (``TradeServer.quote``); ``forward``
+    asks for the posted no-demand-premium schedule instead."""
+    resource: str
+    t: float
+    user: str = ""
+    forward: bool = False
+
+
+@message("price_reply")
+class PriceReply(Message):
+    price: float
+    book_version: int = 0
+
+
+@message("solicit_request")
+class SolicitRequest(Message):
+    """Open-market tender.  The broker's ``est_job_seconds`` callable
+    cannot cross a process boundary, so the proxy evaluates it against
+    its spec mirror and ships the per-resource estimates."""
+    t: float
+    user: str
+    est_seconds: Dict[str, float]
+    default_est: float = 3600.0
+
+
+@message("bids_reply")
+class BidsReply(Message):
+    bids: Tuple[WireBid, ...]
+    book_version: int = 0
+
+
+# -- contract award ----------------------------------------------------
+
+@message("reserve_request")
+class ReserveRequest(Message):
+    """Award one price-locked advance reservation.  ``request_id`` makes
+    the award idempotent across crash/replay: a domain that already
+    journaled this id returns the recorded reservation instead of
+    double-booking the window."""
+    request_id: str
+    resource: str
+    user: str
+    start: float
+    end: float
+    t: float
+    locked_price: Optional[float] = None
+
+
+@message("reserve_reply")
+class ReserveReply(Message):
+    ok: bool
+    reservation: Optional[WireReservation] = None
+    error: str = ""
+    book_version: int = 0
+
+
+@message("cancel_request")
+class CancelRequest(Message):
+    reservation_id: int
+
+
+@message("find_request")
+class FindRequest(Message):
+    """Locate one reservation by federation-unique id (the secondary
+    market's locate path over the wire).  Answered with ReserveReply:
+    ``ok=False`` when the id is not on this domain's book."""
+    reservation_id: int
+
+
+@message("ok_reply")
+class OkReply(Message):
+    ok: bool
+    book_version: int = 0
+
+
+# -- reservation transfer (secondary market) ---------------------------
+
+@message("transfer_request")
+class TransferRequest(Message):
+    """Resale fill: the reservation changes hands, not shape."""
+    reservation_id: int
+    buyer: str
+    t: float
+
+
+@message("transfer_reply")
+class TransferReply(Message):
+    ok: bool
+    reservation: Optional[WireReservation] = None
+    error: str = ""
+    book_version: int = 0
+
+
+# -- book reads ---------------------------------------------------------
+
+@message("book_request")
+class BookRequest(Message):
+    """One routed book read: ``op`` picks the TradeServer method."""
+    op: str                     # reserved_price|reserved_price_list|...
+    resource: str
+    user: str
+    t: float
+    # honored_price extras
+    sealed_price: float = 0.0
+    sealed_at: float = 0.0
+    # reservable_slots window
+    start: float = 0.0
+    end: float = 0.0
+
+
+@message("book_reply")
+class BookReply(Message):
+    prices: Tuple[float, ...] = ()
+    price: Optional[float] = None
+    slots: int = 0
+    book_version: int = 0
+
+
+@message("status_request")
+class StatusRequest(Message):
+    """Domain ground truth for one resource (liveness + occupancy)."""
+    resource: str
+
+
+@message("status_reply")
+class StatusReply(Message):
+    up: bool
+    running: int
+    queued: int = 0
+    version: int = 0
+
+
+@message("sync_request")
+class SyncRequest(Message):
+    """Connect-time mirror fetch: the domain's spec slice and stamps."""
+    user: str = ""
+
+
+@message("sync_reply")
+class SyncReply(Message):
+    site: str
+    specs: Tuple[WireSpec, ...]
+    bid_validity: float
+    book_version: int = 0
+    membership_version: int = 0
+    # where the domain's reservation-id counter stands: the broker-side
+    # proxy mirrors it so federation restriding reproduces the direct
+    # arithmetic exactly (including after a crash-replay)
+    next_rid: int = 1
+    rid_step: int = 1
+
+
+@message("restride_request")
+class RestrideRequest(Message):
+    """Federation rid striding made explicit: the coordinator assigns
+    each domain its residue class so reservation ids stay unique
+    grid-wide (``TradeFederation._restride`` over the wire)."""
+    next_rid: int
+    rid_step: int
+
+
+# ---------------------------------------------------------------------------
+# GIS: register / heartbeat / query
+# ---------------------------------------------------------------------------
+
+@message("gis_register")
+class GISRegister(Message):
+    spec: WireSpec
+    t: float
+
+
+@message("gis_deregister")
+class GISDeregister(Message):
+    name: str
+    t: float
+
+
+@message("gis_heartbeat")
+class GISHeartbeat(Message):
+    """One liveness beat; ``advertised_price`` rides along exactly as
+    the in-process GIS refreshes it from ``price_fn``."""
+    name: str
+    t: float
+    advertised_price: float = 0.0
+
+
+@message("gis_pump")
+class GISPump(Message):
+    """Pump every live resource's heartbeat at ``t`` (domain-local)."""
+    t: float
+
+
+@message("gis_query")
+class GISQuery(Message):
+    t: float
+    user: str = ""
+    level: str = "global"
+    within: Optional[str] = None
+    min_chips: int = 0
+    max_price: float = math.inf
+    include_suspected: bool = False
+
+
+@message("gis_query_reply")
+class GISQueryReply(Message):
+    entries: Tuple[WireGISEntry, ...]
+    version: int = 0
+
+
+# ---------------------------------------------------------------------------
+# GridBank settlement
+# ---------------------------------------------------------------------------
+
+@message("settle_request")
+class SettleRequest(Message):
+    """One bank entry, pushed to the owning domain's ledger.
+    ``settlement_id`` is the exactly-once key: a replayed or retried
+    settlement must never double-book revenue."""
+    settlement_id: str
+    t: float
+    user: str
+    owner: str
+    resource: str
+    amount: float
+    kind: str = "settle"
+
+
+@message("settle_reply")
+class SettleReply(Message):
+    ok: bool
+    duplicate: bool = False
+    error: str = ""
+
+
+@message("revenue_request")
+class RevenueRequest(Message):
+    """Audit read: the domain's recorded revenue ledger, for exact
+    (bit-for-bit) reconciliation against the broker-side GridBank."""
+    owner: str = ""
+
+
+@message("revenue_reply")
+class RevenueReply(Message):
+    # (settlement_id, user, resource, amount, kind, t) rows, in journal
+    # order — reconciliation compares these exactly, never a float sum
+    entries: Tuple[Tuple[str, str, str, float, str, float], ...]
+
+
+@message("error_reply")
+class ErrorReply(Message):
+    """Remote exception surfaced to the caller.  ``admission=True``
+    re-raises as ``AdmissionError`` so broker code that negotiates
+    against a local server keeps its except clauses unchanged."""
+    error: str
+    admission: bool = False
+
+
+@message("shutdown_request")
+class ShutdownRequest(Message):
+    """Orderly domain shutdown (flush journal, close listener)."""
+    reason: str = ""
+
+
+def example_messages() -> List[Message]:
+    """One well-formed instance of every registered type — the seed
+    corpus for round-trip tests (hypothesis fuzzes beyond these)."""
+    spec = WireSpec(name="anl-000", site="ANL")
+    return [
+        QuoteRequest(resource="anl-000", t=120.0, user="u0"),
+        PriceReply(price=1.25, book_version=3),
+        SolicitRequest(t=60.0, user="u0", est_seconds={"anl-000": 1800.0}),
+        BidsReply(bids=(WireBid("anl-000", 1.5, 1, 2.0, 3660.0),)),
+        ReserveRequest(request_id="u0:c1:0", resource="anl-000", user="u0",
+                       start=0.0, end=3600.0, t=0.0, locked_price=1.1),
+        ReserveReply(ok=True, reservation=WireReservation(
+            "anl-000", "u0", 0.0, 3600.0, 1.1, 7)),
+        CancelRequest(reservation_id=7),
+        FindRequest(reservation_id=7),
+        OkReply(ok=True),
+        TransferRequest(reservation_id=7, buyer="u1", t=10.0),
+        TransferReply(ok=True, reservation=WireReservation(
+            "anl-000", "u1", 0.0, 3600.0, 1.1, 7)),
+        BookRequest(op="reserved_price", resource="anl-000", user="u0",
+                    t=5.0),
+        BookReply(prices=(1.1,), price=1.1, slots=1),
+        StatusRequest(resource="anl-000"),
+        StatusReply(up=True, running=1, queued=0, version=4),
+        SyncRequest(user="u0"),
+        SyncReply(site="ANL", specs=(spec,), bid_validity=3600.0),
+        RestrideRequest(next_rid=11, rid_step=4),
+        GISRegister(spec=spec, t=0.0),
+        GISDeregister(name="anl-000", t=9.0),
+        GISHeartbeat(name="anl-000", t=300.0, advertised_price=1.2),
+        GISPump(t=300.0),
+        GISQuery(t=600.0, user="u0", max_price=math.inf),
+        GISQueryReply(entries=(WireGISEntry(
+            "anl-000", "ANL", "ANL/d0", "ANL", 8, 1.2, 300.0, False),)),
+        SettleRequest(settlement_id="u0:j00001:1", t=1800.0, user="u0",
+                      owner="ANL", resource="anl-000", amount=2.5),
+        SettleReply(ok=True),
+        RevenueRequest(owner="ANL"),
+        RevenueReply(entries=(("u0:j00001:1", "u0", "anl-000", 2.5,
+                               "settle", 1800.0),)),
+        ErrorReply(error="window full", admission=True),
+        ShutdownRequest(reason="test"),
+    ]

@@ -73,6 +73,11 @@ class QuoteBoard:
         ``trade`` is not a stampable server/federation."""
         if np is None:
             return None
+        # wire federations quote through protocol messages; the batched
+        # board reads schedules/status objects directly, which do not
+        # exist broker-side across a process boundary
+        if not getattr(trade, "supports_board", True):
+            return None
         board = getattr(trade, "_board", None)
         if board is not None:
             return board

@@ -102,6 +102,24 @@ class ResourceView:
         self.suspected = False
 
 
+def views_from_gis(snapshot, est_seconds_base: float
+                   ) -> Dict[str, "ResourceView"]:
+    """Build the scheduler's resource views from a GIS snapshot — the
+    discovery-first path a broker on the wire grid uses (it holds no
+    directory, only what the information service answered).  Suspected
+    entries carry their flag through, so the advisor deprioritizes them
+    exactly as it does on the in-process grid."""
+    views: Dict[str, ResourceView] = {}
+    for name, e in sorted(snapshot.entries.items()):
+        views[name] = ResourceView(
+            spec=e.spec,
+            est_job_seconds=est_seconds_base / max(e.spec.perf_factor,
+                                                   1e-6),
+            suspected=e.suspected,
+            last_seen=snapshot.taken_at)
+    return views
+
+
 @dataclasses.dataclass
 class AllocationDecision:
     allocate: List[str]

@@ -247,9 +247,12 @@ class SecondaryMarket:
         run per re-plan / per watch sample, not per quote — the broker
         hot path never comes through here."""
         for site, server in self.federation.servers.items():
-            for r in server.reservations:
-                if r.reservation_id == reservation_id:
-                    return site, server, r
+            # the find_reservation seam lets a wire-proxy server answer
+            # by id without shipping its whole reservation book; plain
+            # TradeServers implement it as the same linear scan
+            r = server.find_reservation(reservation_id)
+            if r is not None:
+                return site, server, r
         return None
 
     # -- seller side ---------------------------------------------------
@@ -442,7 +445,7 @@ class SecondaryMarket:
             server = self.federation.servers.get(listing.site)
             if server is None:
                 continue            # departed: kept dormant until rejoin
-            if not any(r.reservation_id == rid for r in server.reservations):
+            if server.find_reservation(rid) is None:
                 del self.listings[rid]
                 self.version += 1
         return fees

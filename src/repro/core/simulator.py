@@ -13,8 +13,9 @@ import heapq
 import itertools
 import math
 import random
+import time as _time
 from bisect import insort
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.resources import ResourceDirectory, ResourceSpec
 
@@ -292,6 +293,126 @@ class Simulator:
         """Live (non-cancelled) entries still scheduled.  The dead
         tally is exact (``Timer._q``), so this is O(1)."""
         return self._size - self._dead
+
+
+class WallClockSimulator(Simulator):
+    """Deployment mode: the same calendar queue, but events fire at
+    their virtual deadline in *real* time.
+
+    The paper's system is not a simulation — brokers, trade servers and
+    the GIS run as long-lived services.  This clock is the bridge: any
+    driver written against ``Simulator`` (heartbeat pumps, clearing
+    rounds, broker ticks) deploys unchanged by swapping the clock.
+    ``time_scale`` is sim-seconds per wall-second (3600 = an hour of
+    market time per second — demo speed; 1.0 = true real time).  Event
+    *order* is identical to the virtual clock's (same (t, seq) heap
+    order); only the pacing differs, so a wall-clock run exercises
+    exactly the code paths a simulated one validated."""
+
+    def __init__(self, start: float = 0.0, *, time_scale: float = 1.0,
+                 sleep: Callable[[float], None] = _time.sleep,
+                 wall: Callable[[], float] = _time.monotonic, **kw):
+        if time_scale <= 0:
+            raise ValueError("time_scale must be positive")
+        super().__init__(start, **kw)
+        self.time_scale = time_scale
+        self._sleep = sleep
+        self._wall = wall
+
+    def run(self, until: float = math.inf, max_events: int = 10_000_000
+            ) -> None:
+        anchor_wall = self._wall()
+        anchor_sim = self._t
+        n = 0
+        while not self.stopped:
+            entry = self._peek()
+            if entry is None:
+                break
+            t = entry[0]
+            if t > until:
+                break
+            # sleep off the real-time gap to the deadline; a late event
+            # (callback overran) fires immediately — no catch-up skips,
+            # the schedule just runs behind like any real service would
+            lag = (t - anchor_sim) / self.time_scale \
+                - (self._wall() - anchor_wall)
+            if lag > 0:
+                self._sleep(lag)
+            self._consume(entry)
+            self._t = t
+            entry[2]()
+            n += 1
+            self.events += 1
+            if n >= max_events:
+                raise RuntimeError("simulator event budget exceeded "
+                                   "(runaway loop?)")
+        if not self.stopped:
+            entry = self._peek()
+            self._t = max(self._t, min(until, self._t if entry is None
+                                       else entry[0]))
+
+
+class ConservativeClock:
+    """Conservative distributed-simulation clock: per-link lookahead and
+    lower-bound time stamps (LBTS), for sharding one deterministic
+    simulation across domain processes.
+
+    Each *link* is a message source (a domain process, the broker).
+    ``lookahead(link)`` is the promise "no message from this link will
+    ever carry a timestamp earlier than its clock + lookahead" — in this
+    grid, a domain's lookahead is its minimum network/handling latency
+    (heartbeat interval for the GIS link, dispatch latency for brokers).
+    A shard may safely simulate up to ``lbts(exclude=itself)``: the
+    earliest instant any *other* link could still inject an event.
+    All-links-blocked deadlock is the classic conservative failure mode;
+    ``grant`` detects a stalled horizon so drivers can exchange null
+    messages (advance their clocks with nothing to say)."""
+
+    def __init__(self):
+        self._clock: Dict[str, float] = {}
+        self._lookahead: Dict[str, float] = {}
+
+    def add_link(self, name: str, lookahead: float,
+                 start: float = 0.0) -> None:
+        if lookahead < 0:
+            raise ValueError("lookahead must be >= 0")
+        if name in self._clock:
+            raise ValueError(f"link {name!r} already registered")
+        self._clock[name] = start
+        self._lookahead[name] = lookahead
+
+    def remove_link(self, name: str) -> None:
+        self._clock.pop(name, None)
+        self._lookahead.pop(name, None)
+
+    def links(self) -> List[str]:
+        return sorted(self._clock)
+
+    def advance(self, name: str, t: float) -> None:
+        """Link ``name`` promises it will send nothing stamped < t +
+        lookahead.  Clocks only move forward — a regressing promise
+        would un-commit events other shards already fired."""
+        cur = self._clock[name]
+        if t < cur - 1e-9:
+            raise ValueError(
+                f"link {name!r} clock moving backwards: {t} < {cur}")
+        self._clock[name] = max(cur, t)
+
+    def lbts(self, exclude: Optional[str] = None) -> float:
+        """Lower bound on the timestamp of any future message from the
+        considered links (all of them, or all but ``exclude``)."""
+        bounds = [self._clock[n] + self._lookahead[n]
+                  for n in self._clock if n != exclude]
+        return min(bounds) if bounds else math.inf
+
+    def grant(self, name: str) -> float:
+        """The horizon shard ``name`` may simulate to right now.  Equal
+        to its own clock means the shard is blocked — the driver should
+        have the laggard links send null messages."""
+        return self.lbts(exclude=name)
+
+    def blocked(self, name: str) -> bool:
+        return self.grant(name) <= self._clock.get(name, 0.0) + 1e-12
 
 
 class FailureProcess:

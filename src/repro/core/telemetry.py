@@ -349,10 +349,16 @@ class Tracer:
     check.
     """
 
-    def __init__(self, ring: int = DEFAULT_RING):
+    def __init__(self, ring: int = DEFAULT_RING, domain: str = ""):
         if ring <= 0:
             raise ValueError("ring capacity must be positive")
         self.ring = ring
+        # originating administrative domain: in a sharded run each
+        # process tags every event it records with its domain, so merged
+        # traces say WHERE an event happened, not just when.  Empty (the
+        # default, every single-process run) adds nothing — the exported
+        # bytes stay identical to an untagged tracer's
+        self.domain = domain
         self.metrics = MetricsRegistry()
         self._rings: Dict[str, collections.deque] = {}
         self.dropped: Dict[str, int] = {}
@@ -449,6 +455,8 @@ class Tracer:
     # constructor measurably move the bench_telemetry gate
     def _record(self, t: float, track: str, cat: str, name: str, ph: str,
                 span: str, args: Dict[str, Any]) -> None:
+        if self.domain:
+            args = {**(args or {}), "domain": self.domain}
         ring = self._rings.get(cat)
         if ring is None:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
@@ -464,6 +472,8 @@ class Tracer:
                    span: str, **args: Any) -> None:
         """Open an async span (``span`` is the id matching the end —
         async, so one track can carry many overlapping jobs)."""
+        if self.domain:
+            args["domain"] = self.domain
         ring = self._rings.get(cat)
         if ring is None:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
@@ -477,6 +487,8 @@ class Tracer:
 
     def span_end(self, t: float, track: str, cat: str, name: str,
                  span: str, **args: Any) -> None:
+        if self.domain:
+            args["domain"] = self.domain
         ring = self._rings.get(cat)
         if ring is None:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
@@ -490,6 +502,8 @@ class Tracer:
 
     def instant(self, t: float, track: str, cat: str, name: str,
                 **args: Any) -> None:
+        if self.domain:
+            args["domain"] = self.domain
         ring = self._rings.get(cat)
         if ring is None:
             ring = self._rings[cat] = collections.deque(maxlen=self.ring)
@@ -510,8 +524,10 @@ class Tracer:
                 maxlen=self.ring)
         elif len(ring) == self.ring:
             self.dropped["metric"] = self.dropped.get("metric", 0) + 1
-        ev = (self._seq, t, track, "metric", name, "C", "",
-              {"value": value})
+        args = {"value": value}
+        if self.domain:
+            args["domain"] = self.domain
+        ev = (self._seq, t, track, "metric", name, "C", "", args)
         ring.append(ev)
         self._seq += 1
         if self._have_subs:

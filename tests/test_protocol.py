@@ -1,0 +1,206 @@
+"""Wire-protocol round-trips: every registered message type must cross
+``encode -> stable_dumps -> parse`` byte-identically, and malformed or
+mis-versioned payloads must be rejected with a clear error.
+
+The registry-driven tests always run; with ``hypothesis`` installed
+(CI), fuzzed payloads stress the same contract far beyond the seed
+corpus.
+"""
+import dataclasses
+import json
+import math
+import typing
+
+import pytest
+
+from repro.core import protocol as P
+from repro.core.persistence import stable_dumps
+
+
+# ---------------------------------------------------------------------------
+# registry-driven round-trips (always run)
+# ---------------------------------------------------------------------------
+
+def test_every_registered_type_has_an_example():
+    kinds = {m.wire_kind for m in P.example_messages()}
+    assert kinds == set(P.MESSAGE_TYPES)
+
+
+@pytest.mark.parametrize("msg", P.example_messages(),
+                         ids=lambda m: m.wire_kind)
+def test_example_round_trips_byte_identically(msg):
+    wire = P.dumps(msg)
+    back = P.loads(wire)
+    assert back == msg
+    # byte-identical: re-encoding the parsed message reproduces the
+    # exact wire string (the property loopback golden-equivalence needs)
+    assert P.dumps(back) == wire
+
+
+@pytest.mark.parametrize("msg", P.example_messages(),
+                         ids=lambda m: m.wire_kind)
+def test_wire_form_is_canonical_json(msg):
+    wire = P.dumps(msg)
+    d = json.loads(wire)
+    assert d["v"] == P.PROTOCOL_VERSION
+    assert d["type"] == msg.wire_kind
+    assert wire == stable_dumps(d)      # sorted keys, shortest floats
+
+
+def test_nonfinite_floats_survive():
+    q = P.GISQuery(t=0.0, max_price=math.inf)
+    assert P.loads(P.dumps(q)) == q
+    q2 = P.GISQuery(t=0.0, max_price=-math.inf)
+    assert P.loads(P.dumps(q2)) == q2
+
+
+def test_float_fields_keep_int_values_intact():
+    # JSON can't tell 2 from 2.0 — the decoder must not coerce and
+    # re-encode 2 as 2.0 (that would break byte-identity)
+    msg = P.QuoteRequest(resource="r", t=2, user="u")
+    assert P.dumps(P.loads(P.dumps(msg))) == P.dumps(msg)
+
+
+# ---------------------------------------------------------------------------
+# rejection: version and shape errors must be loud and specific
+# ---------------------------------------------------------------------------
+
+def _wire_dict(msg):
+    return json.loads(P.dumps(msg))
+
+
+def test_rejects_unknown_version():
+    d = _wire_dict(P.OkReply(ok=True))
+    d["v"] = P.PROTOCOL_VERSION + 1
+    with pytest.raises(P.ProtocolError, match="version"):
+        P.parse(d)
+
+
+def test_rejects_missing_version():
+    d = _wire_dict(P.OkReply(ok=True))
+    del d["v"]
+    with pytest.raises(P.ProtocolError, match="version"):
+        P.parse(d)
+
+
+def test_rejects_malformed_version_field():
+    d = _wire_dict(P.OkReply(ok=True))
+    for bad in ("1", 1.5, None, [1], True):
+        d["v"] = bad
+        with pytest.raises(P.ProtocolError, match="version"):
+            P.parse(d)
+
+
+def test_rejects_unknown_message_kind():
+    d = _wire_dict(P.OkReply(ok=True))
+    d["type"] = "no_such_message"
+    with pytest.raises(P.ProtocolError, match="no_such_message"):
+        P.parse(d)
+
+
+def test_rejects_missing_required_field():
+    d = _wire_dict(P.QuoteRequest(resource="r", t=0.0))
+    del d["resource"]
+    with pytest.raises(P.ProtocolError, match="resource"):
+        P.parse(d)
+
+
+def test_rejects_unexpected_extra_field():
+    d = _wire_dict(P.QuoteRequest(resource="r", t=0.0))
+    d["bogus"] = 1
+    with pytest.raises(P.ProtocolError, match="bogus"):
+        P.parse(d)
+
+
+def test_rejects_non_dict_payload():
+    for bad in ("[]", "3", '"quote_request"'):
+        with pytest.raises(P.ProtocolError):
+            P.loads(bad)
+    with pytest.raises(P.ProtocolError):
+        P.loads("not json at all")
+
+
+def test_encode_rejects_unregistered_object():
+    class NotAMessage:
+        wire_kind = "fake"
+    with pytest.raises(P.ProtocolError):
+        P.dumps(NotAMessage())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (CI only — the local container has no hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # pragma: no cover - CI has it
+    given = None
+
+if given is None:
+    def test_hypothesis_available_in_ci():
+        pytest.skip("hypothesis not installed; fuzz tests run in CI")
+else:
+    _text = st.text(min_size=0, max_size=30)
+    _floats = st.one_of(
+        st.floats(allow_nan=False, allow_infinity=True, width=64),
+        st.integers(min_value=-10**9, max_value=10**9))
+    _ints = st.integers(min_value=-10**9, max_value=10**9)
+
+    def _strategy_for(hint):
+        origin = typing.get_origin(hint)
+        if hint is str:
+            return _text
+        if hint is float:
+            return _floats
+        if hint is int:
+            return _ints
+        if hint is bool:
+            return st.booleans()
+        if origin is typing.Union:      # Optional[...]
+            args = [a for a in typing.get_args(hint)
+                    if a is not type(None)]
+            return st.one_of(st.none(), _strategy_for(args[0]))
+        if origin in (tuple, typing.Tuple):
+            args = typing.get_args(hint)
+            if len(args) == 2 and args[1] is Ellipsis:
+                return st.lists(_strategy_for(args[0]),
+                                max_size=4).map(tuple)
+            return st.tuples(*[_strategy_for(a) for a in args])
+        if origin in (dict, typing.Dict):
+            k, v = typing.get_args(hint)
+            return st.dictionaries(_strategy_for(k), _strategy_for(v),
+                                   max_size=4)
+        if dataclasses.is_dataclass(hint):
+            hints = typing.get_type_hints(hint)
+            return st.builds(hint, **{f.name: _strategy_for(hints[f.name])
+                                      for f in dataclasses.fields(hint)})
+        raise AssertionError(f"no strategy for {hint!r}")
+
+    def _message_strategy():
+        choices = []
+        for cls in P.MESSAGE_TYPES.values():
+            hints = typing.get_type_hints(cls)
+            choices.append(st.builds(
+                cls, **{f.name: _strategy_for(hints[f.name])
+                        for f in dataclasses.fields(cls)}))
+        return st.one_of(choices)
+
+    @given(msg=_message_strategy())
+    @settings(max_examples=300, deadline=None)
+    def test_fuzzed_messages_round_trip_byte_identically(msg):
+        wire = P.dumps(msg)
+        back = P.loads(wire)
+        assert back == msg
+        assert P.dumps(back) == wire
+
+    @given(junk=st.dictionaries(
+        st.text(max_size=10),
+        st.one_of(st.integers(), st.text(max_size=10)),
+        max_size=5))
+    @settings(max_examples=200, deadline=None)
+    def test_fuzzed_junk_dicts_never_crash_unhandled(junk):
+        try:
+            P.parse(junk)
+        except P.ProtocolError:
+            pass                        # the only acceptable failure mode
